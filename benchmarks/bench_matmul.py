@@ -1,0 +1,49 @@
+"""MX-weight matmul vs f32 matmul: wall time (CPU; kernel correctness path)
+and the weight-byte reduction that drives the TPU memory-roofline win."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mx_quantize
+from repro.core.formats import get_format
+from repro.kernels.ref import mx_matmul_2d_ref
+
+M, K, N = 256, 2048, 2048
+REPS = 10
+
+
+def _time(fn, *args) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / REPS * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+    rows = []
+    base = _time(jax.jit(lambda x, y: x @ y), a, w)
+    rows.append(("matmul_f32_base", base, f"{2*M*K*N/base/1e3:.1f}GFLOP/s"))
+    for fmt in ("e4m3", "int8", "e2m1"):
+        mx = mx_quantize(w, fmt=fmt, mode="ocp", axis=0)
+        fn = jax.jit(lambda x, c, s, f=fmt:
+                     mx_matmul_2d_ref(x, c, s, fmt=f, mode="ocp"))
+        us = _time(fn, a, mx.codes, mx.scales)
+        f = get_format(fmt)
+        wr = 32 / f.bits_per_element()
+        rows.append((f"matmul_mx_{fmt}", us,
+                     f"weightbytes/4={wr:.2f}x_smaller_vs_f32"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, d in run():
+        print(f"{name},{us:.1f},{d}")

@@ -1,0 +1,30 @@
+"""Roofline summary from the dry-run artifacts (see launch/dryrun.py)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.launch.report import load_artifacts
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for a in load_artifacts():
+        if a.get("status") != "ok" or "roofline" not in a:
+            continue
+        if a.get("mesh") != "single":
+            continue
+        t = a["roofline"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / step_s if step_s else 0.0
+        rows.append((
+            f"roofline_{a['arch']}_{a['shape']}_{a['variant']}",
+            step_s * 1e6,
+            f"dom={t['dominant'].replace('_s','')};"
+            f"compute_frac={frac:.3f};"
+            f"modelHLO={a.get('model_vs_hlo_flops', 0) or 0:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, d in run():
+        print(f"{name},{us:.1f},{d}")

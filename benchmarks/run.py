@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Wall times are CPU-container
+numbers (correctness path); the TPU performance story lives in the roofline
+artifacts (EXPERIMENTS.md §Roofline / §Perf).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_collective, bench_convert, bench_matmul,
+                            bench_quant_error, bench_roofline)
+    mods = {
+        "convert (Table VIII analog)": bench_convert,
+        "quant error (Tables III-VII analog)": bench_quant_error,
+        "mx matmul": bench_matmul,
+        "grad collective compression": bench_collective,
+        "roofline (dry-run artifacts)": bench_roofline,
+    }
+    print("name,us_per_call,derived")
+    for title, mod in mods.items():
+        print(f"# --- {title} ---")
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:     # keep the harness green per-module
+            print(f"# {title} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

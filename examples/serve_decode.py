@@ -1,0 +1,39 @@
+"""Serving example: batched greedy decoding with an MX-INT8 KV cache
+(2x smaller than bf16; the decode-roofline lever from the paper's format).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.models import Model, load_reduced, make_concrete_batch
+from repro.models.config import MXPolicy
+from repro.serve import GenerationConfig, ServeEngine
+
+B, PROMPT, NEW = 4, 48, 24
+
+
+def main() -> None:
+    for label, over in [
+        ("bf16 KV cache", {}),
+        ("MX-INT8 KV cache",
+         {"mx": MXPolicy(mode="ocp", kv_cache=True, kv_fmt="int8")}),
+    ]:
+        cfg = load_reduced("yi_34b", **over)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_concrete_batch(cfg, B, PROMPT)
+        batch.pop("labels")
+        eng = ServeEngine(model, params, max_len=PROMPT + NEW + 8)
+        out = eng.generate(batch, GenerationConfig(max_new_tokens=NEW))
+        cache = jax.eval_shape(lambda: model.init_cache(B, PROMPT + NEW))
+        nbytes = sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(cache))
+        print(f"[{label}] cache={nbytes/1e6:.2f}MB  "
+              f"first tokens={out[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    latest_step, restore, save_atomic, gc_old,
+)

@@ -1,0 +1,6 @@
+"""Assigned architecture configs (exact dims from the public literature).
+
+Every config file exports ``CONFIG`` (the full assigned architecture) and
+``reduced()`` (a small same-family config for CPU smoke tests).
+"""
+from repro.models.registry import ARCH_IDS  # noqa: F401

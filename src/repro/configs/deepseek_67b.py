@@ -1,0 +1,19 @@
+"""deepseek-67b [dense] — llama-arch GQA [arXiv:2401.02954].
+
+95L d=8192 64H kv=8 d_ff=22016 vocab=102400.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b", family="decoder",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab=102400, head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=512, head_dim=32, remat=False)

@@ -1,0 +1,22 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 [arXiv:2404.16821].
+
+Backbone only (the brief): 80L d=8192 64H GQA kv=8 d_ff=28672 vocab=128256.
+The ViT frontend is a stub: input_specs feeds 256 precomputed patch
+embeddings as prefix tokens.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="decoder",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=28672,
+    vocab=128256, head_dim=128, rope_theta=1_000_000.0,
+    prefix_len=256, frontend="patch",
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=512, head_dim=32, prefix_len=8, remat=False)

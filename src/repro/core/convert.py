@@ -1,0 +1,431 @@
+"""FP32 -> MX conversion (the paper's three-step algorithm) in pure JAX.
+
+This is the reference, integer-exact realization of the Gorodecky & Sousa
+converter.  Two modes are provided:
+
+``mode="paper"`` — faithful to the paper:
+  * step 1: 5-level comparator tree over biased FP32 exponents; non-finite
+    inputs (exponent 0xFF) are excluded from the max (the ``comp`` module
+    forwards the other operand).
+  * step 2: ``X = EV_max - (2^(K-1) - 1)`` clamped at 0 (the paper's ``div``
+    module); a block containing NaN gets the marker ``X=0xFF``, a block
+    containing +/-Inf (and no NaN) gets ``X=0xFE``.
+  * step 3: element biased exponent ``EK = E - X + bias``; elements below the
+    normal range are FLUSHED TO ZERO (the paper has no subnormals); the
+    mantissa keeps R+1 bits and is rounded to R bits round-to-nearest,
+    TIES-AWAY (paper Tables III-VII); a rounding carry at the top exponent
+    SATURATES to the largest finite value ("no quantization" rows).
+
+  Paper ambiguities resolved here (see DESIGN.md §1):
+  * the underflow test "EK_raw > 2^K" is off by a small constant in the paper;
+    the hardware intent (and the worked example V3/V4) is "below the normal
+    range" => we flush when the pre-round biased exponent is <= 0.
+  * FP32 zeros/subnormals (E == 0) quantize to 0.
+  * INT8 (paper gives no table): sign-magnitude 1.6 fixed point,
+    mag = ties_away(|v| / 2^(X-127) * 64), clamped to 127.
+
+``mode="ocp"`` — OCP MX spec v1.0 semantics (the beyond-paper production
+mode): ``X = EV_max - emax_elem``, full-precision round-to-nearest-EVEN with
+sticky bits, subnormal elements encoded, overflow saturates to max finite,
+INT8 is two's complement.
+
+Both modes share step 1.  All arithmetic is integer bit-manipulation on
+``bitcast(u32)`` views, so the Pallas kernel (repro/kernels/mx_quant.py) can
+be asserted bit-identical against this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core.formats import MXFormat, get_format
+
+Array = jax.Array
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+_U8 = jnp.uint8
+
+MODES = ("paper", "ocp")
+
+
+# =============================================================================
+# MXArray container (pytree)
+# =============================================================================
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MXArray:
+    """A tensor quantized to MX format.
+
+    ``codes``  uint8 — one element code per input value (low bits used for
+               sub-byte formats; see repro/core/pack.py for packed storage).
+    ``scales`` uint8 — E8M0 shared scale, one per block along ``axis``.
+    """
+
+    codes: Array
+    scales: Array
+    fmt: str                 # static
+    mode: str                # static
+    block: int               # static
+    orig_len: int            # static: unpadded length along the block axis
+    axis: int                # static: axis (normalized, >= 0) blocks run along
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.scales), (
+            self.fmt, self.mode, self.block, self.orig_len, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        return cls(codes, scales, *aux)
+
+    @property
+    def format(self) -> MXFormat:
+        return get_format(self.fmt)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        s = list(self.codes.shape)
+        s[self.axis] = self.orig_len
+        return tuple(s)
+
+    @property
+    def nbytes_logical(self) -> float:
+        """Storage cost in bytes under ideal bit-packing (for roofline math)."""
+        n = int(np.prod(self.shape))
+        return n * self.format.bits_per_element() / 8.0
+
+    def dequantize(self) -> Array:
+        return mx_dequantize(self)
+
+
+# =============================================================================
+# Bit-level helpers
+# =============================================================================
+def _f32_fields(x: Array) -> Tuple[Array, Array, Array]:
+    """sign (i32 0/1), biased exponent (i32), 23-bit mantissa (i32)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U32)
+    sign = (bits >> 31).astype(_I32)
+    exp = ((bits >> 23) & _U32(0xFF)).astype(_I32)
+    man = (bits & _U32(0x7FFFFF)).astype(_I32)
+    return sign, exp, man
+
+
+def pow2_f32(e: Array) -> Array:
+    """Exact 2^e as f32 for integer e in [-149, 127], incl. subnormals.
+
+    Split into two in-range halves so each bitcast constructs a normal f32.
+    """
+    e = e.astype(_I32)
+    e1 = jnp.clip(e, -126, 127)
+    e2 = e - e1                                  # residual in [-23, 0]
+    b1 = ((e1 + 127).astype(_U32) << 23)
+    b2 = ((e2 + 127).astype(_U32) << 23)
+    return (jax.lax.bitcast_convert_type(b1, jnp.float32)
+            * jax.lax.bitcast_convert_type(b2, jnp.float32))
+
+
+def scale_to_f32(scales: Array) -> Array:
+    """Decode E8M0 scale codes to f32 (2^(X-127)); X=0 -> 2^-127 subnormal."""
+    return pow2_f32(scales.astype(_I32) - F.SCALE_BIAS)
+
+
+# =============================================================================
+# Step 1 — largest power of two among the block (comparator tree)
+# =============================================================================
+def max_exponent_tree(exp_eff: Array) -> Array:
+    """Pairwise max tree over the trailing (block) axis, exactly mirroring the
+    paper's 5-level ``comp`` tree (for block=32).  Non-finite exclusion is the
+    caller's job (pass exponents already masked to 0)."""
+    x = exp_eff
+    while x.shape[-1] > 1:
+        x = jnp.maximum(x[..., 0::2], x[..., 1::2])
+    return x[..., 0]
+
+
+def block_max_exponent(exp: Array, finite: Array) -> Array:
+    """EV_max per block with non-finite inputs excluded (paper ``comp``)."""
+    exp_eff = jnp.where(finite, exp, 0)
+    return max_exponent_tree(exp_eff)
+
+
+# =============================================================================
+# Step 2 — shared scale X
+# =============================================================================
+def shared_scale(ev_max: Array, fmt: MXFormat, mode: str,
+                 any_nan: Array, any_inf: Array) -> Array:
+    if mode == "paper":
+        sub = fmt.bias            # paper: subtract the element bias
+    else:
+        sub = fmt.emax_ocp        # ocp: subtract the element emax
+    x = jnp.maximum(ev_max - sub, 0)
+    x = jnp.minimum(x, 0xFD if mode == "paper" else 0xFE)
+    if mode == "paper":
+        x = jnp.where(any_inf, F.SCALE_INF, x)
+        x = jnp.where(any_nan, F.SCALE_NAN, x)
+    else:
+        x = jnp.where(any_nan | any_inf, F.SCALE_NAN, x)
+    return x.astype(_U8)
+
+
+# =============================================================================
+# Step 3 — per-element quantization
+# =============================================================================
+def _quant_float_paper(sign: Array, exp: Array, man: Array, xblk: Array,
+                       fmt: MXFormat, sign_erratum: bool = False) -> Array:
+    """Paper-mode EKMR element quantization (integer-exact).
+
+    ``sign_erratum=True`` reproduces the paper's ±E rule bit-exactly: for
+    negative inputs the hardware computes ``EK_raw = X + bias + E`` (worked
+    example V4), which flushes nearly every negative element to -0.  The
+    framework default is the corrected magnitude-based rule (the paper's own
+    Tables III-VII are sign-independent, as is the MX definition [1,2]).
+    """
+    K, R, bias = fmt.ebits, fmt.mbits, fmt.bias
+    eb = exp - xblk.astype(_I32) + bias          # tentative biased elem exp
+    if sign_erratum:
+        # EK_raw = X + bias -+ E ; flush when EK_raw > 2^K (paper text).
+        ek_raw = xblk.astype(_I32) + bias + jnp.where(sign == 1, exp, -exp)
+        eb = jnp.where(ek_raw > (1 << K), -1, eb)   # force the flush branch
+    # round R+1 kept mantissa bits to R, ties-away (Tables III-VII)
+    kept = man >> (23 - (R + 1))                 # R+1 bits
+    rnd = (kept + 1) >> 1
+    carry = rnd >> R
+    mant = jnp.where(carry > 0, 0, rnd) & fmt.mant_mask
+    eb2 = eb + carry
+    # saturate at the largest finite ("no quantization" rows)
+    sat = eb2 > fmt.max_exp_paper
+    mant = jnp.where(sat, fmt.mant_mask, mant)
+    eb2 = jnp.minimum(eb2, fmt.max_exp_paper)
+    # flush-to-zero below the normal range (paper has no subnormals);
+    # FP32 zeros/subnormals (exp==0) also flush.
+    zero = (eb <= 0) | (exp == 0)
+    body = jnp.where(zero, 0, (eb2 << R) | mant)
+    return ((sign << fmt.sign_shift) | body).astype(_U8)
+
+
+def _quant_float_ocp(sign: Array, exp: Array, man: Array, xblk: Array,
+                     fmt: MXFormat) -> Array:
+    """OCP-mode EKMR element quantization: full-sticky RNE + subnormals."""
+    K, R, bias = fmt.ebits, fmt.mbits, fmt.bias
+    eb = exp - xblk.astype(_I32) + bias
+    sig = (1 << 23) | man                        # 24-bit significand
+    sh_sub = jnp.maximum(0, 1 - eb)              # extra shift into subnormals
+    shift = jnp.clip((23 - R) + sh_sub, 0, 30)
+    low = sig & ((1 << shift) - 1)
+    half = (1 << shift) >> 1
+    q = sig >> shift
+    round_up = (low > half) | ((low == half) & ((q & 1) == 1))
+    q = q + round_up.astype(_I32)
+    # Normal path: q in [2^R, 2^(R+1)]; carry renormalizes.
+    ebn = jnp.maximum(eb, 1)
+    ncarry = q >> (R + 1)                        # 1 iff q == 2^(R+1)
+    qn = jnp.where(ncarry > 0, 1 << R, q)
+    ebn = ebn + ncarry
+    mant_n = qn - (1 << R)
+    # Subnormal path (eb <= 0): q in [0, 2^R]; q == 2^R promotes to min normal.
+    promote = q >> R
+    mant_s = jnp.where(promote > 0, 0, q)
+    eb_s = promote                               # 0 (subnormal) or 1
+    is_sub = eb <= 0
+    mant = jnp.where(is_sub, mant_s, mant_n)
+    ebf = jnp.where(is_sub, eb_s, ebn)
+    # Overflow -> saturate to max finite (E4M3 reserves 1111|111 = NaN).
+    top_e, top_m = fmt.max_exp_ocp, fmt.max_mant_at_top_ocp
+    over = (ebf > top_e) | ((ebf == top_e) & (mant > top_m))
+    mant = jnp.where(over, top_m, mant)
+    ebf = jnp.where(over, top_e, ebf)
+    # FP32 zeros/subnormals quantize to (signed) zero.
+    zero = exp == 0
+    body = jnp.where(zero, 0, (ebf << R) | mant)
+    return ((sign << fmt.sign_shift) | body).astype(_U8)
+
+
+def _quant_int8(sign: Array, exp: Array, man: Array, xblk: Array,
+                mode: str) -> Array:
+    """INT8 element: value = m * 2^(X-127), m has 6 fractional bits."""
+    fmt = F.INT8
+    e_u = exp - xblk.astype(_I32)                # unbiased scaled exponent
+    sig = (1 << 23) | man
+    # magnitude in 1/64 units: sig * 2^(e_u + 6 - 23)  => shift = 17 - e_u
+    shift = jnp.clip(17 - e_u, 0, 30)
+    low = sig & ((1 << shift) - 1)
+    half = (1 << shift) >> 1
+    q = sig >> shift
+    if mode == "paper":                          # ties-away
+        q = q + (low >= half).astype(_I32) * (half > 0)
+    else:                                        # RNE
+        q = q + ((low > half) | ((low == half) & ((q & 1) == 1))).astype(_I32)
+    q = jnp.where(exp == 0, 0, q)                # FP32 zero/subnormal
+    if mode == "paper":                          # sign-magnitude
+        mag = jnp.minimum(q, 127)
+        return ((sign << 7) | mag).astype(_U8)
+    # ocp: two's complement in [-128, 127]
+    signed = jnp.where(sign == 1, -q, q)
+    signed = jnp.clip(signed, -128, 127)
+    return jax.lax.bitcast_convert_type(signed.astype(jnp.int8), _U8)
+
+
+def _marker_codes(sign: Array, fmt: MXFormat, kind: str) -> Array:
+    """Paper NaN/Inf element markers: top exponent + nan_mantissa / 0."""
+    if fmt.is_int:
+        mag = 127 if kind == "nan" else 126
+        return ((sign << 7) | mag).astype(_U8)
+    mant = fmt.nan_mantissa if kind == "nan" else 0
+    body = (fmt.exp_mask << fmt.mbits) | mant
+    return ((sign << fmt.sign_shift) | body).astype(_U8)
+
+
+# =============================================================================
+# Public API
+# =============================================================================
+def _normalize_axis(axis: int, ndim: int) -> int:
+    axis = axis % ndim
+    return axis
+
+
+def _to_blocked(x: Array, block: int, axis: int) -> Tuple[Array, int]:
+    """Move ``axis`` last and zero-pad to a block multiple."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "block", "axis",
+                                              "sign_erratum"))
+def mx_quantize(x: Array, fmt: str = "e4m3", mode: str = "paper",
+                block: int = F.DEFAULT_BLOCK, axis: int = -1,
+                sign_erratum: bool = False) -> MXArray:
+    """Convert a float tensor to MX format along ``axis`` (paper steps 1-3)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    f = get_format(fmt)
+    axis = _normalize_axis(axis, x.ndim)
+    xb, orig_len = _to_blocked(x, block, axis)
+    lead = xb.shape[:-1]
+    nblk = xb.shape[-1] // block
+    xg = xb.reshape(lead + (nblk, block))
+
+    sign, exp, man = _f32_fields(xg)
+    finite = exp != 0xFF
+    is_nan = (~finite) & (man != 0)
+    is_inf = (~finite) & (man == 0)
+    any_nan = jnp.any(is_nan, axis=-1)
+    any_inf = jnp.any(is_inf, axis=-1)
+
+    ev_max = block_max_exponent(exp, finite)                     # step 1
+    xscale = shared_scale(ev_max, f, mode, any_nan, any_inf)     # step 2
+
+    xblk = jnp.broadcast_to(xscale[..., None].astype(_I32), xg.shape)
+    if f.is_int:                                                 # step 3
+        codes = _quant_int8(sign, exp, man, xblk, mode)
+    elif mode == "paper":
+        codes = _quant_float_paper(sign, exp, man, xblk, f,
+                                   sign_erratum=sign_erratum)
+    else:
+        codes = _quant_float_ocp(sign, exp, man, xblk, f)
+
+    if mode == "paper":
+        # NaN/Inf markers poison the whole block (paper div/P_i rules).
+        blk_nan = jnp.broadcast_to(any_nan[..., None], xg.shape)
+        blk_inf = jnp.broadcast_to(any_inf[..., None], xg.shape)
+        codes = jnp.where(blk_inf, _marker_codes(sign, f, "inf"), codes)
+        codes = jnp.where(blk_nan, _marker_codes(sign, f, "nan"), codes)
+    else:
+        # ocp: X=NaN poisons on dequant; keep per-element NaN codes where
+        # the format can express them, else max-finite.
+        pass
+
+    codes = codes.reshape(lead + (nblk * block,))
+    # undo the moveaxis: element codes and per-block scales both return to
+    # having their block dimension at ``axis``
+    codes = jnp.moveaxis(codes, -1, axis)
+    scales = jnp.moveaxis(xscale, -1, axis)
+    return MXArray(codes=codes, scales=scales, fmt=f.name, mode=mode,
+                   block=block, orig_len=orig_len, axis=axis)
+
+
+def decode_elements(codes: Array, fmt: MXFormat, mode: str) -> Array:
+    """Element code -> f32 value relative to the scale (no scale applied)."""
+    c = codes.astype(_I32)
+    if fmt.is_int:
+        if mode == "paper":                      # sign-magnitude 1.6
+            sign = (c >> 7) & 1
+            mag = (c & 0x7F).astype(jnp.float32) / 64.0
+            return jnp.where(sign == 1, -mag, mag)
+        i8 = jax.lax.bitcast_convert_type(codes.astype(_U8), jnp.int8)
+        return i8.astype(jnp.float32) / 64.0
+    R, bias = fmt.mbits, fmt.bias
+    sign = (c >> fmt.sign_shift) & 1
+    e = (c >> R) & fmt.exp_mask
+    m = c & fmt.mant_mask
+    frac = m.astype(jnp.float32) / float(1 << R)
+    if mode == "ocp":
+        sub = e == 0
+        val = jnp.where(sub,
+                        frac * pow2_f32(jnp.full_like(e, 1 - bias)),
+                        (1.0 + frac) * pow2_f32(e - bias))
+        if fmt.has_ieee_specials:
+            top = e == fmt.exp_mask
+            val = jnp.where(top & (m == 0), jnp.inf, val)
+            val = jnp.where(top & (m != 0), jnp.nan, val)
+        if fmt.e4m3_style_nan:
+            val = jnp.where((e == fmt.exp_mask) & (m == fmt.mant_mask),
+                            jnp.nan, val)
+    else:
+        # paper: exp==0 codes are true zeros (FTZ); no subnormals.
+        val = jnp.where(e == 0, 0.0, (1.0 + frac) * pow2_f32(e - bias))
+        top = e == fmt.exp_mask                  # paper marker space
+        val = jnp.where(top & (m == 0), jnp.inf, val)
+        val = jnp.where(top & (m != 0), jnp.nan, val)
+    return jnp.where(sign == 1, -val, val)
+
+
+def mx_dequantize(mx: MXArray) -> Array:
+    """MXArray -> f32 tensor (the backward transformation)."""
+    f = mx.format
+    codes = jnp.moveaxis(mx.codes, mx.axis, -1)
+    scales = jnp.moveaxis(mx.scales, mx.axis, -1)
+    lead = codes.shape[:-1]
+    nblk = scales.shape[-1]
+    cg = codes.reshape(lead + (nblk, mx.block))
+    elem = decode_elements(cg, f, mx.mode)
+    sfac = scale_to_f32(scales)[..., None]
+    val = elem * sfac
+    if mx.mode == "paper":
+        snan = scales == F.SCALE_NAN
+        sinf = scales == F.SCALE_INF
+        val = jnp.where(snan[..., None], jnp.nan, val)
+        sgn = jnp.where((cg >> f.sign_shift) & 1 == 1, -1.0, 1.0)
+        val = jnp.where(sinf[..., None], sgn * jnp.inf, val)
+    else:
+        val = jnp.where((scales == F.SCALE_NAN)[..., None], jnp.nan, val)
+    val = val.reshape(lead + (nblk * mx.block,))[..., :mx.orig_len]
+    return jnp.moveaxis(val, -1, mx.axis)
+
+
+def quantize_dequantize(x: Array, fmt: str = "e4m3", mode: str = "paper",
+                        block: int = F.DEFAULT_BLOCK, axis: int = -1) -> Array:
+    """Fake-quantization round trip (used for QAT-style layers and tests)."""
+    return mx_dequantize(mx_quantize(x, fmt, mode, block, axis))
+
+
+def mx_error_bound(fmt: str | MXFormat, mode: str = "paper") -> float:
+    """Worst-case |dequant(quant(v)) - v| / 2^(X-127+emax-ish) style bound:
+    relative to the largest block element, error <= 2^-mbits (paper keeps
+    R+1 bits then rounds ties-away) — used by property tests."""
+    f = get_format(fmt)
+    if f.is_int:
+        return 2.0 ** (-f.int_frac_bits)         # 1/64 ulp at scale
+    # one ulp at the top binade of the block: 2^(emax_unbiased - R)
+    return 2.0 ** (-f.mbits)

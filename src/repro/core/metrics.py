@@ -1,0 +1,30 @@
+"""Quantization-quality metrics for MX conversion (benchmark substrate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sqnr_db(x: jax.Array, xq: jax.Array) -> jax.Array:
+    """Signal-to-quantization-noise ratio in dB (higher is better)."""
+    x = x.astype(jnp.float32)
+    err = x - xq.astype(jnp.float32)
+    ps = jnp.mean(x * x)
+    pn = jnp.mean(err * err) + 1e-30
+    return 10.0 * jnp.log10(ps / pn)
+
+
+def max_rel_err_vs_blockmax(x: jax.Array, xq: jax.Array,
+                            block: int = 32) -> jax.Array:
+    """max |x - xq| / max|block| — the natural error scale for a shared-scale
+    format (each element's ulp is set by the block maximum)."""
+    n = x.shape[-1] // block * block
+    xb = x[..., :n].reshape(x.shape[:-1] + (-1, block)).astype(jnp.float32)
+    qb = xq[..., :n].reshape(x.shape[:-1] + (-1, block)).astype(jnp.float32)
+    bmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) + 1e-30
+    return jnp.max(jnp.abs(xb - qb) / bmax)
+
+
+def mse(x: jax.Array, xq: jax.Array) -> jax.Array:
+    d = x.astype(jnp.float32) - xq.astype(jnp.float32)
+    return jnp.mean(d * d)

@@ -1,0 +1,76 @@
+"""Bit-packed storage for sub-byte MX element codes.
+
+The paper's converter emits 8/6/4-bit private elements.  On TPU the HBM win
+of FP6/FP4 only materializes if codes are actually bit-packed; this module
+provides the pack/unpack transforms used by the weight-storage path:
+
+  * E2M1 (4-bit): 2 codes / byte
+  * E3M2, E2M3 (6-bit): 4 codes / 3 bytes
+  * E5M2, E4M3, INT8 (8-bit): identity
+
+Packing always operates on the trailing axis, which must be a multiple of
+``DEFAULT_BLOCK`` (guaranteed by mx_quantize's padding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import MXFormat, get_format
+
+_U8 = jnp.uint8
+
+
+def packed_nbytes(fmt: MXFormat | str, n: int) -> int:
+    f = get_format(fmt)
+    if f.code_bits <= 4:
+        return (n + 1) // 2
+    if f.code_bits <= 6:
+        return (n + 3) // 4 * 3
+    return n
+
+
+def pack_codes(codes: jax.Array, fmt: MXFormat | str) -> jax.Array:
+    """uint8 codes (values < 2^code_bits) -> packed uint8 stream."""
+    f = get_format(fmt)
+    if f.code_bits == 8:
+        return codes
+    c = codes.astype(jnp.uint32)
+    lead, n = codes.shape[:-1], codes.shape[-1]
+    if f.code_bits <= 4:                     # 2 per byte: [lo | hi<<4]
+        assert n % 2 == 0, "4-bit packing needs an even trailing axis"
+        pair = c.reshape(lead + (n // 2, 2))
+        out = pair[..., 0] | (pair[..., 1] << 4)
+        return out.astype(_U8)
+    # 6-bit: 4 codes -> 3 bytes, little-endian bit order
+    assert n % 4 == 0, "6-bit packing needs a trailing axis multiple of 4"
+    quad = c.reshape(lead + (n // 4, 4))
+    w = (quad[..., 0] | (quad[..., 1] << 6) | (quad[..., 2] << 12)
+         | (quad[..., 3] << 18))             # 24 bits
+    b0 = w & 0xFF
+    b1 = (w >> 8) & 0xFF
+    b2 = (w >> 16) & 0xFF
+    return jnp.stack([b0, b1, b2], axis=-1).reshape(
+        lead + (n // 4 * 3,)).astype(_U8)
+
+
+def unpack_codes(packed: jax.Array, fmt: MXFormat | str, n: int) -> jax.Array:
+    """Packed uint8 stream -> uint8 codes of trailing length ``n``."""
+    f = get_format(fmt)
+    if f.code_bits == 8:
+        return packed
+    p = packed.astype(jnp.uint32)
+    lead = packed.shape[:-1]
+    if f.code_bits <= 4:
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        out = jnp.stack([lo, hi], axis=-1).reshape(lead + (n,))
+        return out.astype(_U8)
+    trip = p.reshape(lead + (n // 4, 3))
+    w = trip[..., 0] | (trip[..., 1] << 8) | (trip[..., 2] << 16)
+    c0 = w & 0x3F
+    c1 = (w >> 6) & 0x3F
+    c2 = (w >> 12) & 0x3F
+    c3 = (w >> 18) & 0x3F
+    return jnp.stack([c0, c1, c2, c3], axis=-1).reshape(
+        lead + (n,)).astype(_U8)

@@ -1,0 +1,47 @@
+"""Analytic cost registry for Pallas kernels.
+
+Interpret-mode Pallas grids lower to XLA while loops, whose bodies HLO cost
+analysis counts ONCE — exactly right for VMEM-resident scratch (bytes), but
+an undercount for kernel FLOPs.  Kernel wrappers therefore ``record()``
+their analytic FLOPs (and HBM I/O bytes) at trace time; the dry-run wraps
+lowering in ``collect()`` and adds the corrections (EXPERIMENTS.md §Method).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def collect():
+    prev = getattr(_state, "acc", None)
+    _state.acc = {"flops": 0.0, "io_bytes": 0.0, "calls": 0}
+    try:
+        yield _state.acc
+    finally:
+        _state.acc = prev
+
+
+@contextlib.contextmanager
+def scale(factor: int):
+    """Multiply recorded costs by ``factor`` — installed by layer_scan()
+    around the scan trace, because lax.scan traces its body ONCE regardless
+    of depth (a kernel call inside the scan executes ``factor`` times)."""
+    prev = getattr(_state, "scale", 1)
+    _state.scale = prev * int(factor)
+    try:
+        yield
+    finally:
+        _state.scale = prev
+
+
+def record(flops: float, io_bytes: float) -> None:
+    acc = getattr(_state, "acc", None)
+    if acc is not None:
+        k = getattr(_state, "scale", 1)
+        acc["flops"] += float(flops) * k
+        acc["io_bytes"] += float(io_bytes) * k
+        acc["calls"] += 1

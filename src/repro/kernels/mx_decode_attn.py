@@ -1,0 +1,128 @@
+"""Pallas decode-attention kernel over an MX-quantized KV cache.
+
+The paper's converter fused with its consumer: the KV cache stays uint8
+(codes + E8M0 scales) in HBM; dequantization happens block-by-block in VMEM
+inside the online-softmax loop, so HLO-level HBM traffic is the *quantized*
+cache — the full memory-roofline win of the format (a separate dequantize op
+would write the f32 cache back to HBM and give most of it back).
+
+Grid (B, Hq, nk); per step:
+    q_ref        (1, 1, D)        query for this (batch, head)
+    kc/vc_ref    (1, blk_k, 1, D)       u8 element codes (kv head = h//rep)
+    ks/vs_ref    (1, blk_k, 1, D/32)    u8 E8M0 scales
+    mask_ref     (1, blk_k)       valid-position mask (pos-dependent)
+    scratch      acc (1, D) f32, m/l (1,) f32
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.convert import decode_elements, scale_to_f32
+from repro.core.formats import get_format
+from repro.kernels import accounting
+
+DEFAULT_BLK_K = 512
+NEG_INF = -1e30
+
+
+def _dequant_block(codes, scales, fmt, mode):
+    """(blk_k, D) u8 + (blk_k, D/32) u8 -> (blk_k, D) f32, in VMEM."""
+    f = get_format(fmt)
+    blk, d = codes.shape
+    elem = decode_elements(codes, f, mode)
+    sfac = scale_to_f32(scales)                     # (blk_k, D/32)
+    w = elem.reshape(blk, d // 32, 32) * sfac[:, :, None]
+    return w.reshape(blk, d)
+
+
+def _decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, o_ref,
+                   acc, mrow, lrow, *, fmt: str, mode: str, nk: int):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mrow[...] = jnp.full_like(mrow, NEG_INF)
+        lrow[...] = jnp.zeros_like(lrow)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (1, D)
+    k = _dequant_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :], fmt, mode)
+    v = _dequant_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :], fmt, mode)
+    d = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) \
+        / np.sqrt(d)                                       # (1, blk_k)
+    valid = mask_ref[0][None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = mrow[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    lrow[...] = lrow[...] * alpha + jnp.sum(p, axis=-1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    mrow[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _done():
+        denom = jnp.where(lrow[...] == 0.0, 1.0, lrow[...])
+        o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "rep", "blk_k",
+                                             "interpret"))
+def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
+                        k_scales: jax.Array, v_codes: jax.Array,
+                        v_scales: jax.Array, pos: jax.Array, *,
+                        fmt: str = "int8", mode: str = "ocp", rep: int = 1,
+                        blk_k: int = DEFAULT_BLK_K,
+                        interpret: bool = True) -> jax.Array:
+    """q (B,1,Hq,D); cache codes (B,S,Hkv,D) u8 + scales (B,S,Hkv,D/32);
+    attends over positions <= pos.  Returns (B,1,Hq,D)."""
+    b, _, hq, d = q.shape
+    s, hkv = k_codes.shape[1], k_codes.shape[2]
+    bk = min(blk_k, s)
+    assert s % bk == 0, (s, bk)
+    nk = s // bk
+    mask = (jnp.arange(s)[None, :] <= pos).astype(jnp.bool_)
+    mask = jnp.broadcast_to(mask, (b, s))
+    qt = q[:, 0][:, :, None, :]                            # (B, Hq, 1, D)
+    kernel = functools.partial(_decode_kernel, fmt=fmt, mode=mode, nk=nk)
+    nbl = d // 32
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, h, j: (bb, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bb, h, j, rep=rep: (bb, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, nbl),
+                         lambda bb, h, j, rep=rep: (bb, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda bb, h, j, rep=rep: (bb, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, nbl),
+                         lambda bb, h, j, rep=rep: (bb, j, h // rep, 0)),
+            pl.BlockSpec((1, bk), lambda bb, h, j: (bb, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, h, j: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, k_codes, k_scales, v_codes, v_scales, mask)
+    # analytic cost: dequant+dot over the full cache per query
+    flops = 4.0 * b * hq * s * d + 10.0 * b * hq * s * d  # dots + dequant
+    io = (k_codes.size + v_codes.size + k_scales.size + v_scales.size
+          + q.size * q.dtype.itemsize * 2)
+    accounting.record(flops, io)
+    return out.transpose(0, 2, 1, 3)                       # (B, 1, Hq, D)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: matmul with MX-quantized weights (dequant-in-VMEM).
+
+This is the *consumer* that makes the paper's converter a framework feature:
+weights live in HBM as MX element codes (uint8) + E8M0 scales (uint8, one per
+32 along the contraction axis), cutting weight HBM traffic ~3.9x vs f32
+(~1.94x vs bf16).  Each grid step:
+
+  HBM->VMEM:  A tile (BM, BK) f32/bf16, W codes (BK, BN) u8,
+              W scales (BK/32, BN) u8
+  VMEM:       branchless decode codes -> f32  (VPU)
+              multiply by broadcast scales    (VPU)
+              A @ W_deq accumulated in f32    (MXU)
+
+Tiling: BM=BN=BK=256 default => A 256 KiB + codes 64 KiB + scales 2 KiB +
+acc 256 KiB per step; MXU dims are multiples of 128.  The contraction axis
+is the innermost grid dimension; the output tile is revisited and
+accumulated across it (standard Pallas reduction pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import formats as F
+from repro.core.convert import decode_elements, scale_to_f32
+from repro.core.formats import MXFormat, get_format
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def dequant_tile(codes: jax.Array, scales: jax.Array, fmt: MXFormat,
+                 mode: str, block: int) -> jax.Array:
+    """(BK, BN) u8 codes + (BK//block, BN) u8 scales -> (BK, BN) f32."""
+    bk, bn = codes.shape
+    elem = decode_elements(codes, fmt, mode)
+    sfac = scale_to_f32(scales)                      # (BK//block, BN)
+    w = elem.reshape(bk // block, block, bn) * sfac[:, None, :]
+    return w.reshape(bk, bn)
+
+
+def _mx_matmul_kernel(a_ref, c_ref, s_ref, o_ref, *, fmt: MXFormat,
+                      mode: str, block: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    w = dequant_tile(c_ref[...], s_ref[...], fmt, mode, block)
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "mode", "block", "bm", "bn", "bk",
+                                    "interpret"))
+def mx_matmul_2d(a: jax.Array, codes: jax.Array, scales: jax.Array,
+                 fmt: str = "e4m3", mode: str = "paper",
+                 block: int = F.DEFAULT_BLOCK, bm: int = DEFAULT_BM,
+                 bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                 interpret: bool = True) -> jax.Array:
+    """a (M, K) @ dequant(codes (K, N), scales (K//block, N)) -> (M, N) f32.
+
+    K must be a multiple of ``block``; M/N/K are padded to tile multiples.
+    """
+    f = get_format(fmt)
+    m, k = a.shape
+    k2, n = codes.shape
+    assert k == k2, (a.shape, codes.shape)
+    assert k % block == 0, f"K={k} must be a multiple of block={block}"
+    bm_ = min(bm, m)
+    bn_ = min(bn, n)
+    bk_ = min(bk, k)
+    pm, pn, pk = (-m) % bm_, (-n) % bn_, (-k) % bk_
+    ap = jnp.pad(a, ((0, pm), (0, pk)))
+    cp = jnp.pad(codes, ((0, pk), (0, pn)))
+    sp = jnp.pad(scales, ((0, pk // block), (0, pn)))
+    mp, kp = ap.shape
+    np_ = cp.shape[1]
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    kernel = functools.partial(_mx_matmul_kernel, fmt=f, mode=mode,
+                               block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk_ // block, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, cp, sp)
+    return out[:m, :n]

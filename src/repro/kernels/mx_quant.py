@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for the paper's FP32 -> MX converter.
+
+TPU-native adaptation of the combinational circuit (DESIGN.md §2):
+
+  * the paper's 32-input comparator tree  -> lane-local max over a 32-wide
+    trailing sub-axis of the VMEM tile (the VPU reduces with the same
+    O(log 32) tree, 8x128 lanes at a time);
+  * the 32 parallel LUT quantizers        -> branchless integer ops on the
+    bitcast(u32) view of the tile (mask/shift exponent extract, add-shift
+    ties-away rounding, selects for FTZ / saturation / markers);
+  * the 1288-pin I/O interface            -> double-buffered HBM->VMEM tile
+    pipeline driven by ``pl.pallas_call`` BlockSpecs.
+
+Tile geometry: inputs are processed as (BM, BN) f32 tiles with BN a multiple
+of 32*128 so each 8x128 VREG row holds 4 whole MX blocks; the per-block scale
+tile is (BM, BN//32).  Default (256, 512) => 512 KiB in + 132 KiB out per
+grid step, comfortably inside a v5e core's ~16 MiB VMEM with double
+buffering.
+
+The kernel body reuses the *same* integer-exact element functions as the
+pure-JAX reference (repro/core/convert.py), so tests assert bit-identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import formats as F
+from repro.core.convert import (_f32_fields, _quant_float_ocp,
+                                _quant_float_paper, _quant_int8,
+                                _marker_codes, shared_scale)
+from repro.core.formats import MXFormat, get_format
+
+DEFAULT_BM = 256
+DEFAULT_BN = 512  # multiple of 32 (block) and 128 (lanes)
+
+
+def _quant_tile(x_tile: jax.Array, fmt: MXFormat, mode: str,
+                block: int) -> Tuple[jax.Array, jax.Array]:
+    """Quantize one (BM, BN) f32 tile -> (codes u8 (BM,BN), scales u8
+    (BM, BN//block)).  Pure jnp: runs inside the Pallas kernel body and in
+    the reference oracle."""
+    bm, bn = x_tile.shape
+    xg = x_tile.reshape(bm, bn // block, block)
+    sign, exp, man = _f32_fields(xg)
+    finite = exp != 0xFF
+    is_nan = (~finite) & (man != 0)
+    is_inf = (~finite) & (man == 0)
+    any_nan = jnp.any(is_nan, axis=-1)
+    any_inf = jnp.any(is_inf, axis=-1)
+    # step 1: comparator tree == lane max over the 32-wide sub-axis
+    ev_max = jnp.max(jnp.where(finite, exp, 0), axis=-1)
+    # step 2: shared scale
+    xscale = shared_scale(ev_max, fmt, mode, any_nan, any_inf)
+    xblk = jnp.broadcast_to(xscale[..., None].astype(jnp.int32), xg.shape)
+    # step 3: private elements
+    if fmt.is_int:
+        codes = _quant_int8(sign, exp, man, xblk, mode)
+    elif mode == "paper":
+        codes = _quant_float_paper(sign, exp, man, xblk, fmt)
+    else:
+        codes = _quant_float_ocp(sign, exp, man, xblk, fmt)
+    if mode == "paper":
+        blk_nan = jnp.broadcast_to(any_nan[..., None], xg.shape)
+        blk_inf = jnp.broadcast_to(any_inf[..., None], xg.shape)
+        codes = jnp.where(blk_inf, _marker_codes(sign, fmt, "inf"), codes)
+        codes = jnp.where(blk_nan, _marker_codes(sign, fmt, "nan"), codes)
+    return codes.reshape(bm, bn), xscale
+
+
+def _mx_quant_kernel(x_ref, codes_ref, scales_ref, *, fmt: MXFormat,
+                     mode: str, block: int):
+    x = x_ref[...].astype(jnp.float32)
+    codes, scales = _quant_tile(x, fmt, mode, block)
+    codes_ref[...] = codes
+    scales_ref[...] = scales
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "mode", "block", "bm", "bn",
+                                    "interpret"))
+def mx_quantize_2d(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
+                   block: int = F.DEFAULT_BLOCK, bm: int = DEFAULT_BM,
+                   bn: int = DEFAULT_BN, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a 2-D array (M, N) along the trailing axis with the Pallas
+    converter kernel.  M, N need not be tile-aligned (zero padding; zeros
+    never perturb a block's max exponent)."""
+    f = get_format(fmt)
+    m, n = x.shape
+    bm_ = min(bm, max(1, m))
+    bn_ = min(bn, n) if n % block == 0 and n < bn else bn
+    # pad to tile multiples (zeros are neutral for the exponent max)
+    pm = (-m) % bm_
+    pn = (-n) % bn_
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pn)))
+    mp, np_ = xp.shape
+    grid = (mp // bm_, np_ // bn_)
+    kernel = functools.partial(_mx_quant_kernel, fmt=f, mode=mode,
+                               block=block)
+    codes, scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            pl.BlockSpec((bm_, bn_ // block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.uint8),
+            jax.ShapeDtypeStruct((mp, np_ // block), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(xp)
+    return codes[:m, :n], scales[:m, : (n + block - 1) // block]

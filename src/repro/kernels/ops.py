@@ -1,0 +1,154 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``INTERPRET`` defaults to True in this CPU container (Pallas interpret mode
+executes the kernel bodies in Python for correctness validation); on a real
+TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core.convert import MXArray
+from repro.kernels import mx_matmul as _mm
+from repro.kernels import mx_quant as _mq
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def mx_quantize_pallas(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
+                       block: int = F.DEFAULT_BLOCK) -> MXArray:
+    """Quantize an ND tensor along its trailing axis with the Pallas
+    converter kernel; returns the same MXArray container as the pure-JAX
+    path (bit-identical codes/scales)."""
+    shape = x.shape
+    n = shape[-1]
+    x2 = x.reshape(-1, n)
+    codes, scales = _mq.mx_quantize_2d(x2, fmt=fmt, mode=mode, block=block,
+                                       interpret=INTERPRET)
+    nblk = (n + block - 1) // block
+    # re-pad codes to the block multiple to match MXArray's invariant
+    pad = nblk * block - n
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+    codes = codes.reshape(shape[:-1] + (nblk * block,))
+    scales = scales.reshape(shape[:-1] + (nblk,))
+    return MXArray(codes=codes, scales=scales, fmt=fmt, mode=mode,
+                   block=block, orig_len=n, axis=len(shape) - 1)
+
+
+def mx_matmul(a: jax.Array, w: MXArray) -> jax.Array:
+    """a (..., K) @ w, where w is an MXArray of logical shape (K, N)
+    quantized along axis 0 (the contraction axis)."""
+    assert w.axis == 0, "weights must be quantized along the contraction dim"
+    k, n = w.shape
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    out = _mm.mx_matmul_2d(a2, w.codes, w.scales, fmt=w.fmt, mode=w.mode,
+                           block=w.block, interpret=INTERPRET)
+    return out.reshape(lead + (n,))
+
+
+def quantize_weight(w: jax.Array, fmt: str = "e4m3", mode: str = "paper",
+                    block: int = F.DEFAULT_BLOCK) -> MXArray:
+    """Quantize a (K, N) weight along K (contraction) for mx_matmul."""
+    from repro.core.convert import mx_quantize
+    return mx_quantize(w, fmt=fmt, mode=mode, block=block, axis=0)
+
+
+def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True):
+    """Flash attention, sharding-aware.
+
+    With sharding rules installed (launcher/dry-run), wraps the Pallas call
+    in shard_map manual over (batch, model): q sharded by heads over
+    "model", k/v replicated over "model" (GQA kv-heads rarely divide the TP
+    axis); the GQA expansion happens per-shard with global head offsets.
+    Returns None if the head count does not divide the model axis (caller
+    falls back to dense attention).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import current_rules
+    from repro.kernels.flash_attn import flash_attention
+
+    rules = current_rules()
+    if rules is None:
+        return flash_attention(q, k, v, causal, INTERPRET)
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return flash_attention(q, k, v, causal, INTERPRET)
+    model_ax = rules["model"][0]
+    batch_axes = rules.get("batch")
+    h, hkv = q.shape[2], k.shape[2]
+    rep = h // hkv
+    msize = mesh.shape[model_ax]
+    bsz = q.shape[0]
+    if h % msize != 0 or (batch_axes and bsz % _prod(
+            mesh.shape[a] for a in batch_axes) != 0):
+        return None
+    qspec = P(batch_axes, None, model_ax, None)
+    kvspec = P(batch_axes, None, None, None)
+
+    def body(ql, kl, vl):
+        hl = ql.shape[2]
+        off = jax.lax.axis_index(model_ax) * hl
+        idx = (off + jnp.arange(hl)) // rep
+        ke = jnp.take(kl, idx, axis=2)
+        ve = jnp.take(vl, idx, axis=2)
+        return flash_attention(ql, ke, ve, causal, INTERPRET)
+
+    manual = set(a for a in ((batch_axes or ()) + (model_ax,)))
+    return jax.shard_map(body, mesh=mesh,
+                         in_specs=(qspec, kvspec, kvspec),
+                         out_specs=qspec, check_vma=False,
+                         axis_names=manual)(q, k, v)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
+    """Sharded wrapper for the MX decode-attention kernel: the u8 cache is
+    consumed directly (batch-sharded over the data axes); q is sliced to
+    the local batch by shard_map.  Returns (B, 1, Hq, D) or None if the
+    cache layout is unsupported (caller falls back to dequant + dense)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import current_rules
+    from repro.kernels.mx_decode_attn import mx_decode_attention
+
+    kc, ks = cache["k_codes"], cache["k_scales"]
+    vc, vs = cache["v_codes"], cache["v_scales"]
+    hq, d = q.shape[2], q.shape[3]
+    hkv = kc.shape[2]
+    rep = hq // hkv
+    if d % 32 or kc.shape[-1] != d:
+        return None                      # padded code layout unsupported
+    fmt, mode = cfg.mx.kv_fmt, cfg.mx.mode
+
+    def call(q_, kc_, ks_, vc_, vs_, pos_):
+        return mx_decode_attention(q_, kc_, ks_, vc_, vs_, pos_, fmt=fmt,
+                                   mode=mode, rep=rep, interpret=INTERPRET)
+
+    rules = current_rules()
+    if rules is None:
+        return call(q, kc, ks, vc, vs, pos)
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return call(q, kc, ks, vc, vs, pos)
+    ba = rules.get("kv_batch") or ("data",)
+    ba = tuple(a for a in ba if a in mesh.axis_names)
+    if q.shape[0] % _prod(mesh.shape[a] for a in ba):
+        return None
+    bspec = P(ba, None, None, None)
+    return jax.shard_map(call, mesh=mesh,
+                         in_specs=(bspec, bspec, bspec, bspec, bspec, P()),
+                         out_specs=bspec, check_vma=False,
+                         axis_names=set(ba))(q, kc, ks, vc, vs, pos)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact / allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core.convert import (decode_elements, mx_quantize, scale_to_f32)
+from repro.core.formats import get_format
+
+
+def mx_quantize_2d_ref(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
+                       block: int = F.DEFAULT_BLOCK
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.mx_quant.mx_quantize_2d (trailing-axis blocks)."""
+    mx = mx_quantize(x.astype(jnp.float32), fmt=fmt, mode=mode, block=block,
+                     axis=-1)
+    n = x.shape[-1]
+    nblk = (n + block - 1) // block
+    return mx.codes[..., :n], mx.scales[..., :nblk]
+
+
+def dequant_ref(codes: jax.Array, scales: jax.Array, fmt: str, mode: str,
+                block: int = F.DEFAULT_BLOCK) -> jax.Array:
+    """Dequantize (K, N) codes quantized along axis 0 (contraction dim)."""
+    f = get_format(fmt)
+    k, n = codes.shape
+    elem = decode_elements(codes, f, mode)
+    sfac = scale_to_f32(scales)
+    w = elem.reshape(k // block, block, n) * sfac[:, None, :]
+    return w.reshape(k, n)
+
+
+def mx_matmul_2d_ref(a: jax.Array, codes: jax.Array, scales: jax.Array,
+                     fmt: str = "e4m3", mode: str = "paper",
+                     block: int = F.DEFAULT_BLOCK) -> jax.Array:
+    """Oracle for kernels.mx_matmul.mx_matmul_2d."""
+    w = dequant_ref(codes, scales, fmt, mode, block)
+    return jnp.dot(a.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,243 @@
+"""Dry-run cell construction: (arch x shape x variant x mesh) -> a jittable
+step function + ShapeDtypeStruct args + in/out shardings.
+
+Variants:
+  baseline  — bf16 weights/KV, no MX anywhere (the fp reference).
+  paper     — the paper-faithful technique in the loop: MX weight
+              fake-quant in training; MX(paper-mode) INT8 KV cache +
+              MX weight storage for decode.
+  optimized — beyond-paper: OCP-mode formats + every hillclimb lever
+              (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import make_rules, param_specs, use_rules
+from repro.models import (Model, batch_specs, decode_specs, load_config)
+from repro.models.config import ModelConfig, MXPolicy, SHAPES, ShapeSpec
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import build_train_step
+
+KV_CACHE_LEAVES_ATTN = {"k", "v", "k_codes", "k_scales", "v_codes",
+                        "v_scales"}
+KV_CACHE_LEAVES_MLA = {"ckv", "kr", "ckv_codes", "ckv_scales", "kr_codes",
+                       "kr_scales"}
+STATE_LEAVES_B4 = {"ssm", "tmix_state"}
+STATE_LEAVES_B3 = {"conv", "tmix_prev", "cmix_prev"}
+
+
+def variant_config(arch: str, variant: str) -> ModelConfig:
+    cfg = load_config(arch)
+    if variant == "baseline":
+        return cfg
+    if variant == "paper":
+        mx = MXPolicy(fmt="e4m3", mode="paper", weights=True, kv_cache=True,
+                      kv_fmt="int8", grads=True, grad_fmt="e4m3")
+        return dataclasses.replace(cfg, mx=mx)
+    if variant == "optimized":
+        mx = MXPolicy(fmt="e4m3", mode="ocp", weights=True, kv_cache=True,
+                      kv_fmt="int8", grads=True, grad_fmt="e4m3")
+        return dataclasses.replace(cfg, mx=mx, attn_impl="flash")
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# =============================================================================
+# sharding helpers
+# =============================================================================
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= mesh.shape.get(e, 1)
+        return n
+    return mesh.shape.get(entry, 1)
+
+
+def _validated(spec: P, shape, mesh) -> P:
+    """Drop spec axes that do not divide the corresponding dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries[: len(shape)]):
+        out.append(e if e is not None and dim % _axis_size(mesh, e) == 0
+                   else None)
+    return P(*out)
+
+
+def shardings_for_params(params_sds, mesh) -> Any:
+    specs = param_specs(params_sds)
+    return jax.tree_util.tree_map(
+        lambda sds, sp: NamedSharding(mesh, _validated(sp, sds.shape, mesh)),
+        params_sds, specs)
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shardings_for_batch(batch_sds, mesh) -> Any:
+    ba = _batch_axes(mesh)
+
+    def one(sds):
+        spec = _validated(P(ba), sds.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, batch_sds)
+
+
+def shardings_for_cache(cache_sds, mesh, *, seq_sharded: bool) -> Any:
+    ba = _batch_axes(mesh)
+
+    def one(path, sds):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(sds.shape)
+        ent: list = [None] * nd
+        if name in KV_CACHE_LEAVES_ATTN and nd >= 4:
+            ent[nd - 4] = ba
+            if seq_sharded:
+                ent[nd - 3] = "model"
+        elif name in KV_CACHE_LEAVES_MLA and nd >= 3:
+            ent[nd - 3] = ba
+            if seq_sharded:
+                ent[nd - 2] = "model"
+        elif name in STATE_LEAVES_B4 and nd >= 4:
+            ent[nd - 4] = ba
+        elif name in STATE_LEAVES_B3 and nd >= 3:
+            ent[nd - 3] = ba
+        spec = _validated(P(*ent), sds.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+# =============================================================================
+# cell construction
+# =============================================================================
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    variant: str
+    cfg: ModelConfig
+    fn: Any                  # python callable
+    args: Tuple[Any, ...]    # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    kind: str
+    mesh: Any = None
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline",
+               n_layers_override: Optional[int] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = variant_config(arch, variant)
+    if n_layers_override is not None:
+        # accounting compile: small depth + UNROLLED layer scan, so HLO cost
+        # analysis (which visits while-loop bodies once) is exact; the
+        # delta between two depths then gives exact per-layer numbers
+        over = {"n_layers": n_layers_override, "scan_unroll": True}
+        if cfg.family == "encdec":
+            over["n_enc_layers"] = n_layers_override // 2
+            over["n_dec_layers"] = n_layers_override // 2
+        cfg = dataclasses.replace(cfg, **over)
+    model = Model(cfg)
+    # decode: weights stay resident (no per-token ZeRO-3 gather); train and
+    # prefill gather weights per layer (FSDP).  The optimized variant adds
+    # the beyond-paper levers (see EXPERIMENTS.md §Perf):
+    #   * bf16 matmul outputs (halves TP all-reduce payloads),
+    #   * pure-FSDP for narrow TP-unfriendly archs (rwkv) in training,
+    #   * replicated decode activations (caches stay batch-sharded).
+    rkw = dict(seq_sharded=(shape.name == "long_500k"),
+               fsdp_params=(shape.kind != "decode"))
+    if variant == "optimized":
+        rkw["bf16_matmul_out"] = True
+        if cfg.family == "rwkv" and shape.kind == "train":
+            rkw["pure_fsdp"] = True
+        # (refuted lever, kept off: replicating decode activations made the
+        #  lm_head/logits bytes 16x worse — see EXPERIMENTS.md §Perf)
+    rules = make_rules(mesh.axis_names, **rkw)
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = shardings_for_params(params_sds, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        # optimizer state (master/m/v) shards follow the param specs
+        oshard = {k: pshard for k in opt_sds}
+        b_sds = batch_specs(cfg, shape)
+        bshard = shardings_for_batch(b_sds, mesh)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = build_train_step(model, opt_cfg, microbatches=1,
+                              fake_quant=cfg.mx.weights)
+
+        def wrapped(params, opt_state, batch, step):
+            with use_rules(rules):
+                return fn(params, opt_state, batch, step)
+
+        return Cell(arch, shape, variant, cfg, wrapped,
+                    (params_sds, opt_sds, b_sds, step_sds),
+                    (pshard, oshard, bshard, None),
+                    (pshard, oshard, None), "train", mesh)
+
+    if shape.kind == "prefill":
+        b_sds = batch_specs(cfg, shape)
+        b_sds.pop("labels", None)
+        bshard = shardings_for_batch(b_sds, mesh)
+        max_len = shape.seq_len // 2 if cfg.family == "encdec" \
+            else shape.seq_len
+
+        def pre_fn(params, batch):
+            with use_rules(rules):
+                logits, cache, pos = model.prefill(params, batch,
+                                                   max_len=max_len,
+                                                   fake_quant=False)
+                return logits, cache
+
+        return Cell(arch, shape, variant, cfg, pre_fn,
+                    (params_sds, b_sds), (pshard, bshard), None, "prefill",
+                    mesh)
+
+    # decode
+    d_sds = decode_specs(cfg, shape)
+    cshard = shardings_for_cache(d_sds["cache"], mesh,
+                                 seq_sharded=(shape.name == "long_500k"))
+    tshard = shardings_for_batch(d_sds["token"], mesh)
+
+    def dec_fn(params, token, cache, pos):
+        with use_rules(rules):
+            return model.decode_step(params, token, cache, pos)
+
+    return Cell(arch, shape, variant, cfg, dec_fn,
+                (params_sds, d_sds["token"], d_sds["cache"], d_sds["pos"]),
+                (pshard, tshard, cshard, None),
+                (None, cshard), "decode", mesh)
+
+
+def lower_cell(cell: Cell):
+    """Trace + lower under the cell's mesh (sharding constraints with bare
+    PartitionSpecs need the mesh in context).
+
+    Donation mirrors production: train donates params+optimizer state
+    (in-place update), decode donates the KV cache (in-place
+    dynamic_update_slice instead of a full-cache copy per token).
+    """
+    donate = ()
+    if cell.kind == "train":
+        donate = (0, 1)
+    elif cell.kind == "decode":
+        donate = (2,)
+    jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings,
+                 donate_argnums=donate)
+    with jax.set_mesh(cell.mesh):
+        return jf.lower(*cell.args)

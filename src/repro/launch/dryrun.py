@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init.  512 host devices back the 2x16x16 production mesh.
+
+import argparse    # noqa: E402
+import dataclasses # noqa: E402
+import json        # noqa: E402
+import time        # noqa: E402
+import traceback   # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.cells import build_cell, lower_cell          # noqa: E402
+from repro.launch.hlo_stats import collective_bytes, reshard_ops  # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.models import SHAPES, applicable_shapes, load_config  # noqa: E402
+from repro.models.registry import ARCH_IDS                      # noqa: E402
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "experiments", "artifacts")
+
+
+def delta_depths(arch: str) -> tuple:
+    """Two small scan depths for exact per-layer accounting (see module
+    docstring of launch/hlo_stats.py)."""
+    cfg = load_config(arch)
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        return (k, 2 * k)
+    if cfg.family == "encdec":
+        return (4, 8)
+    if cfg.n_dense_layers:
+        return (cfg.n_dense_layers + 1, cfg.n_dense_layers + 3)
+    return (2, 4)
+
+
+def _kernel_corrections(cfg, shape_name: str, variant: str, kind: str,
+                        n_layers: int, mesh) -> Dict[str, float]:
+    """Analytic per-device FLOPs of Pallas kernels (interpret-mode grids
+    lower to while loops whose bodies HLO cost analysis counts once; kernel
+    I/O bytes ARE counted at the call boundary, so only FLOPs need adding).
+    Deterministic — trace-time recording is unreliable under jit caching."""
+    sp = SHAPES[shape_name]
+    flops = 0.0
+    if variant != "optimized":
+        return {"flops": 0.0}
+    ndata = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    nmodel = mesh.shape.get("model", 1)
+    if kind in ("train", "prefill") and cfg.attn_impl == "flash" \
+            and cfg.family in ("decoder", "encdec", "hybrid") \
+            and cfg.n_heads % nmodel == 0:
+        b_loc = max(1, sp.global_batch // ndata)
+        h_loc = cfg.n_heads // nmodel
+        s = sp.seq_len // 2 if cfg.family == "encdec" else sp.seq_len
+        per_layer = 4.0 * b_loc * h_loc * s * s * cfg.hd * 0.5
+        n_attn = n_layers
+        if cfg.family == "hybrid":
+            n_attn = n_layers // cfg.attn_every
+        if cfg.family == "encdec":
+            n_attn = n_layers // 2            # decoder self-attn only
+        flops += per_layer * n_attn
+    if kind == "decode" and cfg.mx.kv_cache and cfg.attn_impl == "flash" \
+            and not cfg.mla and cfg.family == "decoder" \
+            and cfg.hd % 32 == 0:
+        b_loc = max(1, sp.global_batch // ndata)
+        per_layer = 14.0 * b_loc * cfg.n_heads * sp.seq_len * cfg.hd
+        flops += per_layer * n_layers
+    return {"flops": flops}
+
+
+def _compile_stats(arch: str, shape: str, mesh, variant: str,
+                   n_layers: Optional[int]) -> Dict:
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, variant,
+                      n_layers_override=n_layers)
+    lowered = lower_cell(cell)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    resh = reshard_ops(text)
+    try:
+        mem = compiled.memory_analysis()
+        memd = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+    except Exception as e:            # pragma: no cover
+        memd = {"error": str(e)}
+    kacc = _kernel_corrections(cell.cfg, shape, variant, cell.kind,
+                               n_layers or cell.cfg.n_layers, mesh)
+    return {
+        "n_layers": n_layers,
+        "flops_per_device": float(ca.get("flops", 0.0)) + kacc["flops"],
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "kernel_corrections": dict(kacc),
+        "collective_bytes_per_device": coll,
+        "reshard_ops": resh,
+        "memory": memd,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline", out_dir: str = ARTIFACT_DIR,
+             accounting: bool = True, full: bool = True,
+             print_analysis: bool = False) -> Dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ndev = mesh.size
+    cfg = load_config(arch)
+    name = f"{arch}__{shape_name}__{mesh_kind}__{variant}"
+    result: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "n_devices": ndev,
+        "status": "ok",
+    }
+    try:
+        if accounting:
+            la, lb = delta_depths(arch)
+            sa = _compile_stats(arch, shape_name, mesh, variant, la)
+            sb = _compile_stats(arch, shape_name, mesh, variant, lb)
+            span = lb - la
+            lfull = cfg.n_layers
+
+            def extrapolate(a, b):
+                return a + (b - a) / span * (lfull - la)
+
+            flops_dev = extrapolate(sa["flops_per_device"],
+                                    sb["flops_per_device"])
+            bytes_dev = extrapolate(sa["bytes_per_device"],
+                                    sb["bytes_per_device"])
+            coll_dev = {
+                k: extrapolate(sa["collective_bytes_per_device"][k],
+                               sb["collective_bytes_per_device"][k])
+                for k in sa["collective_bytes_per_device"]}
+            result["accounting"] = {
+                "depths": [la, lb], "small": sa, "large": sb,
+                "flops_per_device": flops_dev,
+                "bytes_per_device": bytes_dev,
+                "collective_bytes_per_device": coll_dev,
+            }
+            # roofline terms (seconds) — per-device quantities
+            terms = {
+                "compute_s": flops_dev / PEAK_FLOPS,
+                "memory_s": bytes_dev / HBM_BW,
+                "collective_s": coll_dev["total"] / ICI_BW,
+            }
+            result["roofline"] = terms
+            result["roofline"]["dominant"] = max(
+                ("compute_s", "memory_s", "collective_s"),
+                key=lambda k: terms[k])
+            # model flops (useful-work reference)
+            sp = SHAPES[shape_name]
+            n_active = cfg.active_param_count()
+            if sp.kind == "train":
+                model_flops = 6 * n_active * sp.tokens
+            else:
+                per_tok = 2 * n_active
+                toks = sp.tokens if sp.kind == "prefill" \
+                    else sp.global_batch
+                model_flops = per_tok * toks
+            result["model_flops"] = float(model_flops)
+            hlo_total = flops_dev * ndev
+            result["model_vs_hlo_flops"] = (
+                float(model_flops / hlo_total) if hlo_total else None)
+        if full:
+            sf = _compile_stats(arch, shape_name, mesh, variant, None)
+            result["full"] = sf
+            if print_analysis:
+                print(f"[{name}] memory_analysis: {sf['memory']}")
+                print(f"[{name}] cost_analysis: flops/dev="
+                      f"{sf['flops_per_device']:.3e} bytes/dev="
+                      f"{sf['bytes_per_device']:.3e}")
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    print(f"[dryrun] {name}: {result['status']}"
+          + (f" ({result.get('error')})" if result["status"] != "ok"
+             else ""))
+    return result
+
+
+def cell_list(mesh_kind: str):
+    for arch in ARCH_IDS:
+        cfg = load_config(arch)
+        for sp in applicable_shapes(cfg):
+            yield arch, sp.name, mesh_kind
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "paper", "optimized"])
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-accounting", action="store_true",
+                    help="skip the two delta-depth compiles")
+    ap.add_argument("--no-full", action="store_true",
+                    help="skip the full-depth compile (accounting only)")
+    args = ap.parse_args()
+
+    todo = list(cell_list(args.mesh)) if args.all else \
+        [(args.arch, args.shape, args.mesh)]
+    for arch, shape, mesh_kind in todo:
+        name = f"{arch}__{shape}__{mesh_kind}__{args.variant}"
+        path = os.path.join(args.out, name + ".json")
+        if args.skip_existing and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[dryrun] skip {name} (exists, ok)")
+                        continue
+            except Exception:
+                pass
+        run_cell(arch, shape, mesh_kind, args.variant, args.out,
+                 accounting=not args.no_accounting, full=not args.no_full,
+                 print_analysis=True)
+
+
+if __name__ == "__main__":
+    main()

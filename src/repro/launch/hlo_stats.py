@@ -1,0 +1,69 @@
+"""Collective-byte accounting from compiled (SPMD-partitioned) HLO text.
+
+``compiled.as_text()`` is the per-device program after GSPMD partitioning;
+collective ops carry per-device shard shapes.  We sum the RESULT-shape bytes
+of every collective instruction (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), per op kind.
+
+XLA's cost analysis visits while-loop bodies once, so callers combine this
+with the delta-compile method (launch/dryrun.py): stats from two compiles at
+different scan depths give exact per-layer numbers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[4,512]{1,0} all-gather(...)
+#       ROOT %t = (f32[2,4]{...}, f32[2,4]{...}) tuple(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter"
+    r"|all-to-all|collective-permute)(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes (per device) of every collective instr.
+    ``-start`` variants are counted; matching ``-done`` are skipped."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def reshard_ops(hlo_text: str) -> Dict[str, int]:
+    """Diagnostics: count layout-change ops that often indicate sharding
+    mismatches worth hillclimbing (transpose/reshape between sharded ops)."""
+    return {
+        "transpose": len(re.findall(r"\btranspose\(", hlo_text)),
+        "dynamic-slice": len(re.findall(r"\bdynamic-slice\(", hlo_text)),
+        "copy": len(re.findall(r"= \S+ copy\(", hlo_text)),
+    }

@@ -1,0 +1,24 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes:
+      pod   — inter-pod data parallelism (gradient reduction only; the only
+              traffic crossing the slow inter-pod links)
+      data  — intra-pod DP/FSDP
+      model — tensor/expert/sequence parallelism
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(ndev: int = 8):
+    """Small mesh for CI-scale dry-run tests (subprocess with 8 devices)."""
+    return jax.make_mesh((ndev // 4, 4), ("data", "model"))

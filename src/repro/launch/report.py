@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "experiments", "artifacts")
+
+
+def load_artifacts(adir: str = ARTIFACT_DIR) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(adir, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(arts: List[Dict], mesh: str = "single",
+                   variant: str = "baseline") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "MODEL/HLO FLOPs | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in arts:
+        if a.get("mesh") != mesh or a.get("variant") != variant:
+            continue
+        if a.get("status") != "ok" or "roofline" not in a:
+            rows.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | — "
+                        f"| {a.get('status')}: "
+                        f"{str(a.get('error'))[:60]} |")
+            continue
+        t = a["roofline"]
+        ratio = a.get("model_vs_hlo_flops")
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{ratio:.2f} | |")
+    return "\n".join(rows)
+
+
+def dryrun_table(arts: List[Dict], variant: str = "baseline") -> str:
+    rows = ["| arch | shape | mesh | status | compile | bytes arg/dev | "
+            "temp (host est.) | collectives |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in arts:
+        if a.get("variant") != variant:
+            continue
+        full = a.get("full") or (a.get("accounting") or {}).get("large")
+        if a.get("status") != "ok" or not full:
+            rows.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                        f"FAIL {str(a.get('error'))[:60]} | | | | |")
+            continue
+        mem = full.get("memory", {})
+        coll = full.get("collective_bytes_per_device", {})
+        ndev = a.get("n_devices", 256)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | ok | "
+            f"{full.get('compile_s','?')}s | "
+            f"{mem.get('argument_bytes', 0)/1e9:.2f}GB | "
+            f"{mem.get('temp_bytes', 0)/ndev/1e9:.2f}GB/dev | "
+            f"{coll.get('count', 0):.0f} ops |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    arts = load_artifacts()
+    print("## Roofline (single-pod 16x16, baseline)\n")
+    print(roofline_table(arts))
+    print("\n## Dry-run status\n")
+    print(dryrun_table(arts))
+
+
+if __name__ == "__main__":
+    main()

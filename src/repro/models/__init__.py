@@ -1,0 +1,8 @@
+"""repro.models — the assigned architecture zoo."""
+from repro.models.config import (  # noqa: F401
+    ALL_SHAPES, ModelConfig, MXPolicy, SHAPES, ShapeSpec, applicable_shapes,
+)
+from repro.models.registry import (  # noqa: F401
+    ARCH_IDS, Model, batch_specs, decode_specs, load_config, load_reduced,
+    make_concrete_batch,
+)

@@ -1,0 +1,171 @@
+"""Model configuration shared by every assigned architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MXPolicy:
+    """Where the paper's converter is applied inside the model/trainer."""
+    fmt: str = "e4m3"
+    mode: str = "ocp"              # "paper" for the faithful baseline
+    block: int = 32
+    weights: bool = False          # matmul weights stored/used as MX
+    kv_cache: bool = False         # serving KV cache stored as MX
+    grads: bool = False            # gradient all-gather compressed to MX
+    kv_fmt: str = "int8"           # KV cache element format
+    grad_fmt: str = "e4m3"         # gradient exchange element format
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # decoder | encdec | hybrid | rwkv
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_frac: float = 1.0         # chatglm3/glm4 rotate half the head dim
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    gated_mlp: bool = True         # SwiGLU (llama-style) vs plain GELU
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_topk: int = 0
+    moe_d_ff: int = 0              # per-expert hidden dim
+    n_dense_layers: int = 0        # leading dense layers before MoE stack
+    capacity_factor: float = 1.25
+    # --- MLA (deepseek-v2) ---
+    mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    d_conv: int = 4
+    attn_every: int = 0            # zamba2: shared attn block period
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # --- modality frontend stubs ---
+    prefix_len: int = 0            # internvl2: ViT patch tokens (stub embeds)
+    frontend: str = "none"         # none | patch | frames
+    # --- numerics / the paper's technique ---
+    mx: MXPolicy = dataclasses.field(default_factory=MXPolicy)
+    dtype: str = "bfloat16"        # compute dtype
+    param_dtype: str = "bfloat16"  # stored parameter dtype (master is f32)
+    remat: bool = True             # activation checkpointing per layer
+    scan_unroll: bool = False      # unroll the layer scan (dry-run
+    #                                accounting: XLA cost analysis counts
+    #                                while-loop bodies once)
+    attn_impl: str = "dense"       # dense | flash (Pallas online-softmax;
+    #                                falls back to dense when heads don't
+    #                                divide the model axis)
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode (SSM/hybrid/linear)."""
+        return self.family in ("hybrid", "rwkv")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has a decode path (enc-dec incl.)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, v = self.d_model, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "rwkv":
+            per = 4 * d * d + 2 * d * self.d_ff + 10 * d  # tmix + cmix approx
+            return emb + self.n_layers * per
+        if self.family == "hybrid":
+            din = self.ssm_expand * d
+            per = d * (2 * din + 2 * self.ssm_state + din // 64) + din * d \
+                + din * self.d_conv
+            attn = 4 * d * d + 3 * d * self.d_ff
+            n_attn = (self.n_layers // self.attn_every) if self.attn_every \
+                else 0
+            return emb + self.n_layers * per + attn  # shared attn counted 1x
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        if self.mla:
+            attn = d * (self.q_lora or d) \
+                + (self.q_lora or d) * nh * (self.qk_nope_dim
+                                             + self.qk_rope_dim) \
+                + d * (self.kv_lora + self.qk_rope_dim) \
+                + self.kv_lora * nh * (self.qk_nope_dim + self.v_head_dim) \
+                + nh * self.v_head_dim * d
+        else:
+            attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+        mlp_mult = 3 if self.gated_mlp else 2
+        dense_mlp = mlp_mult * d * self.d_ff
+        if self.n_experts:
+            expert = mlp_mult * d * self.moe_d_ff
+            moe_mlp = self.n_experts * expert \
+                + self.n_shared_experts * expert + d * self.n_experts
+            n_moe = self.n_layers - self.n_dense_layers
+            mlp_total = self.n_dense_layers * dense_mlp + n_moe * moe_mlp
+        else:
+            mlp_total = self.n_layers * dense_mlp
+        n_l = self.n_layers if not self.family == "encdec" \
+            else (self.n_enc_layers + self.n_dec_layers)
+        layers = n_l * attn + mlp_total
+        if self.family == "encdec":
+            layers += self.n_dec_layers * attn  # cross-attention
+        return emb + layers
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        mlp_mult = 3 if self.gated_mlp else 2
+        expert = mlp_mult * self.d_model * self.moe_d_ff
+        n_moe = self.n_layers - self.n_dense_layers
+        inactive = n_moe * (self.n_experts - self.moe_topk) * expert
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell: what gets lowered in the dry-run."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                     LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[ShapeSpec, ...]:
+    """long_500k only for sub-quadratic archs (brief rule)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.sub_quadratic:
+        out.append(LONG_500K)
+    return tuple(out)

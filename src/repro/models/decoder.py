@@ -1,0 +1,192 @@
+"""Decoder-only LM driver: dense GQA, MLA, MoE, prefix-embed (VLM) variants.
+
+Layers are stacked and driven by ``lax.scan`` (compile-time discipline: one
+layer's HLO regardless of depth).  Caches are layer-stacked pytrees carried
+through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import logical
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+VOCAB_PAD = 512
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+def _layer_init(key, cfg: ModelConfig, moe_layer: bool) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    p = {"ln1": jnp.ones((d,), dt), "ln2": jnp.ones((d,), dt)}
+    if cfg.mla:
+        p["attn"] = L.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attn_init(k1, cfg)
+    if moe_layer:
+        p["moe"] = L.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    keys = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    lkeys = jax.random.split(keys[0], n_scan)
+    moe_layer = cfg.n_experts > 0
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, moe_layer))(lkeys)
+    params = {
+        "embed": L.embed_init(keys[1], vp, d, dt),
+        "layers": layers,
+        "norm_f": jnp.ones((d,), dt),
+    }
+    if cfg.n_dense_layers:
+        dkeys = jax.random.split(keys[2], cfg.n_dense_layers)
+        params["dense_layers"] = [
+            _layer_init(k, cfg, moe_layer=False) for k in dkeys]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[3], d, vp, dt)
+    return params
+
+
+def _block(lp, x, cfg: ModelConfig, *, positions, cache=None, cache_pos=None,
+           moe_layer: bool, fake_quant: bool) -> Tuple[jax.Array, Any,
+                                                       jax.Array]:
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    s = x.shape[1]
+    if cfg.mla:
+        if cache is not None and s == 1:
+            a, new_cache = L.mla_decode(lp["attn"], h, cfg, cache=cache,
+                                        cache_pos=cache_pos,
+                                        fake_quant=fake_quant)
+        else:
+            a, new_cache = L.mla_attention(lp["attn"], h, cfg,
+                                           positions=positions, cache=cache,
+                                           cache_pos=cache_pos,
+                                           fake_quant=fake_quant)
+    else:
+        a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
+                                   cache=cache, cache_pos=cache_pos,
+                                   fake_quant=fake_quant)
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        m, aux = L.moe(lp["moe"], h, cfg, fake_quant)
+    else:
+        m = L.mlp(lp["mlp"], h, cfg, fake_quant)
+    return x + m, new_cache, aux
+
+
+def _embed(params, cfg, tokens, prefix_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return logical(x, "batch", None, None)
+
+
+def _head(params, cfg, x):
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logical(logits, "batch", None, "model")
+
+
+def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
+            fake_quant: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: (B,S)->(B,S,Vp) logits + MoE aux loss."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    moe_layer = cfg.n_experts > 0
+    for dl in params.get("dense_layers", []):
+        x, _, _ = _block(dl, x, cfg, positions=positions, moe_layer=False,
+                         fake_quant=fake_quant)
+
+    def step(carry, lp):
+        y, new_cache, aux = _block(lp, carry, cfg, positions=positions,
+                                   moe_layer=moe_layer,
+                                   fake_quant=fake_quant)
+        return y, aux
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    x, auxs = L.layer_scan(step_fn, x, params["layers"], cfg)
+    return _head(params, cfg, x), jnp.mean(auxs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    if cfg.mla:
+        mk = lambda ld: L.init_mla_cache(cfg, batch, max_len, layers_dim=ld)
+    else:
+        mk = lambda ld: L.init_kv_cache(cfg, batch, max_len, cfg.n_kv_heads,
+                                        cfg.hd, layers_dim=ld)
+    cache = {"layers": mk((n_scan,))}
+    if cfg.n_dense_layers:
+        cache["dense_layers"] = [mk(()) for _ in range(cfg.n_dense_layers)]
+    return cache
+
+
+def _run_layers(params, cache, x, cfg, positions, cache_pos, fake_quant):
+    moe_layer = cfg.n_experts > 0
+    new_dense = []
+    for i, dl in enumerate(params.get("dense_layers", [])):
+        x, nc, _ = _block(dl, x, cfg, positions=positions,
+                          cache=cache["dense_layers"][i],
+                          cache_pos=cache_pos, moe_layer=False,
+                          fake_quant=fake_quant)
+        new_dense.append(nc)
+
+    def step(carry, xs):
+        lp, cache_l = xs
+        y, nc, _ = _block(lp, carry, cfg, positions=positions, cache=cache_l,
+                          cache_pos=cache_pos, moe_layer=moe_layer,
+                          fake_quant=fake_quant)
+        return y, nc
+
+    x, new_layer_cache = L.layer_scan(
+        step, x, (params["layers"], cache["layers"]), cfg)
+    new_cache = {"layers": new_layer_cache}
+    if new_dense:
+        new_cache["dense_layers"] = new_dense
+    return x, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: int,
+            prefix_embeds=None, fake_quant: bool = False):
+    """Process the prompt, fill the cache at [0, S); returns (logits, cache,
+    next position)."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, max_len)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, cache = _run_layers(params, cache, x, cfg, positions, 0, fake_quant)
+    return _head(params, cfg, x), cache, s
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig, *,
+                fake_quant: bool = False):
+    """One decode step: token (B,) int32, pos scalar int32 (cache length so
+    far).  Returns (logits (B,1,Vp), new cache)."""
+    x = _embed(params, cfg, token[:, None], None)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    x, cache = _run_layers(params, cache, x, cfg, positions, pos, fake_quant)
+    return _head(params, cfg, x), cache

@@ -1,0 +1,184 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The speech frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) directly.  The decoder is a
+standard causal LM with cross-attention; decode caches the decoder self-KV
+plus the (once-computed) cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.decoder import VOCAB_PAD, padded_vocab
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    return {"ln1": jnp.ones((d,), dt), "attn": L.attn_init(k1, cfg),
+            "ln2": jnp.ones((d,), dt), "mlp": L.mlp_init(k2, cfg)}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    return {"ln1": jnp.ones((d,), dt), "attn": L.attn_init(k1, cfg),
+            "lnx": jnp.ones((d,), dt), "xattn": L.attn_init(k2, cfg),
+            "ln2": jnp.ones((d,), dt), "mlp": L.mlp_init(k3, cfg)}
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    ekeys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dkeys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": L.embed_init(ks[2], vp, d, dt),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(ekeys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dkeys),
+        "enc_norm": jnp.ones((d,), dt),
+        "norm_f": jnp.ones((d,), dt),
+        "lm_head": L.dense_init(ks[3], d, vp, dt),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           fake_quant: bool = False) -> jax.Array:
+    """frames: precomputed frame embeddings (B, S_enc, d) — frontend stub."""
+    x = logical(frames.astype(L.dtype_of(cfg)), "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def step(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        a, _ = L.attention(lp["attn"], h, cfg, positions=positions,
+                           causal=False, fake_quant=fake_quant)
+        x1 = carry + a
+        h = L.rms_norm(x1, lp["ln2"], cfg.norm_eps)
+        return x1 + L.mlp(lp["mlp"], h, cfg, fake_quant), None
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    x, _ = L.layer_scan(step_fn, x, params["enc_layers"], cfg)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg, fake_quant):
+    b, se, _ = enc_out.shape
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    k = L.dense(enc_out, lp["xattn"]["wk"], cfg.mx, fake_quant)
+    v = L.dense(enc_out, lp["xattn"]["wv"], cfg.mx, fake_quant)
+    return k.reshape(b, se, nkv, hd), v.reshape(b, se, nkv, hd)
+
+
+def _dec_block(lp, x, cfg, *, positions, enc_out=None, cross_kv=None,
+               cache=None, cache_pos=None, fake_quant=False):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
+                               cache=cache, cache_pos=cache_pos,
+                               fake_quant=fake_quant)
+    x = x + a
+    h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+    if cross_kv is None:
+        cross_kv = _cross_kv(lp, enc_out, cfg, fake_quant)
+    xa, _ = L.attention(lp["xattn"], h, cfg, positions=positions,
+                        causal=False, kv_override=cross_kv,
+                        fake_quant=fake_quant)
+    x = x + xa
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + L.mlp(lp["mlp"], h, cfg, fake_quant), new_cache
+
+
+def forward(params, frames, tokens, cfg: ModelConfig,
+            fake_quant: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Training: frames (B,S_enc,d) + decoder tokens (B,S_dec) -> logits."""
+    enc_out = encode(params, frames, cfg, fake_quant)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    x = logical(x, "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def step(carry, lp):
+        y, _ = _dec_block(lp, carry, cfg, positions=positions,
+                          enc_out=enc_out, fake_quant=fake_quant)
+        return y, None
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    x, _ = L.layer_scan(step_fn, x, params["dec_layers"], cfg)
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logical(logits, "batch", None, "model"), jnp.zeros((),
+                                                              jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, s_enc: int):
+    nd = cfg.n_dec_layers
+    self_kv = L.init_kv_cache(cfg, batch, max_len, cfg.n_kv_heads, cfg.hd,
+                              layers_dim=(nd,))
+    dt = L.dtype_of(cfg)
+    cross = {"k": jnp.zeros((nd, batch, s_enc, cfg.n_kv_heads, cfg.hd), dt),
+             "v": jnp.zeros((nd, batch, s_enc, cfg.n_kv_heads, cfg.hd), dt)}
+    return {"self": self_kv, "cross": cross}
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, *, max_len: int,
+            fake_quant: bool = False):
+    """Encode + consume decoder prompt; returns (logits, cache, next_pos)."""
+    enc_out = encode(params, frames, cfg, fake_quant)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, max_len, enc_out.shape[1])
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def step(carry, xs):
+        lp, cache_l = xs
+        ck, cv = _cross_kv(lp, enc_out, cfg, fake_quant)
+        y, nc = _dec_block(lp, carry, cfg, positions=positions,
+                           cross_kv=(ck, cv), cache=cache_l, cache_pos=0,
+                           fake_quant=fake_quant)
+        return y, (nc, ck, cv)
+
+    x, (self_c, cks, cvs) = L.layer_scan(
+        step, x, (params["dec_layers"], cache["self"]), cfg)
+    cache = {"self": self_c, "cross": {"k": cks, "v": cvs}}
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache, s
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig,
+                fake_quant: bool = False):
+    x = jnp.take(params["embed"], token[:, None], axis=0
+                 ).astype(L.dtype_of(cfg))
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+
+    def step(carry, xs):
+        lp, cache_l, ck, cv = xs
+        y, nc = _dec_block(lp, carry, cfg, positions=positions,
+                           cross_kv=(ck, cv), cache=cache_l, cache_pos=pos,
+                           fake_quant=fake_quant)
+        return y, nc
+
+    x, self_c = L.layer_scan(
+        step, x, (params["dec_layers"], cache["self"], cache["cross"]["k"],
+                  cache["cross"]["v"]), cfg)
+    cache = {"self": self_c, "cross": cache["cross"]}
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache

@@ -1,0 +1,154 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``attn_every`` layers (weights reused at every invocation; each
+invocation site still owns its own KV cache)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.decoder import padded_vocab
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0, \
+        "n_layers must divide by attn_every"
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    mkeys = jax.random.split(ks[0], cfg.n_layers)
+    k1, k2 = jax.random.split(ks[1])
+    shared = {"ln1": jnp.ones((d,), dt), "attn": L.attn_init(k1, cfg),
+              "ln2": jnp.ones((d,), dt), "mlp": L.mlp_init(k2, cfg)}
+    return {
+        "embed": L.embed_init(ks[2], vp, d, dt),
+        "blocks": jax.vmap(lambda k: ssm.mamba_init(k, cfg))(mkeys),
+        "shared_attn": shared,
+        "norm_f": jnp.ones((d,), dt),
+        "lm_head": L.dense_init(ks[3], d, vp, dt),
+    }
+
+
+def _shared_block(sp, x, cfg, *, positions, cache=None, cache_pos=None,
+                  fake_quant=False):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    a, nc = L.attention(sp["attn"], h, cfg, positions=positions, cache=cache,
+                        cache_pos=cache_pos, fake_quant=fake_quant)
+    x = x + a
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp(sp["mlp"], h, cfg, fake_quant), nc
+
+
+def _grouped(tree, g: int, k: int):
+    """Reshape layer-stacked params (L, ...) -> (G, k, ...)."""
+    return jax.tree_util.tree_map(
+        lambda t: t.reshape((g, k) + t.shape[1:]), tree)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, fake_quant: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    x = logical(x, "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    g = _n_groups(cfg)
+    blocks = _grouped(params["blocks"], g, cfg.attn_every)
+    sp = params["shared_attn"]
+
+    def group_step(carry, gp):
+        y, _ = _shared_block(sp, carry, cfg, positions=positions,
+                             fake_quant=fake_quant)
+        for i in range(cfg.attn_every):
+            lp = jax.tree_util.tree_map(lambda t: t[i], gp)
+            y, _ = ssm.mamba_block(lp, y, cfg, fake_quant=fake_quant)
+        return y, None
+
+    step_fn = jax.checkpoint(group_step) if cfg.remat else group_step
+    x, _ = L.layer_scan(step_fn, x, blocks, cfg)
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logical(logits, "batch", None, "model"), jnp.zeros((),
+                                                              jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    g = _n_groups(cfg)
+    return {
+        "attn": L.init_kv_cache(cfg, batch, max_len, cfg.n_kv_heads, cfg.hd,
+                                layers_dim=(g,)),
+        "mamba": ssm.mamba_init_cache(cfg, batch,
+                                      layers_dim=(g, cfg.attn_every)),
+    }
+
+
+def _run(params, cache, x, cfg, positions, cache_pos, fake_quant,
+         decode: bool):
+    g = _n_groups(cfg)
+    blocks = _grouped(params["blocks"], g, cfg.attn_every)
+    sp = params["shared_attn"]
+
+    def group_step(carry, xs):
+        gp, attn_c, mamba_c = xs
+        y, attn_nc = _shared_block(sp, carry, cfg, positions=positions,
+                                   cache=attn_c, cache_pos=cache_pos,
+                                   fake_quant=fake_quant)
+        mamba_ncs = []
+        for i in range(cfg.attn_every):
+            lp = jax.tree_util.tree_map(lambda t: t[i], gp)
+            mc = jax.tree_util.tree_map(lambda t: t[i], mamba_c)
+            if decode:
+                y, nc = ssm.mamba_decode(lp, y, cfg, mc,
+                                         fake_quant=fake_quant)
+            else:
+                y, nc = ssm.mamba_block(lp, y, cfg, cache=mc,
+                                        fake_quant=fake_quant)
+            mamba_ncs.append(nc)
+        mamba_nc = jax.tree_util.tree_map(
+            lambda *ts: jnp.stack(ts), *mamba_ncs)
+        return y, (attn_nc, mamba_nc)
+
+    x, (attn_c, mamba_c) = L.layer_scan(
+        group_step, x, (blocks, cache["attn"], cache["mamba"]), cfg)
+    return x, {"attn": attn_c, "mamba": mamba_c}
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: int,
+            fake_quant: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, max_len)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, cache = _run(params, cache, x, cfg, positions, 0, fake_quant,
+                    decode=False)
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache, s
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig,
+                fake_quant: bool = False):
+    x = jnp.take(params["embed"], token[:, None], axis=0
+                 ).astype(L.dtype_of(cfg))
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    x, cache = _run(params, cache, x, cfg, positions, pos, fake_quant,
+                    decode=True)
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache

@@ -1,0 +1,625 @@
+"""Shared neural layers for the model zoo (functional JAX, no framework).
+
+Every matmul routes through ``dense()``, which is where the paper's MX
+converter plugs in:
+  * training     — fake-quantization of weights (MX direct-cast training);
+  * serving      — weights stored as MXArray (uint8 codes + E8M0 scales),
+                   dequantized on the fly => ~4x less weight HBM traffic;
+  * KV caches    — quantized along head_dim in 32-element blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.convert import (MXArray, mx_dequantize, mx_quantize,
+                                quantize_dequantize)
+from repro.dist.sharding import (bf16_matmul_out_enabled, logical,
+                                 weight_gather_enabled, weight_gather_mode)
+from repro.models.config import ModelConfig, MXPolicy
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_scan(step, carry, xs, cfg: ModelConfig):
+    """lax.scan over stacked layers; unrolled when cfg.scan_unroll (dry-run
+    accounting mode — while-loop bodies are counted once by HLO cost
+    analysis, so accounting lowers a small unrolled depth).  The accounting
+    scale context makes kernel-cost records inside the body count once per
+    layer (scan traces its body once)."""
+    from repro.kernels import accounting
+    depth = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    with accounting.scale(depth):
+        return jax.lax.scan(step, carry, xs,
+                            unroll=True if cfg.scan_unroll else 1)
+
+
+# =============================================================================
+# init helpers
+# =============================================================================
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# =============================================================================
+# primitives
+# =============================================================================
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gather_spec(tp: str, rank: int):
+    """FSDP use-point constraint: un-shard the 'data' dim of the weight so
+    GSPMD inserts a per-layer weight all-gather (ZeRO-3) instead of
+    k-parallel matmuls that all-reduce activations.  In pure-FSDP mode
+    (weight_gather_mode() == "full") the whole weight is gathered and no
+    dim stays TP-sharded."""
+    lead = (None,) * (rank - 2)
+    if weight_gather_mode() == "full" or tp == "none":
+        return lead + (None, None)
+    if tp == "row":
+        return lead + ("model", None)
+    return lead + (None, "model")          # col (default)
+
+
+def dense(x: jax.Array, w, mx: Optional[MXPolicy] = None,
+          fake_quant: bool = False, tp: str = "col") -> jax.Array:
+    """x @ w with optional MX weight handling (see module docstring).
+
+    ``tp`` is the tensor-parallel role of the weight: "col" shards the
+    output dim over "model", "row" the input dim (Megatron convention).
+    """
+    gather = weight_gather_enabled()
+    if isinstance(w, MXArray):
+        # gather the *codes* (u8): the FSDP all-gather moves ~4x fewer
+        # bytes than gathering f32/bf16 weights — the paper's converter as
+        # a collective-compression lever
+        if gather:
+            spec = _gather_spec(tp, w.codes.ndim)
+            codes = logical(w.codes, *spec)
+            scales = logical(w.scales, *spec)
+            w = MXArray(codes=codes, scales=scales, fmt=w.fmt, mode=w.mode,
+                        block=w.block, orig_len=w.orig_len, axis=w.axis)
+        wd = mx_dequantize(w).astype(x.dtype)
+    else:
+        if gather:
+            w = logical(w, *_gather_spec(tp, w.ndim))
+        if fake_quant and mx is not None and mx.weights:
+            wd = quantize_dequantize(w.astype(jnp.float32), fmt=mx.fmt,
+                                     mode=mx.mode, block=mx.block,
+                                     axis=0).astype(x.dtype)
+        else:
+            wd = w.astype(x.dtype)
+    # bf16 outputs halve TP partial-sum all-reduce payloads and f32
+    # intermediate traffic; the MXU accumulates f32 internally either way
+    pref = x.dtype if bf16_matmul_out_enabled() else jnp.float32
+    y = jnp.einsum("...k,kn->...n", x, wd, preferred_element_type=pref)
+    return y.astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """cos/sin tables (…, dim/2) in f32 for the given positions."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rope_frac: float = 1.0) -> jax.Array:
+    """Rotate the first ``rope_frac`` of the head dim (chatglm-style 2d RoPE
+    rotates half).  x: (B, S, H, D); cos/sin: (B?, S, D_r/2)."""
+    d = x.shape[-1]
+    dr = int(d * rope_frac)
+    dr -= dr % 2
+    xr, xp = x[..., :dr], x[..., dr:]
+    x1, x2 = xr[..., : dr // 2], xr[..., dr // 2:]
+    c = cos[..., : dr // 2][:, :, None, :].astype(jnp.float32)
+    s = sin[..., : dr // 2][:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def softmax_f32(scores: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+# =============================================================================
+# KV cache (bf16 or MX)
+# =============================================================================
+def _code_len(dim: int, block: int) -> int:
+    return -(-dim // block) * block
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_kv: int, hd: int, layers_dim: Tuple[int, ...] = ()):
+    """Allocate one attention layer's cache (optionally layer-stacked)."""
+    if cfg.mx.kv_cache:
+        cl = _code_len(hd, cfg.mx.block)
+        shape = layers_dim + (batch, max_len, n_kv, cl)
+        sshape = layers_dim + (batch, max_len, n_kv, cl // cfg.mx.block)
+        z8 = jnp.zeros(shape, jnp.uint8)
+        s8 = jnp.zeros(sshape, jnp.uint8)
+        return {"k_codes": z8, "k_scales": s8,
+                "v_codes": z8, "v_scales": s8}
+    shape = layers_dim + (batch, max_len, n_kv, hd)
+    z = jnp.zeros(shape, dtype_of(cfg))
+    return {"k": z, "v": z}
+
+
+def _kv_quant(x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    mx = mx_quantize(x.astype(jnp.float32), fmt=cfg.mx.kv_fmt,
+                     mode=cfg.mx.mode, block=cfg.mx.block, axis=-1)
+    return mx.codes, mx.scales
+
+
+def _kv_dequant(codes: jax.Array, scales: jax.Array, cfg: ModelConfig,
+                dtype, orig_len: Optional[int] = None) -> jax.Array:
+    mx = MXArray(codes=codes, scales=scales, fmt=cfg.mx.kv_fmt,
+                 mode=cfg.mx.mode, block=cfg.mx.block,
+                 orig_len=orig_len or codes.shape[-1],
+                 axis=codes.ndim - 1)
+    return mx_dequantize(mx).astype(dtype)
+
+
+def cache_write(cache, k: jax.Array, v: jax.Array, pos, cfg: ModelConfig):
+    """Write k/v (B, s, n_kv, hd) into the cache at position ``pos``.
+
+    k/v arrive head-sharded over "model" (col-parallel projections); the
+    cache is stored batch-sharded/model-replicated so decode reads never
+    all-gather the full cache — only the one-token update is gathered."""
+    k = logical(k, "kv_batch", None, None, None)
+    v = logical(v, "kv_batch", None, None, None)
+    if cfg.mx.kv_cache:
+        kc, ks = _kv_quant(k, cfg)
+        vc, vs = _kv_quant(v, cfg)
+        upd = dict(k_codes=kc, k_scales=ks, v_codes=vc, v_scales=vs)
+        out = {}
+        for name, val in upd.items():
+            tgt = cache[name]
+            idx = (0, pos) + (0,) * (tgt.ndim - 2)
+            out[name] = jax.lax.dynamic_update_slice(tgt, val, idx)
+        return out
+    idx = (0, pos, 0, 0)
+    return {"k": jax.lax.dynamic_update_slice(cache["k"], k.astype(
+                cache["k"].dtype), idx),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(
+                cache["v"].dtype), idx)}
+
+
+def cache_read(cache, cfg: ModelConfig, dtype, hd: Optional[int] = None):
+    if cfg.mx.kv_cache:
+        k = _kv_dequant(cache["k_codes"], cache["k_scales"], cfg, dtype, hd)
+        v = _kv_dequant(cache["v_codes"], cache["v_scales"], cfg, dtype, hd)
+        return k, v
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+# =============================================================================
+# GQA attention
+# =============================================================================
+def attn_init(key, cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "wq": dense_init(ks[0], d, nh * hd, dt),
+        "wk": dense_init(ks[1], d, nkv * hd, dt),
+        "wv": dense_init(ks[2], d, nkv * hd, dt),
+        "wo": dense_init(ks[3], nh * hd, d, dt),
+    }
+
+
+def _sdpa_gqa(q, k, v, mask) -> jax.Array:
+    """Grouped-query attention without materializing repeated K/V.
+
+    q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D); Hq = Hkv * rep.  mask broadcastable to
+    (B, 1, 1, Sq, Sk).  Grouped einsums keep K/V in their stored layout —
+    no (B,Sk,Hq,D) expansion ever hits HBM.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, sq, hkv, rep, d)
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = softmax_f32(scores).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out.reshape(b, sq, hq, d)
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, causal: bool = True,
+              cache=None, cache_pos=None, fake_quant: bool = False,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Any]:
+    """GQA attention.  Full mode (cache=None): self-attention over x.
+    Decode mode: x is (B,1,d), cache holds S_max past k/v, cache_pos scalar.
+    ``kv_override`` serves cross-attention (k/v from the encoder)."""
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    mx = cfg.mx
+    q = dense(x, p["wq"], mx, fake_quant)
+    q = logical(q, "batch", None, "model")
+    q = q.reshape(b, s, nh, hd)
+    if kv_override is None:
+        k = dense(x, p["wk"], mx, fake_quant).reshape(b, s, nkv, hd)
+        v = dense(x, p["wv"], mx, fake_quant).reshape(b, s, nkv, hd)
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, cfg.rope_frac)
+        k = apply_rope(k, cos, sin, cfg.rope_frac)
+    else:
+        k, v = kv_override
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        new_cache = cache_write(cache, k, v,
+                                0 if cache_pos is None else cache_pos, cfg)
+        if s == 1:
+            # decode: attend over the (possibly MX-quantized) cache.
+            # GQA decode compute is tiny; replicate it over "model" so the
+            # cache (batch-sharded) is never all-gathered — otherwise GSPMD
+            # kv-subgroup-shards the read and gathers the full cache to
+            # honor the cache's replicated output contract.
+            q = logical(q, "kv_batch", None, None, None)
+            if cfg.mx.kv_cache and cfg.attn_impl == "flash":
+                # fused path: the u8 cache never leaves HBM un-quantized —
+                # dequant happens in VMEM inside the kernel
+                from repro.kernels.ops import mx_decode_attention_ctx
+                ofused = mx_decode_attention_ctx(q, new_cache, cache_pos,
+                                                 cfg)
+                if ofused is not None:
+                    out = ofused.reshape(b, s, nh * hd)
+                    out = dense(out, p["wo"], mx, fake_quant, tp="row")
+                    return logical(out, "batch", None, None), new_cache
+            k, v = cache_read(new_cache, cfg, x.dtype, hd)
+            k = logical(k, "kv_batch", None, None, None)
+            v = logical(v, "kv_batch", None, None, None)
+            sk = k.shape[1]
+            kpos = jnp.arange(sk)
+            mask = (kpos[None, None, None, None, :] <= cache_pos)
+        else:
+            # prefill: attend over the fresh k/v causally; the cache keeps
+            # the quantized copy for subsequent decode steps
+            sk = k.shape[1]
+            qpos = jnp.arange(s)
+            kpos = jnp.arange(sk)
+            mask = kpos[None, None, None, None, :] \
+                <= qpos[None, None, None, :, None]
+    else:
+        sk = k.shape[1]
+        if causal:
+            qpos = jnp.arange(s)
+            kpos = jnp.arange(sk)
+            mask = kpos[None, None, None, None, :] \
+                <= qpos[None, None, None, :, None]
+        else:
+            mask = jnp.ones((1, 1, 1, s, sk), bool)
+    out = None
+    if cfg.attn_impl == "flash" and causal and s > 1 and s == k.shape[1]:
+        from repro.kernels.ops import flash_attention_ctx
+        out = flash_attention_ctx(q, k, v, causal=True)
+    if out is None:
+        out = _sdpa_gqa(q, k, v, mask)
+    out = out.reshape(b, s, nh * hd)
+    out = dense(out, p["wo"], mx, fake_quant, tp="row")
+    return logical(out, "batch", None, None), new_cache
+
+
+# =============================================================================
+# MLA attention (deepseek-v2): compressed KV cache + absorbed decode
+# =============================================================================
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dq = cfg.q_lora or d
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    p = {
+        "w_dkv": dense_init(ks[0], d, cfg.kv_lora, dt),
+        "w_kr": dense_init(ks[1], d, cfg.qk_rope_dim, dt),
+        "w_uk": dense_init(ks[2], cfg.kv_lora, nh * cfg.qk_nope_dim, dt),
+        "w_uv": dense_init(ks[3], cfg.kv_lora, nh * cfg.v_head_dim, dt),
+        "wo": dense_init(ks[4], nh * cfg.v_head_dim, d, dt),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dt),
+    }
+    if cfg.q_lora:
+        p["w_dq"] = dense_init(ks[5], d, dq, dt)
+        p["q_norm"] = jnp.ones((dq,), dt)
+        p["w_uq"] = dense_init(ks[6], dq, nh * qk, dt)
+    else:
+        p["w_uq"] = dense_init(ks[6], d, nh * qk, dt)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   layers_dim: Tuple[int, ...] = ()):
+    """MLA caches the compressed c_kv (kv_lora) + shared k_rope — 576 values
+    per token instead of 2*H*hd = 32768; optionally MX-quantized."""
+    dt = dtype_of(cfg)
+    ckv = layers_dim + (batch, max_len, cfg.kv_lora)
+    krs = layers_dim + (batch, max_len, cfg.qk_rope_dim)
+    if cfg.mx.kv_cache:
+        cl = _code_len(cfg.kv_lora, cfg.mx.block)
+        clr = _code_len(cfg.qk_rope_dim, cfg.mx.block)
+        return {"ckv_codes": jnp.zeros(
+                    layers_dim + (batch, max_len, cl), jnp.uint8),
+                "ckv_scales": jnp.zeros(
+                    layers_dim + (batch, max_len, cl // cfg.mx.block),
+                    jnp.uint8),
+                "kr_codes": jnp.zeros(
+                    layers_dim + (batch, max_len, clr), jnp.uint8),
+                "kr_scales": jnp.zeros(
+                    layers_dim + (batch, max_len, clr // cfg.mx.block),
+                    jnp.uint8)}
+    return {"ckv": jnp.zeros(ckv, dt), "kr": jnp.zeros(krs, dt)}
+
+
+def _q_heads(p, x, cfg, fake_quant):
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    mx = cfg.mx
+    if cfg.q_lora:
+        cq = dense(x, p["w_dq"], mx, fake_quant)
+        cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+        q = dense(cq, p["w_uq"], mx, fake_quant)
+    else:
+        q = dense(x, p["w_uq"], mx, fake_quant)
+    q = logical(q, "batch", None, "model")
+    return q.reshape(b, s, nh, qk)
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array, cache=None, cache_pos=None,
+                  fake_quant: bool = False) -> Tuple[jax.Array, Any]:
+    """Full (train/prefill) path: materialize per-head k/v from c_kv."""
+    b, s, d = x.shape
+    nh, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                      cfg.v_head_dim)
+    mx = cfg.mx
+    q = _q_heads(p, x, cfg, fake_quant)
+    qn, qr = q[..., :dn], q[..., dn:]
+    ckv = dense(x, p["w_dkv"], mx, fake_quant)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    kr = dense(x, p["w_kr"], mx, fake_quant).reshape(b, s, 1, dr)
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    kr = apply_rope(kr, cos, sin)
+    kn = dense(ckv, p["w_uk"], mx, fake_quant).reshape(b, s, nh, dn)
+    v = dense(ckv, p["w_uv"], mx, fake_quant).reshape(b, s, nh, dv)
+    scale = 1.0 / np.sqrt(dn + dr)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", qn, kn,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", qr, kr[:, :, 0, :],
+                           preferred_element_type=jnp.float32)) * scale
+    qpos = jnp.arange(s)
+    kpos = jnp.arange(s)
+    mask = kpos[None, None, None, :] <= qpos[None, None, :, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = softmax_f32(scores).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = dense(out.reshape(b, s, nh * dv), p["wo"], mx, fake_quant,
+                tp="row")
+    new_cache = cache
+    if cache is not None:
+        new_cache = _mla_cache_write(cache, ckv, kr[:, :, 0, :], cache_pos
+                                     if cache_pos is not None else 0, cfg)
+    return logical(out, "batch", None, None), new_cache
+
+
+def _mla_cache_write(cache, ckv, kr, pos, cfg):
+    ckv = logical(ckv, "kv_batch", None, None)
+    kr = logical(kr, "kv_batch", None, None)
+    if cfg.mx.kv_cache:
+        cc, cs = _kv_quant(ckv, cfg)
+        kc, kss = _kv_quant(kr, cfg)
+        out = {}
+        for name, val in dict(ckv_codes=cc, ckv_scales=cs, kr_codes=kc,
+                              kr_scales=kss).items():
+            tgt = cache[name]
+            idx = (0, pos) + (0,) * (tgt.ndim - 2)
+            out[name] = jax.lax.dynamic_update_slice(tgt, val, idx)
+        return out
+    return {"ckv": jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)),
+            "kr": jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, pos, 0))}
+
+
+def _mla_cache_read(cache, cfg, dtype):
+    if cfg.mx.kv_cache:
+        ckv = _kv_dequant(cache["ckv_codes"], cache["ckv_scales"], cfg,
+                          dtype, cfg.kv_lora)
+        kr = _kv_dequant(cache["kr_codes"], cache["kr_scales"], cfg, dtype,
+                         cfg.qk_rope_dim)
+        return ckv, kr
+    return cache["ckv"].astype(dtype), cache["kr"].astype(dtype)
+
+
+def mla_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
+               cache, cache_pos, fake_quant: bool = False
+               ) -> Tuple[jax.Array, Any]:
+    """Absorbed MLA decode: scores/outputs computed against the compressed
+    cache directly (never materializes per-head K/V for past tokens)."""
+    b, s, d = x.shape                      # s == 1
+    nh, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                      cfg.v_head_dim)
+    mx = cfg.mx
+    q = _q_heads(p, x, cfg, fake_quant)
+    qn, qr = q[..., :dn], q[..., dn:]
+    ckv_new = dense(x, p["w_dkv"], mx, fake_quant)
+    ckv_new = rms_norm(ckv_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = dense(x, p["w_kr"], mx, fake_quant)
+    pos = jnp.full((b, s), cache_pos)
+    cos, sin = rope_tables(pos, dr, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    kr_new = apply_rope(kr_new.reshape(b, s, 1, dr), cos, sin)[:, :, 0, :]
+    cache = _mla_cache_write(cache, ckv_new, kr_new, cache_pos, cfg)
+    ckv, kr = _mla_cache_read(cache, cfg, x.dtype)      # (B,S,L), (B,S,dr)
+    # absorb W_uk into q:  q_c[b,h,l] = sum_d qn[b,h,d] * W_uk[l, h, d]
+    wuk = p["w_uk"].astype(x.dtype).reshape(cfg.kv_lora, nh, dn)
+    qc = jnp.einsum("bqhd,lhd->bqhl", qn, wuk,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / np.sqrt(dn + dr)
+    scores = (jnp.einsum("bqhl,bkl->bhqk", qc, ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", qr, kr,
+                           preferred_element_type=jnp.float32)) * scale
+    kpos = jnp.arange(ckv.shape[1])
+    mask = kpos[None, None, None, :] <= cache_pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = softmax_f32(scores).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bkl->bqhl", probs, ckv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    wuv = p["w_uv"].astype(x.dtype).reshape(cfg.kv_lora, nh, dv)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx, wuv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = dense(out.reshape(b, s, nh * dv), p["wo"], cfg.mx,
+                fake_quant, tp="row")
+    return logical(out, "batch", None, None), cache
+
+
+# =============================================================================
+# MLP / MoE
+# =============================================================================
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.gated_mlp:
+        return {"w1": dense_init(ks[0], d, ff, dt),
+                "w3": dense_init(ks[1], d, ff, dt),
+                "w2": dense_init(ks[2], ff, d, dt)}
+    return {"w1": dense_init(ks[0], d, ff, dt),
+            "w2": dense_init(ks[2], ff, d, dt)}
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig,
+        fake_quant: bool = False) -> jax.Array:
+    mx = cfg.mx
+    h = dense(x, p["w1"], mx, fake_quant)
+    if cfg.gated_mlp:
+        g = dense(x, p["w3"], mx, fake_quant)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = logical(h, "batch", None, "model")
+    out = dense(h, p["w2"], mx, fake_quant, tp="row")
+    return logical(out, "batch", None, None)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "experts": {
+            "w1": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * std
+                   ).astype(dt),
+            "w3": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * std
+                   ).astype(dt),
+            "w2": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+                   / np.sqrt(ff)).astype(dt),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], dataclasses.replace(
+            cfg, gated_mlp=True),
+            d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+GROUP_SIZE = 256   # dispatch group size (GShard-style capacity routing)
+
+
+def moe(p: Params, x: jax.Array, cfg: ModelConfig,
+        fake_quant: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-factor top-k MoE; returns (out, aux_loss).
+
+    Tokens are grouped (G, gs); dispatch/combine are one-hot einsums that
+    lower to all-to-alls when experts are sharded over "model"."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    mx = cfg.mx
+    n_tok = b * s
+    gs = min(GROUP_SIZE, n_tok)
+    g = n_tok // gs
+    xt = x.reshape(g, gs, d)
+    cap = max(1, int(gs * k / e * cfg.capacity_factor))
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                 # (g, gs, k)
+    topw = topw / (jnp.sum(topw, -1, keepdims=True) + 1e-9)
+    # position of each (token, choice) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # (g, gs, k, e)
+    pos_in_e = (jnp.cumsum(onehot.reshape(g, gs * k, e), axis=1)
+                .reshape(g, gs, k, e) - 1.0) * onehot
+    keep = (pos_in_e < cap) & (onehot > 0)
+    posq = jnp.clip(pos_in_e, 0, cap - 1).astype(jnp.int32)
+    # (g, gs, k, e, cap): each (token, choice) hits exactly one (e, slot)
+    capoh = jax.nn.one_hot(posq, cap, dtype=x.dtype) \
+        * keep.astype(x.dtype)[..., None]
+    disp = jnp.sum(capoh, axis=2)                        # (g, gs, e, cap)
+    comb = jnp.einsum("gsk,gskec->gsec", topw.astype(x.dtype), capoh)
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xt)          # (g, e, cap, d)
+    xe = logical(xe, "batch", "model", None, None)
+    we = p["experts"]
+
+    def exp_mm(t, w):
+        if weight_gather_enabled():
+            w = logical(w, "model", None, None)  # EP on E; gather FSDP dim
+        if fake_quant and mx.weights:
+            w = quantize_dequantize(w.astype(jnp.float32), fmt=mx.fmt,
+                                    mode=mx.mode, axis=1).astype(t.dtype)
+        return jnp.einsum("gecd,edf->gecf", t, w.astype(t.dtype),
+                          preferred_element_type=jnp.float32).astype(t.dtype)
+
+    h = exp_mm(xe, we["w1"])
+    gte = exp_mm(xe, we["w3"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * gte
+    w2g = logical(we["w2"], "model", None, None) \
+        if weight_gather_enabled() else we["w2"]
+    if fake_quant and mx.weights:
+        w2 = quantize_dequantize(w2g.astype(jnp.float32), fmt=mx.fmt,
+                                 mode=mx.mode, axis=1).astype(x.dtype)
+    else:
+        w2 = w2g.astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, w2,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("gsec,gecd->gsd", comb, ye).reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg, fake_quant)
+    # load-balance aux loss (Switch): e * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e) / k
+    return logical(out, "batch", None, None), aux

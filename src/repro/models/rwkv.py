@@ -1,0 +1,195 @@
+"""RWKV6 ("Finch") block — data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (d_k = d_v = 64):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          w_t in (0,1), data-dependent
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+Training/prefill uses a chunked form (chunk=16, matmul-heavy); the exponent
+factorization is kept stable by clamping log w at -5 per step (documented —
+decode uses the exact recurrence with no clamp).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import logical
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init, dtype_of, rms_norm
+
+HEAD_DIM = 64
+CHUNK = 16
+LOGW_MIN = -5.0
+DECAY_LORA = 64
+
+
+def rwkv_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    nh = d // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    dt = dtype_of(cfg)
+    return {
+        "tmix": {
+            "mu": (0.5 * jnp.ones((5, d), jnp.float32)).astype(dt),
+            "wr": dense_init(ks[0], d, d, dt),
+            "wk": dense_init(ks[1], d, d, dt),
+            "wv": dense_init(ks[2], d, d, dt),
+            "wg": dense_init(ks[3], d, d, dt),
+            "w0": jnp.full((d,), -1.5, jnp.float32),
+            "w_a": dense_init(ks[4], d, DECAY_LORA, dt),
+            "w_b": dense_init(ks[5], DECAY_LORA, d, dt),
+            "u": (jax.random.normal(ks[6], (nh, HEAD_DIM), jnp.float32)
+                  * 0.3).astype(jnp.float32),
+            "ln_w": jnp.ones((d,), dt),
+            "wo": dense_init(ks[7], d, d, dt),
+        },
+        "cmix": {
+            "mu": (0.5 * jnp.ones((2, d), jnp.float32)).astype(dt),
+            "wk": dense_init(ks[8], d, cfg.d_ff, dt),
+            "wv": dense_init(ks[9], cfg.d_ff, d, dt),
+            "wr": dense_init(ks[10], d, d, dt),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None):
+    """x_{t-1} along seq; ``prev`` is the last token of the previous segment
+    (decode), zeros otherwise."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """log w_t (<= 0), data-dependent (LoRA), clamped for chunk stability."""
+    lora = dense(jnp.tanh(dense(xw, p["w_a"]).astype(jnp.float32))
+                 .astype(xw.dtype), p["w_b"])
+    logw = -jnp.exp(p["w0"][None, None, :].astype(jnp.float32)
+                    + lora.astype(jnp.float32))
+    return jnp.clip(logw, LOGW_MIN, -1e-5)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int):
+    """Chunked RWKV6 linear attention.
+
+    r,k,v (B,S,H,D); logw (B,S,H,D) per-channel log decay; u (H,D) bonus.
+    Returns y (B,S,H,D), final state (B,H,D,D) [k-dim x v-dim].
+    """
+    b, s, h, dd = r.shape
+    nc = s // chunk
+    rc = r.reshape(b, nc, chunk, h, dd).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, h, dd).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, h, dd).astype(jnp.float32)
+    lw = logw.reshape(b, nc, chunk, h, dd)
+    lcum = jnp.cumsum(lw, axis=2)                        # inclusive
+    lexc = lcum - lw                                     # exclusive
+    # factored intra-chunk: A[t,s] = sum_d r_t e^{lexc_t} * k_s e^{-lcum_s}
+    #   valid for s < t;   |exponents| <= chunk * |LOGW_MIN| = 80 < 88 (f32)
+    r_dec = rc * jnp.exp(lexc)
+    k_dec = kc * jnp.exp(-lcum)
+    amat = jnp.einsum("bcthd,bcshd->bchts", r_dec, k_dec,
+                      preferred_element_type=jnp.float32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)    # strictly past
+    amat = amat * mask[None, None, None, :, :]
+    diag = jnp.einsum("bcthd,hd,bcthd->bcth", rc, u, kc)
+    y = jnp.einsum("bchts,bcshd->bcthd", amat, vc) \
+        + diag[..., None] * vc
+    # inter-chunk
+    lend = lcum[:, :, -1]                                # (b,c,h,d)
+    kin = kc * jnp.exp(lend[:, :, None] - lcum)           # decay s -> end
+    state_in = jnp.einsum("bcshd,bcshe->bchde", kin, vc)  # (b,c,h,dk,dv)
+
+    def step(st, inp):
+        s_in, le = inp
+        new = st * jnp.exp(le)[..., None] + s_in
+        return new, st
+
+    s0 = jnp.zeros((b, h, dd, dd), jnp.float32)
+    # unrolled for exact HLO cost accounting (see ssm.py note)
+    final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(state_in, 1, 0), jnp.moveaxis(lend, 1, 0)),
+        unroll=True if nc <= 64 else 64)
+    prev = jnp.moveaxis(prev, 0, 1)                      # (b,c,h,dk,dv)
+    y = y + jnp.einsum("bcthd,bchde->bcthe", r_dec, prev)
+    return y.reshape(b, s, h, dd), final
+
+
+def _group_norm(x: jax.Array, w: jax.Array, eps: float = 64e-5):
+    """Per-head LayerNorm on (B,S,H,D) flattened to (B,S,H*D)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, dd = x.shape
+    return (y.reshape(b, s, h * dd) * w.astype(jnp.float32)[None, None, :])
+
+
+def rwkv_time_mix(p, x: jax.Array, cfg: ModelConfig, *,
+                  prev_token=None, state=None, fake_quant: bool = False):
+    """Returns (out, (last_token, new_state)).  Full-seq when state is None
+    begins from zero state; decode passes (B,1,d) with carried state."""
+    b, s, d = x.shape
+    nh = d // HEAD_DIM
+    mxp = cfg.mx
+    xx = _token_shift(x, prev_token)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = [x + mu[i][None, None, :] * (xx - x)
+                          for i in range(5)]
+    r = dense(xr, p["wr"], mxp, fake_quant).reshape(b, s, nh, HEAD_DIM)
+    k = dense(xk, p["wk"], mxp, fake_quant).reshape(b, s, nh, HEAD_DIM)
+    v = dense(xv, p["wv"], mxp, fake_quant).reshape(b, s, nh, HEAD_DIM)
+    g = dense(xg, p["wg"], mxp, fake_quant)
+    logw = _decay(p, xw).reshape(b, s, nh, HEAD_DIM)
+    u = p["u"]
+    if s == 1 and state is not None:
+        # exact single-step recurrence
+        rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))
+        wt = jnp.exp(logw.astype(jnp.float32))[:, 0]      # (B,H,D)
+        kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+        y = jnp.einsum("bhd,bhde->bhe", rf, state + u[None, :, :, None] * kv)
+        new_state = state * wt[..., None] + kv
+        y = y[:, None]                                    # (B,1,H,Dv)
+        y = y.reshape(b, 1, nh, HEAD_DIM)
+    else:
+        chunk = min(CHUNK, s)
+        pad = (-s) % chunk
+        rp, kp, vp, lp = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          for t in (r, k, v, logw))
+        if pad:
+            lp = lp.at[:, s:].set(-1e-5)
+        y, new_state = _wkv_chunked(rp, kp, vp, lp, u, chunk)
+        y = y[:, :s]
+    y = _group_norm(y, p["ln_w"])
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, p["wo"], mxp, fake_quant, tp="row")
+    return logical(out, "batch", None, None), (x[:, -1:], new_state)
+
+
+def rwkv_channel_mix(p, x: jax.Array, cfg: ModelConfig, *,
+                     prev_token=None, fake_quant: bool = False):
+    mxp = cfg.mx
+    xx = _token_shift(x, prev_token)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0][None, None, :] * (xx - x)
+    xr = x + mu[1][None, None, :] * (xx - x)
+    k = dense(xk, p["wk"], mxp, fake_quant)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = logical(k, "batch", None, "model")
+    v = dense(k, p["wv"], mxp, fake_quant, tp="row")
+    rgate = jax.nn.sigmoid(dense(xr, p["wr"], mxp, fake_quant)
+                           .astype(jnp.float32)).astype(x.dtype)
+    return logical(v * rgate, "batch", None, None), x[:, -1:]
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int,
+                    layers_dim: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    nh = d // HEAD_DIM
+    return {
+        "tmix_state": jnp.zeros(layers_dim + (batch, nh, HEAD_DIM, HEAD_DIM),
+                                jnp.float32),
+        "tmix_prev": jnp.zeros(layers_dim + (batch, 1, d), dtype_of(cfg)),
+        "cmix_prev": jnp.zeros(layers_dim + (batch, 1, d), dtype_of(cfg)),
+    }

@@ -1,0 +1,126 @@
+"""RWKV6 decoder-only LM driver (attention-free, recurrent-state decode)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+from repro.models import layers as L
+from repro.models import rwkv
+from repro.models.config import ModelConfig
+from repro.models.decoder import padded_vocab
+
+
+def _layer_norm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _block_init(key, cfg):
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    p = rwkv.rwkv_init(key, cfg)
+    p["ln1"] = jnp.ones((d,), dt)
+    p["ln2"] = jnp.ones((d,), dt)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    vp = padded_vocab(cfg)
+    d = cfg.d_model
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[1], vp, d, dt),
+        "ln_in": jnp.ones((d,), dt),
+        "blocks": jax.vmap(lambda k: _block_init(k, cfg))(lkeys),
+        "norm_f": jnp.ones((d,), dt),
+        "lm_head": L.dense_init(ks[2], d, vp, dt),
+    }
+
+
+def _block(lp, x, cfg, *, state=None, fake_quant=False):
+    """state None -> full sequence from zero state; else decode carry."""
+    prev_t = state["tmix_prev"] if state is not None else None
+    st = state["tmix_state"] if state is not None else None
+    h = _layer_norm(x, lp["ln1"], cfg.norm_eps)
+    a, (last_t, new_st) = rwkv.rwkv_time_mix(lp["tmix"], h, cfg,
+                                             prev_token=prev_t, state=st,
+                                             fake_quant=fake_quant)
+    x = x + a
+    prev_c = state["cmix_prev"] if state is not None else None
+    h = _layer_norm(x, lp["ln2"], cfg.norm_eps)
+    c, last_c = rwkv.rwkv_channel_mix(lp["cmix"], h, cfg, prev_token=prev_c,
+                                      fake_quant=fake_quant)
+    new_state = {"tmix_state": new_st, "tmix_prev": last_t,
+                 "cmix_prev": last_c}
+    return x + c, new_state
+
+
+def forward(params, tokens, cfg: ModelConfig, *, fake_quant: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    x = logical(x, "batch", None, None)
+    x = _layer_norm(x, params["ln_in"], cfg.norm_eps)
+
+    def step(carry, lp):
+        y, _ = _block(lp, carry, cfg, fake_quant=fake_quant)
+        return y, None
+
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    x, _ = L.layer_scan(step_fn, x, params["blocks"], cfg)
+    x = _layer_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logical(logits, "batch", None, "model"), jnp.zeros((),
+                                                              jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0):
+    """max_len unused — RWKV state is O(1) in sequence length (that is the
+    point of running long_500k on this family)."""
+    return rwkv.rwkv_init_state(cfg, batch, layers_dim=(cfg.n_layers,))
+
+
+def _run(params, cache, x, cfg, fake_quant):
+    def step(carry, xs):
+        lp, st = xs
+        y, ns = _block(lp, carry, cfg, state=st, fake_quant=fake_quant)
+        return y, ns
+
+    x, new_cache = L.layer_scan(step, x, (params["blocks"], cache), cfg)
+    return x, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: int = 0,
+            fake_quant: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(L.dtype_of(cfg))
+    b = x.shape[0]
+    x = _layer_norm(x, params["ln_in"], cfg.norm_eps)
+    cache = init_cache(cfg, b)
+    x, cache = _run(params, cache, x, cfg, fake_quant)
+    x = _layer_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache, tokens.shape[1]
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig,
+                fake_quant: bool = False):
+    x = jnp.take(params["embed"], token[:, None], axis=0
+                 ).astype(L.dtype_of(cfg))
+    x = _layer_norm(x, params["ln_in"], cfg.norm_eps)
+    x, cache = _run(params, cache, x, cfg, fake_quant)
+    x = _layer_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache

@@ -1,0 +1,212 @@
+"""Mamba2 (SSD) block — chunked-scan JAX implementation (zamba2 backbone).
+
+The SSD recurrence per head h (scalar decay a_t, state S in R^{P x N}):
+    S_t = a_t * S_{t-1} + dt_t * x_t (x) B_t          a_t = exp(-softplus(A) dt_t)
+    y_t = C_t . S_t
+is evaluated in chunks: intra-chunk via a masked (C x C) decay-weighted
+attention matmul (MXU-friendly), inter-chunk via a lax.scan over chunk
+states.  Decode keeps the exact recurrence (one step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import logical
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init, dtype_of, rms_norm
+
+HEAD_DIM = 64
+CHUNK = 64
+
+
+def mamba_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // HEAD_DIM
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    return {
+        # fused in_proj: [z din | x din | B n | C n | dt nh]
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * n + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_ch),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),          # softplus -> decay
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((din,), dt),
+        "out_proj": dense_init(ks[2], din, d, dt),
+    }
+
+
+def _causal_conv_full(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(xh, bmat, cmat, la, chunk: int):
+    """Chunked SSD scan.
+
+    xh   (B,S,H,P)  dt-scaled inputs
+    bmat (B,S,N), cmat (B,S,N)  shared across heads (n_groups=1)
+    la   (B,S,H)    log decay per step (<= 0)
+    returns y (B,S,H,P), final state (B,H,P,N)
+    """
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    bc = bmat.reshape(bsz, nc, chunk, n)
+    cc = cmat.reshape(bsz, nc, chunk, n)
+    lac = la.reshape(bsz, nc, chunk, h)
+    lcum = jnp.cumsum(lac, axis=2)                       # inclusive
+    # intra-chunk: y[t] += sum_{s<=t} exp(L_t - L_s) (C_t.B_s) xh_s
+    g = jnp.einsum("bctn,bcsn->bcts", cc, bc,
+                   preferred_element_type=jnp.float32)
+    dmat = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # (b,c,t,s,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, -jnp.inf)
+    w = jnp.exp(dmat) * g[..., None]                     # (b,c,t,s,h)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w.astype(xh.dtype), xc,
+                         preferred_element_type=jnp.float32)
+    # inter-chunk state scan
+    ldec_in = lcum[:, :, -1:, :] - lcum                  # decay s -> chunk end
+    binp = jnp.einsum("bcsn,bcshp->bchpn",
+                      bc, xc * jnp.exp(ldec_in).astype(xh.dtype)[..., None],
+                      preferred_element_type=jnp.float32)  # (b,c,h,p,n)
+    lend = lcum[:, :, -1, :]                             # (b,c,h)
+
+    def step(state, inp):
+        b_in, le = inp                                   # (b,h,p,n), (b,h)
+        new = state * jnp.exp(le)[:, :, None, None] + b_in
+        return new, state                                # emit state BEFORE
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    # unrolled: the inter-chunk state update is a tiny sequential einsum
+    # chain; unrolling keeps HLO cost analysis exact (while-loop bodies are
+    # counted once by XLA) and is how a TPU would execute it anyway.  For
+    # very long sequences partial unroll bounds HLO size (the residual
+    # undercount is <0.1% of layer FLOPs — see EXPERIMENTS.md §Dry-run).
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(binp, 1, 0), jnp.moveaxis(lend, 1, 0)),
+        unroll=True if nc <= 64 else 64)
+    prev = jnp.moveaxis(prev_states, 0, 1)               # (b,c,h,p,n)
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", cc, prev.astype(xh.dtype),
+                         preferred_element_type=jnp.float32) \
+        * jnp.exp(lcum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // HEAD_DIM
+    z = zxbcdt[..., :din]
+    xs = zxbcdt[..., din: 2 * din]
+    bmat = zxbcdt[..., 2 * din: 2 * din + n]
+    cmat = zxbcdt[..., 2 * din + n: 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xs, bmat, cmat, dt
+
+
+def mamba_block(p, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[Dict] = None, fake_quant: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence (train/prefill) Mamba2 block.  If ``cache`` is given it
+    is filled with the final states (for subsequent decode)."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // HEAD_DIM
+    zxbcdt = dense(x, p["in_proj"], cfg.mx, fake_quant)
+    z, xs, bmat, cmat, dtr = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv = _causal_conv_full(conv_in, p["conv_w"].astype(x.dtype),
+                             p["conv_b"].astype(x.dtype))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = (conv[..., :din], conv[..., din:din + n],
+                      conv[..., din + n:])
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])      # (B,S,H)
+    la = -jnp.exp(p["a_log"])[None, None, :] * dtv             # log decay
+    xh = xs.reshape(b, s, nh, HEAD_DIM)
+    xh = logical(xh, "batch", None, "model", None)
+    xdt = xh * dtv[..., None].astype(x.dtype)
+    chunk = min(CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    y, final = _ssd_chunked(xdt, bmat, cmat, la, chunk)
+    y = y[:, :s]
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], cfg.mx, fake_quant, tp="row")
+    new_cache = None
+    if cache is not None:
+        conv_tail = jnp.pad(conv_in, ((0, 0), (max(0, cfg.d_conv - 1 - s), 0),
+                                      (0, 0)))[:, -(cfg.d_conv - 1):, :]
+        new_cache = {"ssm": final, "conv": conv_tail.astype(x.dtype)}
+    return logical(out, "batch", None, None), new_cache
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int,
+                     layers_dim: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // HEAD_DIM
+    return {"ssm": jnp.zeros(layers_dim + (batch, nh, HEAD_DIM, n),
+                             jnp.float32),
+            "conv": jnp.zeros(layers_dim + (batch, cfg.d_conv - 1,
+                                            din + 2 * n), dtype_of(cfg))}
+
+
+def mamba_decode(p, x: jax.Array, cfg: ModelConfig, cache: Dict,
+                 fake_quant: bool = False) -> Tuple[jax.Array, Dict]:
+    """One-token decode with the exact recurrence. x: (B,1,d)."""
+    b, s, d = x.shape
+    assert s == 1
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // HEAD_DIM
+    zxbcdt = dense(x, p["in_proj"], cfg.mx, fake_quant)
+    z, xs, bmat, cmat, dtr = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)     # (B,1,C)
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w)[:, None, :] \
+        + p["conv_b"][None, None, :].astype(x.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = (conv[..., :din], conv[..., din:din + n],
+                      conv[..., din + n:])
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])[:, 0]   # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dtv)             # (B,H)
+    xh = xs.reshape(b, nh, HEAD_DIM)
+    xdt = (xh * dtv[..., None]).astype(jnp.float32)
+    s_new = cache["ssm"] * a[:, :, None, None] \
+        + jnp.einsum("bhp,bn->bhpn", xdt, bmat[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), s_new)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], cfg.mx, fake_quant, tp="row")
+    return out, {"ssm": s_new, "conv": hist[:, 1:, :]}

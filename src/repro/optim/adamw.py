@@ -1,0 +1,108 @@
+"""AdamW with f32 master weights (params may live in bf16).
+
+State layout (every leaf mirrors the param pytree, all f32):
+    master — authoritative f32 weights
+    m, v   — moments
+Optimizer state shards follow the parameter PartitionSpecs (ZeRO-style);
+nothing here is mesh-aware — sharding is applied by the launcher via
+in_shardings on the jitted train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | wsd | const
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def wsd_schedule(cfg: AdamWConfig, step: jax.Array,
+                 decay_frac: float = 0.1) -> jax.Array:
+    """Warmup-Stable-Decay."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_start = cfg.total_steps * (1.0 - decay_frac)
+    dec = jnp.clip(1.0 - (s - decay_start)
+                   / max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+    return cfg.lr * warm * dec
+
+
+def _lr(cfg: AdamWConfig, step):
+    if cfg.schedule == "wsd":
+        return wsd_schedule(cfg, step)
+    if cfg.schedule == "const":
+        return jnp.asarray(cfg.lr, jnp.float32)
+    return cosine_schedule(cfg, step)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "master": jax.tree_util.tree_map(f32, params),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, step: jax.Array,
+                 param_dtype) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = _lr(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, mast):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        mast2 = mast - lr * (step_dir + cfg.weight_decay * mast)
+        return m2, v2, mast2
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda w: w.astype(param_dtype), new_master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"master": new_master, "m": new_m, "v": new_v}, \
+        metrics

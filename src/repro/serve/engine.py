@@ -1,0 +1,72 @@
+"""Batched serving engine: jitted prefill + decode with (optionally MX)
+KV cache.
+
+Static-batch continuous decode: requests of equal prompt length are batched,
+prefilled once, then stepped greedily (or sampled).  The KV cache layout and
+quantization policy come from the model config (cfg.mx.kv_cache /
+cfg.mx.kv_fmt) — this is the serving-side consumer of the paper's converter:
+INT8/E4M3 KV cuts decode HBM traffic ~2x vs bf16 (see the decode_32k
+roofline cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_len: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        cfg = model.cfg
+
+        def _prefill(params, batch):
+            return model.prefill(params, batch, max_len=max_len)
+
+        def _decode(params, token, cache, pos):
+            return model.decode_step(params, token, cache, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, batch: Dict[str, jax.Array],
+                 gen: GenerationConfig = GenerationConfig()
+                 ) -> np.ndarray:
+        """batch: arch input dict with equal-length prompts.
+        Returns (B, max_new_tokens) int32."""
+        logits, cache, pos = self._prefill(self.params, batch)
+        vocab = self.model.cfg.vocab
+        key = jax.random.PRNGKey(gen.seed)
+        tok = self._pick(logits[:, -1, :vocab], gen, key)
+        out = [np.asarray(tok)]
+        for i in range(gen.max_new_tokens - 1):
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.asarray(pos + i,
+                                                     dtype=jnp.int32))
+            key, sub = jax.random.split(key)
+            tok = self._pick(logits[:, -1, :vocab], gen, sub)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)
+
+    @staticmethod
+    def _pick(logits: jax.Array, gen: GenerationConfig, key) -> jax.Array:
+        if gen.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / gen.temperature, axis=-1
+        ).astype(jnp.int32)

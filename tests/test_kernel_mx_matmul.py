@@ -1,0 +1,93 @@
+"""Pallas mx_matmul kernel vs oracle across shapes/formats/modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALL_FORMATS, mx_quantize
+from repro.kernels.mx_matmul import mx_matmul_2d
+from repro.kernels.ops import mx_matmul, mx_quantize_pallas, quantize_weight
+from repro.kernels.ref import mx_matmul_2d_ref
+
+ALL_FMTS = [f.name for f in ALL_FORMATS]
+
+
+def _setup(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32) * 0.05)
+    return a, w
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_matmul_matches_ref_formats(fmt, mode):
+    a, w = _setup(32, 128, 64, seed=1)
+    mx = mx_quantize(w, fmt=fmt, mode=mode, axis=0)
+    out_k = mx_matmul_2d(a, mx.codes, mx.scales, fmt=fmt, mode=mode)
+    out_r = mx_matmul_2d_ref(a, mx.codes, mx.scales, fmt=fmt, mode=mode)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 32, 16), (64, 256, 128),
+                                   (100, 96, 72), (257, 512, 300),
+                                   (16, 1024, 16)])
+def test_matmul_matches_ref_shapes(shape):
+    m, k, n = shape
+    a, w = _setup(m, k, n, seed=2)
+    mx = mx_quantize(w, fmt="e4m3", mode="ocp", axis=0)
+    out_k = mx_matmul_2d(a, mx.codes, mx.scales, fmt="e4m3", mode="ocp")
+    out_r = mx_matmul_2d_ref(a, mx.codes, mx.scales, fmt="e4m3", mode="ocp")
+    assert out_k.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_tile_shapes_agree():
+    a, w = _setup(64, 512, 96, seed=3)
+    mx = mx_quantize(w, fmt="e5m2", mode="paper", axis=0)
+    o1 = mx_matmul_2d(a, mx.codes, mx.scales, fmt="e5m2", mode="paper",
+                      bm=32, bn=32, bk=64)
+    o2 = mx_matmul_2d(a, mx.codes, mx.scales, fmt="e5m2", mode="paper",
+                      bm=64, bn=96, bk=512)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_error_vs_exact_bounded():
+    """MX-weight matmul error vs exact f32 matmul stays within the analytic
+    per-block bound: |err| <= sum_k |a_k| * blockmax_k * 2^-R * 2."""
+    a, w = _setup(16, 256, 32, seed=4)
+    out_exact = np.asarray(a @ w)
+    for fmt, rel in [("e4m3", 0.08), ("int8", 0.02), ("e5m2", 0.3)]:
+        mx = mx_quantize(w, fmt=fmt, mode="ocp", axis=0)
+        out = np.asarray(mx_matmul_2d(a, mx.codes, mx.scales, fmt=fmt,
+                                      mode="ocp"))
+        scale = np.abs(np.asarray(a)) @ np.abs(np.asarray(w)) + 1e-6
+        assert np.max(np.abs(out - out_exact) / scale) < rel, fmt
+
+
+def test_ops_wrappers_nd():
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.normal(size=(4, 7, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(96, 40)).astype(np.float32))
+    wq = quantize_weight(w, fmt="e4m3", mode="ocp")
+    out = mx_matmul(a, wq)
+    assert out.shape == (4, 7, 40)
+    ref = a.reshape(-1, 96) @ jnp.asarray(
+        np.asarray(wq.dequantize()))
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 40),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_quant_wrapper_matches_core():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(3, 5, 160)).astype(np.float32))
+    mx_k = mx_quantize_pallas(x, fmt="e2m1", mode="paper")
+    mx_c = mx_quantize(x, fmt="e2m1", mode="paper")
+    np.testing.assert_array_equal(np.asarray(mx_k.codes),
+                                  np.asarray(mx_c.codes))
+    np.testing.assert_array_equal(np.asarray(mx_k.scales),
+                                  np.asarray(mx_c.scales))
+    np.testing.assert_array_equal(np.asarray(mx_k.dequantize()),
+                                  np.asarray(mx_c.dequantize()))

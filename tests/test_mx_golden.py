@@ -1,0 +1,101 @@
+"""Golden vectors from the paper's worked Example (Parts 1-3, §II-§III).
+
+The paper converts four FP32 inputs to E5M2:
+    V1 = 0 10101011 011...   (sign 0, E=171, mantissa 011 in top bits)
+    V2 = 0 10101000 110...
+    V3 = 0 00101011 001...
+    V4 = 1 10001111 001...
+and derives:
+    Part 1:  max(|EV_i|) = EV_1 = 10101011 (= 171)
+    Part 2:  X_temp = 171 - 15 = 156 = 0b10011100  -> X = 0x9C
+    Part 3:  P1 = 0 11110 10 = 0x7A      (EK = 30, mantissa 011 -> 10)
+             P2 = 0 11011 11 = 0x6F      (EK = 27, mantissa 110 -> 11)
+             P3 = 0 00000 00 = 0x00      (underflow -> flush to zero)
+             P4 = 1 00000 00 = 0x80      (underflow, sign preserved)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (E5M2, block_max_exponent, max_exponent_tree,
+                        mx_dequantize, mx_quantize, shared_scale)
+
+
+def fp32_from_parts(sign: int, exp: int, man23: int) -> np.float32:
+    bits = (sign << 31) | (exp << 23) | man23
+    return np.uint32(bits).view(np.float32)
+
+
+# top-3 mantissa bits per the example; remaining bits zero
+V1 = fp32_from_parts(0, 0b10101011, 0b011 << 20)
+V2 = fp32_from_parts(0, 0b10101000, 0b110 << 20)
+V3 = fp32_from_parts(0, 0b00101011, 0b001 << 20)
+V4 = fp32_from_parts(1, 0b10001111, 0b001 << 20)
+
+
+def _block():
+    x = np.zeros(32, np.float32)
+    x[:4] = [V1, V2, V3, V4]
+    return jnp.asarray(x)
+
+
+def test_part1_max_exponent_tree():
+    x = _block()
+    import repro.core.convert as C
+    _, exp, _ = C._f32_fields(x.reshape(1, 32))
+    ev = block_max_exponent(exp, exp != 0xFF)
+    assert int(ev[0]) == 0b10101011 == 171
+
+
+def test_part2_shared_scale():
+    mx = mx_quantize(_block(), fmt="e5m2", mode="paper")
+    assert int(mx.scales.reshape(-1)[0]) == 0b10011100 == 0x9C
+
+
+def test_part3_private_elements():
+    """Corrected magnitude-based rule (framework default).
+
+    P1..P3 match the paper exactly.  P4 differs: the paper's ±E sign rule
+    (an erratum — see DESIGN.md §1) flushes the representable value
+    -1.125*2^16 to -0; the corrected rule emits sign=1, EK=2, M=01.
+    """
+    mx = mx_quantize(_block(), fmt="e5m2", mode="paper")
+    codes = np.asarray(mx.codes).reshape(-1)
+    assert codes[0] == 0b01111010, f"P1: got {codes[0]:#010b}"
+    assert codes[1] == 0b01101111, f"P2: got {codes[1]:#010b}"
+    assert codes[2] == 0b00000000, f"P3: got {codes[2]:#010b}"
+    assert codes[3] == 0b10001001, f"P4: got {codes[3]:#010b}"
+
+
+def test_part3_sign_erratum_bit_exact():
+    """With sign_erratum=True we reproduce the paper's worked example
+    bit-for-bit, including P4 = 10000000 (the flushed negative)."""
+    mx = mx_quantize(_block(), fmt="e5m2", mode="paper", sign_erratum=True)
+    codes = np.asarray(mx.codes).reshape(-1)
+    assert codes[0] == 0b01111010
+    assert codes[1] == 0b01101111
+    assert codes[2] == 0b00000000
+    assert codes[3] == 0b10000000, f"P4: got {codes[3]:#010b}"
+
+
+def test_golden_dequant_values():
+    """Backward transform of the golden block: P1 = 1.5 * 2^15 * scale etc."""
+    mx = mx_quantize(_block(), fmt="e5m2", mode="paper")
+    y = np.asarray(mx_dequantize(mx)).reshape(-1)
+    scale = 2.0 ** (0x9C - 127)                      # 2^29
+    assert y[0] == pytest.approx((1 + 2 / 4) * 2.0 ** (30 - 15) * scale)
+    assert y[1] == pytest.approx((1 + 3 / 4) * 2.0 ** (27 - 15) * scale)
+    assert y[2] == 0.0
+    assert y[3] == pytest.approx(-(1 + 1 / 4) * 2.0 ** (2 - 15) * scale)
+    # relative reconstruction error of surviving elements is within one
+    # mantissa ulp of the format
+    for i, v in enumerate([float(V1), float(V2), float(V3), float(V4)]):
+        if y[i] != 0.0:
+            assert abs(y[i] - v) / abs(v) <= 2.0 ** (-E5M2.mbits)
+
+
+def test_tree_matches_plain_max():
+    rng = np.random.default_rng(0)
+    e = jnp.asarray(rng.integers(0, 255, size=(17, 32), dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(max_exponent_tree(e)), np.asarray(e).max(-1))

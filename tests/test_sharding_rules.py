@@ -1,0 +1,76 @@
+"""Unit tests for the logical sharding-rule engine (no mesh needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (current_rules, logical, make_rules,
+                                 param_specs, use_rules,
+                                 weight_gather_enabled)
+
+
+def test_make_rules_single_pod():
+    r = make_rules(("data", "model"))
+    assert r["batch"] == ("data",)
+    assert r["model"] == ("model",)
+    assert r["wgather"] is not None
+
+
+def test_make_rules_multi_pod_decode():
+    r = make_rules(("pod", "data", "model"), fsdp_params=False,
+                   seq_sharded=True)
+    assert r["batch"] == ("pod", "data")
+    assert r["seq"] == ("model",)
+    assert r["wgather"] is None
+
+
+def test_logical_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert current_rules() is None
+    y = logical(x, "batch", "model")
+    assert y is x  # identity, no constraint applied
+
+
+def test_weight_gather_toggle():
+    with use_rules(make_rules(("data", "model"), fsdp_params=False)):
+        assert not weight_gather_enabled()
+    with use_rules(make_rules(("data", "model"), fsdp_params=True)):
+        assert weight_gather_enabled()
+    assert not weight_gather_enabled()
+
+
+def test_param_specs_shapes():
+    params = {
+        "embed": jnp.zeros((1024, 64)),
+        "layers": {
+            "attn": {"wq": jnp.zeros((4, 64, 128)),
+                     "wo": jnp.zeros((4, 128, 64))},
+            "moe": {"experts": {"w1": jnp.zeros((4, 8, 64, 32))}},
+            "ln1": jnp.zeros((4, 64)),
+        },
+        "lm_head": jnp.zeros((64, 1024)),
+    }
+    specs = param_specs(params)
+    assert specs["embed"] == P("model", "data")
+    # stacked layer weights: leading scan dim unsharded
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", "data")
+    assert specs["layers"]["moe"]["experts"]["w1"] == \
+        P(None, "model", "data", None)
+    # rank-1 (after scan dim): replicated
+    assert specs["layers"]["ln1"] == P(None, None)
+    # lm_head: default col-parallel (not the embed rule)
+    assert specs["lm_head"] == P("data", "model")
+
+
+def test_validated_divisibility():
+    from repro.launch.cells import _validated
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = _validated(P("data", "model"), (50, 64), FakeMesh())
+    assert spec == P(None, "model")   # 50 % 16 != 0 -> dropped
+    spec = _validated(P(("pod", "data"), None), (64, 3), FakeMesh())
+    assert spec[1] is None
