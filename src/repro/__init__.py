@@ -1,0 +1,5 @@
+"""repro — FP32->MX conversion (arXiv:2411.03149) grown into a sharded
+jax_pallas training/serving system.  Subpackages: core (the converter),
+kernels (Pallas), dist (sharding rules), models, train, serve, launch."""
+
+__version__ = "0.1.0"

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import formats as F
 from repro.core.convert import MXArray, mx_dequantize, mx_quantize
+from repro.dist import compat
 
 AxisNames = Sequence[str]
 
@@ -35,7 +36,7 @@ def mx_allreduce_mean(g: jax.Array, axis_names: AxisNames,
     names = tuple(axis_names)
     n = 1
     for a in names:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
     if n == 1:
         return g
     shape = g.shape
@@ -47,7 +48,7 @@ def mx_allreduce_mean(g: jax.Array, axis_names: AxisNames,
     # each step leaves this device with a 1/k shard of the partial sums
     x = flat
     for a in names:
-        k = jax.lax.axis_size(a)
+        k = compat.axis_size(a)
         x = jax.lax.psum_scatter(x.reshape(k, -1), a,
                                  scatter_dimension=0, tiled=False)
     shard = x.reshape(-1) / n

@@ -1,0 +1,178 @@
+"""Version-compatibility layer over the jax sharding surface.
+
+The codebase (and the test-suite) is written against the modern spellings —
+``jax.set_mesh``, ``jax.shard_map(..., axis_names=..., check_vma=...)``,
+``jax.sharding.get_abstract_mesh()`` — which live elsewhere (or not at all)
+on the jax 0.4.x wheels in this container:
+
+  * ``shard_map`` is ``jax.experimental.shard_map.shard_map`` with the
+    inverse parameterization: ``auto`` (axes left to GSPMD) instead of
+    ``axis_names`` (axes made manual), ``check_rep`` instead of
+    ``check_vma``.
+  * there is no global mesh setter; the 0.4.x equivalent is the
+    ``Mesh.__enter__`` resource-env context manager.
+  * ``jax.lax.axis_size`` does not exist; inside a shard_map body the
+    static axis size is recovered with ``jax.lax.psum(1, name)``.
+
+``install()`` (run on import) adds the missing top-level names so one
+spelling works across versions; each shim is only installed when the real
+thing is absent, so upgrading jax silently switches to the native API.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+# Native entry points, captured BEFORE install() patches anything: None on
+# 0.4.x, the real functions on modern jax.
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+_NATIVE_SET_MESH = getattr(jax, "set_mesh", None)
+_NATIVE_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None)
+
+_state = threading.local()
+
+
+def _mesh_stack():
+    stack = getattr(_state, "meshes", None)
+    if stack is None:
+        stack = _state.meshes = []
+    return stack
+
+
+def _resource_env_mesh():
+    """The 0.4.x ``with mesh:`` resource-env mesh, or None."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def current_mesh():
+    """The innermost ambient mesh, else None.  A concrete Mesh on 0.4.x
+    (from our ``set_mesh`` shim or a bare ``with mesh:`` context); on
+    modern jax, whatever the native ``jax.set_mesh`` installed (an
+    AbstractMesh — still carries axis_names/shape for rule resolution)."""
+    stack = _mesh_stack()
+    if stack:
+        return stack[-1]
+    if _NATIVE_GET_ABSTRACT_MESH is not None:
+        m = _NATIVE_GET_ABSTRACT_MESH()
+        if m is not None and not m.empty:
+            return m
+    return _resource_env_mesh()
+
+
+class _SetMeshContext:
+    """Matches modern ``jax.set_mesh`` calling semantics: a plain call
+    installs the mesh immediately (global set); used as a context manager
+    it additionally restores the previous state on exit."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        _mesh_stack().append(mesh)
+        mesh.__enter__()                 # 0.4.x resource-env (bare-P specs)
+
+    def __enter__(self):
+        return self.mesh
+
+    def __exit__(self, *exc):
+        self.mesh.__exit__(*exc)
+        _mesh_stack().pop()
+        return False
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` stand-in; delegates to the native setter when jax
+    ships one."""
+    if _NATIVE_SET_MESH is not None:
+        return _NATIVE_SET_MESH(mesh)
+    return _SetMeshContext(mesh)
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` equivalent (native-aware via
+    ``current_mesh``).  Returns the ambient mesh or None; callers test
+    ``mesh is None or mesh.empty``."""
+    return current_mesh()
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              axis_names=None, check_vma=True, auto=None, check_rep=None):
+    """Modern ``jax.shard_map`` signature, dispatching to the native
+    implementation when jax ships one and otherwise mapped onto the 0.4.x
+    experimental API: ``axis_names`` (manual axes) becomes
+    ``auto = mesh.axes - axis_names``; ``check_vma`` becomes ``check_rep``.
+    """
+    rep = check_vma if check_rep is None else check_rep
+    if _NATIVE_SHARD_MAP is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        elif auto is not None:
+            kw["axis_names"] = set(mesh.axis_names) - set(auto)
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=bool(rep),
+                                 **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    # 0.4.x: partial-auto + lax.scan fatally crashes the SPMD partitioner,
+    # so every axis goes manual here; axes the caller wanted automatic
+    # carry replicated compute (their in/out_specs never mention them, so
+    # the specs stay valid).
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=bool(rep), auto=frozenset())
+
+
+def axis_size(name) -> int:
+    """Static size of a manual mesh axis from inside a shard_map body."""
+    ax = getattr(jax.lax, "axis_size", None)
+    if ax is not None:
+        return ax(name)
+    return jax.lax.psum(1, name)         # concrete int at trace time
+
+
+def constrain(x, spec, mesh=None):
+    """with_sharding_constraint against the ambient mesh.  With a concrete
+    mesh the spec is bound via NamedSharding (no context needed); with an
+    abstract mesh (newer jax) the bare spec is passed through."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return x
+    if isinstance(mesh, jax.sharding.Mesh):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def install() -> None:
+    """Install missing top-level names onto jax (no-ops on new jax)."""
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+    # 0.4.x Compiled.cost_analysis returns a per-device *list* of dicts;
+    # the modern API returns the single dict callers expect
+    try:
+        from jax._src.stages import Compiled
+        orig = Compiled.cost_analysis
+        if not getattr(orig, "_repro_normalized", False):
+            def cost_analysis(self, _orig=orig):
+                out = _orig(self)
+                if isinstance(out, list):
+                    return out[0] if out else {}
+                return out
+            cost_analysis._repro_normalized = True
+            Compiled.cost_analysis = cost_analysis
+    except Exception:
+        pass
+
+
+install()

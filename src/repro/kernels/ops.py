@@ -72,14 +72,15 @@ def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
     falls back to dense attention).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
     from repro.dist.sharding import current_rules
     from repro.kernels.flash_attn import flash_attention
 
     rules = current_rules()
     if rules is None:
         return flash_attention(q, k, v, causal, INTERPRET)
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None or mesh.empty or not rules.get("model"):
         return flash_attention(q, k, v, causal, INTERPRET)
     model_ax = rules["model"][0]
     batch_axes = rules.get("batch")
@@ -102,10 +103,10 @@ def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
         return flash_attention(ql, ke, ve, causal, INTERPRET)
 
     manual = set(a for a in ((batch_axes or ()) + (model_ax,)))
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(qspec, kvspec, kvspec),
-                         out_specs=qspec, check_vma=False,
-                         axis_names=manual)(q, k, v)
+    return compat.shard_map(body, mesh=mesh,
+                            in_specs=(qspec, kvspec, kvspec),
+                            out_specs=qspec, check_vma=False,
+                            axis_names=manual)(q, k, v)
 
 
 def _prod(it):
@@ -121,6 +122,7 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
     the local batch by shard_map.  Returns (B, 1, Hq, D) or None if the
     cache layout is unsupported (caller falls back to dequant + dense)."""
     from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
     from repro.dist.sharding import current_rules
     from repro.kernels.mx_decode_attn import mx_decode_attention
 
@@ -140,7 +142,7 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
     rules = current_rules()
     if rules is None:
         return call(q, kc, ks, vc, vs, pos)
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return call(q, kc, ks, vc, vs, pos)
     ba = rules.get("kv_batch") or ("data",)
@@ -148,7 +150,8 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
     if q.shape[0] % _prod(mesh.shape[a] for a in ba):
         return None
     bspec = P(ba, None, None, None)
-    return jax.shard_map(call, mesh=mesh,
-                         in_specs=(bspec, bspec, bspec, bspec, bspec, P()),
-                         out_specs=bspec, check_vma=False,
-                         axis_names=set(ba))(q, kc, ks, vc, vs, pos)
+    return compat.shard_map(call, mesh=mesh,
+                            in_specs=(bspec, bspec, bspec, bspec, bspec,
+                                      P()),
+                            out_specs=bspec, check_vma=False,
+                            axis_names=set(ba))(q, kc, ks, vc, vs, pos)

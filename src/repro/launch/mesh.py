@@ -20,5 +20,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(ndev: int = 8):
-    """Small mesh for CI-scale dry-run tests (subprocess with 8 devices)."""
-    return jax.make_mesh((ndev // 4, 4), ("data", "model"))
+    """Small mesh for CI-scale dry-run tests (subprocess with 8 devices).
+    Degrades to a thinner "model" axis when fewer devices are available
+    (ndev=1 -> 1x1) instead of building an impossible (0, 4) mesh."""
+    model = next(m for m in (4, 2, 1) if ndev % m == 0)
+    return jax.make_mesh((ndev // model, model), ("data", "model"))

@@ -21,10 +21,18 @@ def main() -> None:
     ap.add_argument("--mx-kv", choices=["off", "int8", "e4m3", "e5m2"],
                     default="off")
     ap.add_argument("--mx-mode", choices=["paper", "ocp"], default="ocp")
+    ap.add_argument("--shard", action="store_true",
+                    help="serve under a (data, model) mesh with the decode "
+                         "sharding rules (needs >1 device)")
     args = ap.parse_args()
+
+    import contextlib
 
     import jax
 
+    from repro.dist import compat
+    from repro.dist.sharding import make_rules
+    from repro.launch.mesh import make_test_mesh
     from repro.models import Model, load_config, load_reduced, \
         make_concrete_batch
     from repro.models.config import MXPolicy
@@ -39,16 +47,26 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     batch = make_concrete_batch(cfg, args.batch, args.prompt_len)
     batch.pop("labels", None)
+    rules = None
+    mesh_ctx = contextlib.nullcontext()
+    if args.shard:
+        mesh = make_test_mesh(jax.device_count())
+        # decode posture: weights stay resident (no per-token ZeRO-3 gather)
+        rules = make_rules(mesh.axis_names, fsdp_params=False)
+        mesh_ctx = compat.set_mesh(mesh)
+        print(f"[serve] sharded over mesh {dict(mesh.shape)}")
     eng = ServeEngine(model, params,
-                      max_len=args.prompt_len + args.new_tokens + 8)
+                      max_len=args.prompt_len + args.new_tokens + 8,
+                      rules=rules)
     gen = GenerationConfig(max_new_tokens=args.new_tokens,
                            temperature=args.temperature)
-    t0 = time.perf_counter()
-    out = eng.generate(batch, gen)       # includes compile
-    t_first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = eng.generate(batch, gen)
-    t_steady = time.perf_counter() - t0
+    with mesh_ctx:
+        t0 = time.perf_counter()
+        out = eng.generate(batch, gen)       # includes compile
+        t_first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = eng.generate(batch, gen)
+        t_steady = time.perf_counter() - t0
     toks = out.size
     print(f"[serve] {cfg.name} mx_kv={args.mx_kv}: generated {toks} tokens; "
           f"first {t_first:.2f}s (incl. compile), steady {t_steady:.2f}s "

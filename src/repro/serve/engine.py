@@ -10,14 +10,16 @@ roofline cells).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import use_rules
 from repro.models.registry import Model
 
 
@@ -29,17 +31,28 @@ class GenerationConfig:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, max_len: int):
+    def __init__(self, model: Model, params, max_len: int,
+                 rules: Optional[Dict[str, Any]] = None):
+        """``rules`` (from repro.dist.sharding.make_rules, decode posture:
+        fsdp_params=False) installs the logical sharding constraints inside
+        the jitted prefill/decode; None serves single-device."""
         self.model = model
         self.params = params
         self.max_len = max_len
-        cfg = model.cfg
+        self.rules = rules      # introspection only; already traced into
+        cfg = model.cfg         # the jit closures below
+
+        def _ctx():
+            return use_rules(rules) if rules is not None \
+                else contextlib.nullcontext()
 
         def _prefill(params, batch):
-            return model.prefill(params, batch, max_len=max_len)
+            with _ctx():
+                return model.prefill(params, batch, max_len=max_len)
 
         def _decode(params, token, cache, pos):
-            return model.decode_step(params, token, cache, pos)
+            with _ctx():
+                return model.decode_step(params, token, cache, pos)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)

@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the repro test-suite."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute subprocess compile tests (deselect with "
+        "-m 'not slow')")

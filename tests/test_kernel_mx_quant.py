@@ -16,10 +16,14 @@ SHAPES = [(1, 32), (4, 64), (8, 512), (3, 96), (130, 1024), (257, 160)]
 def _rand(shape, dtype, seed=0, scale=4.0):
     rng = np.random.default_rng(seed)
     x = rng.normal(scale=scale, size=shape).astype(np.float32)
-    # sprinkle exact zeros and tiny/huge values
+    # sprinkle exact zeros and tiny/huge values; "huge" stays within the
+    # target dtype's finite range (casting overflowing f32 to float16
+    # emits RuntimeWarning and turns the values into inf)
     x.flat[:: 7] = 0.0
     x.flat[1:: 13] *= 1e-20
     x.flat[2:: 17] *= 1e20
+    lim = float(jnp.finfo(dtype).max) * 0.9
+    np.clip(x, -lim, lim, out=x)
     return jnp.asarray(x, dtype=dtype)
 
 

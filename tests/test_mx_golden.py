@@ -17,8 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (E5M2, block_max_exponent, max_exponent_tree,
-                        mx_dequantize, mx_quantize, shared_scale)
+from repro.core import (ALL_FORMATS, E5M2, SCALE_INF, SCALE_NAN,
+                        block_max_exponent, max_exponent_tree, mx_dequantize,
+                        mx_quantize, shared_scale)
+
+ALL_FMTS = [f.name for f in ALL_FORMATS]
 
 
 def fp32_from_parts(sign: int, exp: int, man23: int) -> np.float32:
@@ -92,6 +95,58 @@ def test_golden_dequant_values():
     for i, v in enumerate([float(V1), float(V2), float(V3), float(V4)]):
         if y[i] != 0.0:
             assert abs(y[i] - v) / abs(v) <= 2.0 ** (-E5M2.mbits)
+
+
+# =============================================================================
+# scale special markers (paper §II: X=0xFF NaN block, X=0xFE Inf block)
+# =============================================================================
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_nan_block_marker(fmt, mode):
+    """A block containing NaN gets the X=0xFF marker scale and dequantizes
+    to NaN everywhere (paper: marker poisons the block; ocp: NaN scale)."""
+    x = np.linspace(-4.0, 4.0, 32).astype(np.float32)
+    x[5] = np.nan
+    mx = mx_quantize(jnp.asarray(x), fmt=fmt, mode=mode)
+    assert int(np.asarray(mx.scales).reshape(-1)[0]) == SCALE_NAN == 0xFF
+    y = np.asarray(mx_dequantize(mx))
+    assert np.isnan(y).all(), (fmt, mode)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_inf_block_marker(fmt, mode):
+    """±Inf (and no NaN) in a block: paper mode emits the X=0xFE marker and
+    dequantizes to ±Inf with each element's own sign; ocp mode folds Inf
+    into the NaN scale (the OCP spec has no Inf marker)."""
+    x = np.linspace(-4.0, 4.0, 32).astype(np.float32)
+    x[3] = np.inf
+    x[7] = -np.inf
+    mx = mx_quantize(jnp.asarray(x), fmt=fmt, mode=mode)
+    scale = int(np.asarray(mx.scales).reshape(-1)[0])
+    y = np.asarray(mx_dequantize(mx))
+    if mode == "paper":
+        assert scale == SCALE_INF == 0xFE, (fmt, hex(scale))
+        assert np.isinf(y).all(), (fmt, mode)
+        # element signs survive the marker codes
+        assert y[3] == np.inf and y[7] == -np.inf
+        assert (np.signbit(y) == np.signbit(x)).all()
+    else:
+        assert scale == SCALE_NAN == 0xFF, (fmt, hex(scale))
+        assert np.isnan(y).all(), (fmt, mode)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_all_zero_block(fmt, mode):
+    """An all-zero block: EV_max = 0 so X clamps to 0, every element code
+    is zero, and the round trip is exact."""
+    x = np.zeros(32, np.float32)
+    mx = mx_quantize(jnp.asarray(x), fmt=fmt, mode=mode)
+    assert int(np.asarray(mx.scales).reshape(-1)[0]) == 0
+    assert (np.asarray(mx.codes) == 0).all(), (fmt, mode)
+    y = np.asarray(mx_dequantize(mx))
+    np.testing.assert_array_equal(y, x)
 
 
 def test_tree_matches_plain_max():

@@ -2,6 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e '.[test]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ALL_FORMATS, get_format, mx_dequantize, mx_quantize,
