@@ -1,0 +1,144 @@
+"""Continuous-batching serving throughput over the paged MX KV cache.
+
+Serves the same request trace through ``ContinuousBatchingEngine`` under
+several cache configurations (fp32 vs MX INT8/E4M3 pages) and batch mixes
+(uniform vs mixed prompt lengths), and emits both the harness CSV rows and
+a machine-readable ``BENCH_serve.json``:
+
+    {"schema": "bench_serve/v1", "arch": ..., "page_size": ...,
+     "max_slots": ..., "new_tokens": ...,
+     "configs": [{"cache": "mx-int8", "kv_fmt": "int8", "mode": "ocp",
+                  "mix": "mixed", "requests": N, "prompt_tokens": ...,
+                  "generated_tokens": ..., "decode_steps": ...,
+                  "wall_s": ..., "tokens_per_s": ...,
+                  "kv_pool_bytes": ...}, ...]}
+
+Wall times are CPU-container numbers (correctness path — Pallas interpret
+mode when attn_impl=flash); the relative fp32-vs-MX pool bytes and the
+schedule shape (decode steps vs request count) are the portable signals.
+Validate with ``python benchmarks/validate_bench_serve.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+ARCH = "chatglm3_6b"
+CACHE_CONFIGS = (
+    ("fp32", None),          # dense pages in the compute dtype (reduced=f32)
+    ("mx-int8", "int8"),
+    ("mx-e4m3", "e4m3"),
+)
+MIXES = ("uniform", "mixed")
+
+
+def _pool_bytes(pool) -> int:
+    import jax
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(pool)))
+
+
+def _prompt_lens(mix: str, n_req: int, base: int,
+                 rng: np.random.Generator) -> np.ndarray:
+    if mix == "uniform":
+        return np.full(n_req, base)
+    return rng.integers(max(2, base // 3), 2 * base, size=n_req)
+
+
+def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
+        ) -> List[Tuple[str, float, str]]:
+    import jax
+
+    from repro.models import Model, load_reduced
+    from repro.models.config import MXPolicy
+    from repro.serve import ContinuousBatchingEngine, GenerationConfig
+
+    # toy sizes: the CPU container measures the schedule, not the silicon
+    max_slots = 4 if smoke else 8
+    page_size = 8 if smoke else 16
+    n_req = 8 if smoke else 24
+    base_len = 10 if smoke else 48
+    new_tokens = 6 if smoke else 24
+
+    rows: List[Tuple[str, float, str]] = []
+    configs = []
+    for cache_name, kv_fmt in CACHE_CONFIGS:
+        over = {}
+        if kv_fmt is not None:
+            over["mx"] = MXPolicy(mode="ocp", kv_cache=True, kv_fmt=kv_fmt)
+        cfg = load_reduced(ARCH, **over)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        for mix in MIXES:
+            rng = np.random.default_rng(0)
+            lens = _prompt_lens(mix, n_req, base_len, rng)
+            max_len = int(lens.max()) + new_tokens + 1
+            prompts = [rng.integers(0, cfg.vocab, size=int(n)
+                                    ).astype(np.int32) for n in lens]
+
+            eng = ContinuousBatchingEngine(
+                model, params, max_slots=max_slots,
+                page_size=page_size, max_len=max_len,
+                gen=GenerationConfig(max_new_tokens=new_tokens))
+
+            def serve():
+                for p in prompts:
+                    eng.add_request(p, new_tokens)
+                steps0 = eng.n_steps
+                t0 = time.perf_counter()
+                out = eng.run()
+                return out, time.perf_counter() - t0, eng.n_steps - steps0
+
+            serve()       # reusing the engine keeps its jitted closures
+            out, dt, steps = serve()   # warm -> this run is steady-state
+            toks = sum(len(v) for v in out.values())
+            tps = toks / dt
+            name = f"serve_{cache_name}_{mix}"
+            rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
+            configs.append({
+                "cache": cache_name,
+                "kv_fmt": kv_fmt,
+                "mode": "ocp" if kv_fmt else None,
+                "mix": mix,
+                "requests": int(n_req),
+                "prompt_tokens": int(lens.sum()),
+                "generated_tokens": int(toks),
+                "decode_steps": int(steps),
+                "wall_s": float(dt),
+                "tokens_per_s": float(tps),
+                "kv_pool_bytes": _pool_bytes(eng.pool),
+            })
+
+    doc = {
+        "schema": "bench_serve/v1",
+        "arch": f"{ARCH}-reduced",
+        "page_size": int(page_size),
+        "max_slots": int(max_slots),
+        "new_tokens": int(new_tokens),
+        "configs": configs,
+    }
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (CI bench-smoke job)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=not args.full, out_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,32 +3,45 @@
 Prints ``name,us_per_call,derived`` CSV.  Wall times are CPU-container
 numbers (correctness path); the TPU performance story lives in the roofline
 artifacts (EXPERIMENTS.md §Roofline / §Perf).
+
+Per-module failures don't abort the sweep: every module runs, the failures
+are summarized at the end, and the harness exits nonzero if any failed.
 """
 from __future__ import annotations
 
 import sys
+import traceback
 
 
 def main() -> None:
     from benchmarks import (bench_collective, bench_convert, bench_matmul,
-                            bench_quant_error, bench_roofline)
+                            bench_quant_error, bench_roofline, bench_serve)
     mods = {
         "convert (Table VIII analog)": bench_convert,
         "quant error (Tables III-VII analog)": bench_quant_error,
         "mx matmul": bench_matmul,
         "grad collective compression": bench_collective,
         "roofline (dry-run artifacts)": bench_roofline,
+        "paged-KV continuous batching": bench_serve,
     }
     print("name,us_per_call,derived")
+    failures = []
     for title, mod in mods.items():
         print(f"# --- {title} ---")
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")
-        except Exception as e:     # keep the harness green per-module
+        except Exception as e:
             print(f"# {title} FAILED: {type(e).__name__}: {e}",
                   file=sys.stderr)
-            raise
+            traceback.print_exc(file=sys.stderr)
+            failures.append((title, f"{type(e).__name__}: {e}"))
+    if failures:
+        print(f"# {len(failures)}/{len(mods)} modules FAILED:",
+              file=sys.stderr)
+        for title, err in failures:
+            print(f"#   {title}: {err}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

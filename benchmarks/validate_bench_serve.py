@@ -1,0 +1,101 @@
+"""Validate BENCH_serve.json against the bench_serve/v1 schema (dep-free).
+
+    python benchmarks/validate_bench_serve.py [BENCH_serve.json]
+
+Exits nonzero with a per-field report on mismatch; used by the CI
+bench-smoke job so the emitted artifact can't silently drift from the
+schema documented in README §Continuous batching & paged KV.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+TOP_FIELDS = {
+    "schema": str,
+    "arch": str,
+    "page_size": int,
+    "max_slots": int,
+    "new_tokens": int,
+    "configs": list,
+}
+CONFIG_FIELDS = {
+    "cache": str,
+    "kv_fmt": (str, type(None)),
+    "mode": (str, type(None)),
+    "mix": str,
+    "requests": int,
+    "prompt_tokens": int,
+    "generated_tokens": int,
+    "decode_steps": int,
+    "wall_s": float,
+    "tokens_per_s": float,
+    "kv_pool_bytes": int,
+}
+KNOWN_CACHES = {"fp32", "mx-int8", "mx-e4m3", "mx-e5m2", "mx-e3m2",
+                "mx-e2m3", "mx-e2m1"}
+KNOWN_MIXES = {"uniform", "mixed"}
+
+
+def check(doc) -> list:
+    errs = []
+    for field, ty in TOP_FIELDS.items():
+        if field not in doc:
+            errs.append(f"missing top-level field {field!r}")
+        elif not isinstance(doc[field], ty):
+            errs.append(f"{field!r}: expected {ty.__name__}, "
+                        f"got {type(doc[field]).__name__}")
+    if errs:
+        return errs
+    if doc["schema"] != "bench_serve/v1":
+        errs.append(f"schema: expected 'bench_serve/v1', "
+                    f"got {doc['schema']!r}")
+    if len(doc["configs"]) < 2:
+        errs.append("configs: need >= 2 cache configurations")
+    for i, c in enumerate(doc["configs"]):
+        before = len(errs)
+        for field, ty in CONFIG_FIELDS.items():
+            if field not in c:
+                errs.append(f"configs[{i}]: missing field {field!r}")
+            elif not isinstance(c[field], ty):
+                tn = ty.__name__ if isinstance(ty, type) else \
+                    "/".join(t.__name__ for t in ty)
+                errs.append(f"configs[{i}].{field}: expected {tn}, "
+                            f"got {type(c[field]).__name__}")
+        if len(errs) == before:          # this config's fields are sound
+            if c["cache"] not in KNOWN_CACHES:
+                errs.append(f"configs[{i}].cache: unknown {c['cache']!r}")
+            if c["mix"] not in KNOWN_MIXES:
+                errs.append(f"configs[{i}].mix: unknown {c['mix']!r}")
+            if c["tokens_per_s"] <= 0 or c["wall_s"] <= 0:
+                errs.append(f"configs[{i}]: non-positive throughput")
+            if c["generated_tokens"] <= 0 or c["kv_pool_bytes"] <= 0:
+                errs.append(f"configs[{i}]: non-positive token/byte counts")
+    caches = {c.get("cache") for c in doc["configs"]}
+    if len(caches) < 2:
+        errs.append(f"configs: need >= 2 distinct cache types, got {caches}")
+    return errs
+
+
+def main() -> None:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}", file=sys.stderr)
+        sys.exit(1)
+    errs = check(doc)
+    if errs:
+        print(f"{path}: {len(errs)} schema violation(s):", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    caches = sorted({c["cache"] for c in doc["configs"]})
+    print(f"{path}: valid bench_serve/v1 ({len(doc['configs'])} configs, "
+          f"caches={caches})")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,7 +64,8 @@ def _stack():
 # =============================================================================
 def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
                seq_sharded: bool = False, bf16_matmul_out: bool = False,
-               pure_fsdp: bool = False) -> Rules:
+               pure_fsdp: bool = False,
+               paged_pool_sharded: bool = False) -> Rules:
     """Build a logical->physical rule table for a mesh with ``axes``.
 
     ``fsdp_params``    — enable use-point weight gathering (ZeRO-3); decode
@@ -74,6 +75,11 @@ def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
     ``bf16_matmul_out``— matmuls emit bf16 (halves TP all-reduce payloads).
     ``pure_fsdp``      — gather the *whole* weight per layer (no dim left
                          TP-sharded); for narrow TP-unfriendly archs.
+    ``paged_pool_sharded`` — shard the paged-KV page pool's page dim over
+                         the data axes (spreads pool HBM across DP ranks at
+                         the cost of a block-table gather per decode step);
+                         default False replicates the pool so any slot can
+                         reference any physical page locally.
     """
     axes = tuple(axes)
     batch = tuple(a for a in DP_AXES if a in axes)
@@ -86,6 +92,7 @@ def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
         "kv_batch": batch,
         "model": model,
         "seq": model if seq_sharded else None,
+        "kv_pages": batch if paged_pool_sharded else None,
         "wgather": wgather,
         "wgather_mode": "full" if pure_fsdp else "col",
         "bf16_matmul_out": bool(bf16_matmul_out),

@@ -12,6 +12,15 @@ Grid (B, Hq, nk); per step:
     ks/vs_ref    (1, blk_k, 1, D/32)    u8 E8M0 scales
     mask_ref     (1, blk_k)       valid-position mask (pos-dependent)
     scratch      acc (1, D) f32, m/l (1,) f32
+
+``mx_paged_decode_attention`` is the continuous-batching variant: K/V live
+in a shared page pool (pages of ``page_size`` tokens, sub-byte codes
+bit-packed via repro.core.pack) and each slot's logical sequence is the
+concatenation of the pages named by its block-table row.  The block table
+and per-slot lengths ride in as scalar-prefetch operands so the BlockSpec
+index maps can translate (slot, page-step) -> physical page before the DMA
+is issued — the gather happens at the HBM->VMEM boundary and HBM traffic
+stays at the quantized cache, exactly as in the contiguous kernel.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.convert import decode_elements, scale_to_f32
 from repro.core.formats import get_format
+from repro.core.pack import packed_nbytes, unpack_codes
 from repro.kernels import accounting
 
 DEFAULT_BLK_K = 512
@@ -40,6 +50,13 @@ def _dequant_block(codes, scales, fmt, mode):
     sfac = scale_to_f32(scales)                     # (blk_k, D/32)
     w = elem.reshape(blk, d // 32, 32) * sfac[:, :, None]
     return w.reshape(blk, d)
+
+
+def _dequant_packed_block(codes, scales, fmt, mode, d):
+    """(blk, CB) packed u8 + (blk, D/32) u8 -> (blk, D) f32.  Unpacks the
+    bit-packed sub-byte codes in VMEM (identity for 8-bit formats), then
+    dequantizes like the contiguous path."""
+    return _dequant_block(unpack_codes(codes, fmt, d), scales, fmt, mode)
 
 
 def _decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, o_ref,
@@ -123,6 +140,115 @@ def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
     # analytic cost: dequant+dot over the full cache per query
     flops = 4.0 * b * hq * s * d + 10.0 * b * hq * s * d  # dots + dequant
     io = (k_codes.size + v_codes.size + k_scales.size + v_scales.size
+          + q.size * q.dtype.itemsize * 2)
+    accounting.record(flops, io)
+    return out.transpose(0, 2, 1, 3)                       # (B, 1, Hq, D)
+
+
+# =============================================================================
+# Paged variant (continuous batching)
+# =============================================================================
+def _paged_kernel(bt_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  o_ref, acc, mrow, lrow, *, fmt: str, mode: str, d: int,
+                  page: int, np_max: int):
+    bb = pl.program_id(0)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mrow[...] = jnp.full_like(mrow, NEG_INF)
+        lrow[...] = jnp.zeros_like(lrow)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (1, D)
+    k = _dequant_packed_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                              fmt, mode, d)
+    v = _dequant_packed_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                              fmt, mode, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) \
+        / np.sqrt(d)                                       # (1, page)
+    pos = jk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos <= len_ref[bb]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = mrow[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    lrow[...] = lrow[...] * alpha + jnp.sum(p, axis=-1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    mrow[...] = m_new
+
+    @pl.when(jk == np_max - 1)
+    def _done():
+        denom = jnp.where(lrow[...] == 0.0, 1.0, lrow[...])
+        o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "rep",
+                                             "interpret"))
+def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
+                              ks_pool: jax.Array, vc_pool: jax.Array,
+                              vs_pool: jax.Array, block_tables: jax.Array,
+                              lengths: jax.Array, *, fmt: str = "int8",
+                              mode: str = "ocp", rep: int = 1,
+                              interpret: bool = True) -> jax.Array:
+    """Decode attention over a paged MX KV cache.
+
+    q             (B, 1, Hq, D)
+    kc/vc_pool    (n_pages, page, Hkv, CB) u8 — CB = packed code bytes per
+                  token-head (== D for 8-bit formats; bit-packed below that)
+    ks/vs_pool    (n_pages, page, Hkv, D/32) u8 E8M0 scales
+    block_tables  (B, max_pages) i32 physical page per (slot, logical page);
+                  rows padded with 0 (a reserved trash page) past the slot's
+                  allocation — those positions are masked by ``lengths``.
+    lengths       (B,) i32 — slot b attends to logical positions <= lengths[b]
+
+    Returns (B, 1, Hq, D).  The block table and lengths are scalar-prefetch
+    operands: index maps resolve the physical page before the page's DMA.
+    """
+    b, _, hq, d = q.shape
+    n_pages, page, hkv, cb = kc_pool.shape
+    np_max = block_tables.shape[1]
+    assert cb == packed_nbytes(fmt, d), (cb, fmt, d)
+    nbl = d // 32
+    qt = q[:, 0][:, :, None, :]                            # (B, Hq, 1, D)
+    kernel = functools.partial(_paged_kernel, fmt=fmt, mode=mode, d=d,
+                               page=page, np_max=np_max)
+
+    def page_map(bb, h, j, bt, ln, rep=rep):
+        return (bt[bb, j], 0, h // rep, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, np_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, cb), page_map),
+            pl.BlockSpec((1, page, 1, nbl), page_map),
+            pl.BlockSpec((1, page, 1, cb), page_map),
+            pl.BlockSpec((1, page, 1, nbl), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qt, kc_pool, ks_pool, vc_pool, vs_pool)
+    # analytic cost: the gathered pages (quantized bytes), not the pool
+    s = np_max * page
+    flops = 4.0 * b * hq * s * d + 10.0 * b * hq * s * d
+    io = (b * s * hkv * (2 * cb + 2 * nbl)
           + q.size * q.dtype.itemsize * 2)
     accounting.record(flops, io)
     return out.transpose(0, 2, 1, 3)                       # (B, 1, Hq, D)

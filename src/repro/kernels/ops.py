@@ -155,3 +155,57 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
                                       P()),
                             out_specs=bspec, check_vma=False,
                             axis_names=set(ba))(q, kc, ks, vc, vs, pos)
+
+
+def mx_paged_decode_attention_ctx(q: jax.Array, pool: dict,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array, cfg):
+    """Sharded wrapper for the paged MX decode-attention kernel.
+
+    Slots (the batch dim of q / block tables / lengths) shard over the
+    "kv_batch" axes; the page pool follows the "kv_pages" rule — None
+    (default) replicates it inside the shard_map region so any slot can
+    reference any physical page without a gather.  Returns (B, 1, Hq, D)
+    or None if the layout is unsupported (caller falls back to the
+    gather + dense path)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
+    from repro.dist.sharding import current_rules
+    from repro.core.pack import packed_nbytes
+    from repro.kernels.mx_decode_attn import mx_paged_decode_attention
+
+    kc, ks = pool["kc_pages"], pool["ks_pages"]
+    vc, vs = pool["vc_pages"], pool["vs_pages"]
+    hq, d = q.shape[2], q.shape[3]
+    hkv = kc.shape[2]
+    rep = hq // hkv
+    if d % 32 or ks.shape[-1] * 32 != d \
+            or kc.shape[-1] != packed_nbytes(cfg.mx.kv_fmt, d):
+        return None                      # padded head dim unsupported
+    fmt, mode = cfg.mx.kv_fmt, cfg.mx.mode
+
+    def call(q_, kc_, ks_, vc_, vs_, bt_, ln_):
+        return mx_paged_decode_attention(q_, kc_, ks_, vc_, vs_, bt_, ln_,
+                                         fmt=fmt, mode=mode, rep=rep,
+                                         interpret=INTERPRET)
+
+    rules = current_rules()
+    if rules is None:
+        return call(q, kc, ks, vc, vs, block_tables, lengths)
+    mesh = compat.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return call(q, kc, ks, vc, vs, block_tables, lengths)
+    if rules.get("kv_pages"):
+        return None                      # sharded pool: use gather fallback
+    ba = rules.get("kv_batch") or ("data",)
+    ba = tuple(a for a in ba if a in mesh.axis_names)
+    if q.shape[0] % _prod(mesh.shape[a] for a in ba):
+        return None
+    bspec = P(ba, None, None, None)
+    pspec = P()                          # pool replicated per shard
+    return compat.shard_map(call, mesh=mesh,
+                            in_specs=(bspec, pspec, pspec, pspec, pspec,
+                                      P(ba, None), P(ba)),
+                            out_specs=bspec, check_vma=False,
+                            axis_names=set(ba))(q, kc, ks, vc, vs,
+                                                block_tables, lengths)

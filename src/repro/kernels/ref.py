@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.core import formats as F
 from repro.core.convert import (decode_elements, mx_quantize, scale_to_f32)
 from repro.core.formats import get_format
+from repro.core.pack import unpack_codes
 
 
 def mx_quantize_2d_ref(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
@@ -40,3 +41,67 @@ def mx_matmul_2d_ref(a: jax.Array, codes: jax.Array, scales: jax.Array,
     w = dequant_ref(codes, scales, fmt, mode, block)
     return jnp.dot(a.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32)
+
+
+def _dequant_cache_ref(codes: jax.Array, scales: jax.Array, fmt: str,
+                       mode: str) -> jax.Array:
+    """(B, S, H, D) u8 codes + (B, S, H, D/32) scales -> f32."""
+    f = get_format(fmt)
+    d = codes.shape[-1]
+    elem = decode_elements(codes, f, mode)
+    sfac = scale_to_f32(scales)
+    w = elem.reshape(codes.shape[:-1] + (d // 32, 32)) * sfac[..., None]
+    return w.reshape(codes.shape)
+
+
+def mx_decode_attention_ref(q: jax.Array, k_codes: jax.Array,
+                            k_scales: jax.Array, v_codes: jax.Array,
+                            v_scales: jax.Array, lengths, *, fmt: str,
+                            mode: str, rep: int = 1) -> jax.Array:
+    """Oracle for kernels.mx_decode_attn.mx_decode_attention (and, with a
+    per-slot ``lengths`` vector, for the paged kernel's semantics over an
+    already-gathered contiguous layout): dequantize the whole cache, dense
+    masked softmax over positions <= lengths[b].  q (B,1,Hq,D) -> same."""
+    k = _dequant_cache_ref(k_codes, k_scales, fmt, mode)
+    v = _dequant_cache_ref(v_codes, v_scales, fmt, mode)
+    b, s, hkv, d = k.shape
+    hq = q.shape[2]
+    idx = jnp.arange(hq) // rep
+    ke = jnp.take(k, idx, axis=2)
+    ve = jnp.take(v, idx, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), ke,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(d))
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)
+    mask = jnp.arange(s)[None, None, None, :] <= \
+        lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, ve,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def mx_paged_decode_attention_ref(q: jax.Array, kc_pool: jax.Array,
+                                  ks_pool: jax.Array, vc_pool: jax.Array,
+                                  vs_pool: jax.Array,
+                                  block_tables: jax.Array, lengths,
+                                  *, fmt: str, mode: str,
+                                  rep: int = 1) -> jax.Array:
+    """Oracle for kernels.mx_decode_attn.mx_paged_decode_attention: gather
+    the block-table pages into a contiguous layout, unpack the bit-packed
+    codes, then run the contiguous reference."""
+    d = ks_pool.shape[-1] * 32
+    b, np_max = block_tables.shape
+    page, hkv = kc_pool.shape[1], kc_pool.shape[2]
+
+    def gather(pool, last):
+        g = pool[block_tables]                    # (B, np_max, page, H, X)
+        return g.reshape(b, np_max * page, hkv, last)
+
+    kc = unpack_codes(gather(kc_pool, kc_pool.shape[-1]), fmt, d)
+    vc = unpack_codes(gather(vc_pool, vc_pool.shape[-1]), fmt, d)
+    ks = gather(ks_pool, ks_pool.shape[-1])
+    vs = gather(vs_pool, vs_pool.shape[-1])
+    return mx_decode_attention_ref(q, kc, ks, vc, vs, lengths, fmt=fmt,
+                                   mode=mode, rep=rep)

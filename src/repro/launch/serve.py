@@ -1,8 +1,17 @@
 """Serving launcher: batched greedy/sampled generation with optional MX
 weights + MX KV cache (the paper's converter on the serving path).
 
+Static batch (equal-length prompts):
+
     PYTHONPATH=src python -m repro.launch.serve --arch yi_34b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 16 --mx-kv int8
+
+Continuous batching over the paged MX KV cache (variable-length prompts
+admitted mid-flight; see README §Continuous batching & paged KV):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_34b --reduced \
+        --paged --page-size 16 --batch 8 --requests 24 --mixed \
+        --mx-kv int8
 """
 from __future__ import annotations
 
@@ -14,20 +23,36 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / paged decode slots")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--mx-kv", choices=["off", "int8", "e4m3", "e5m2"],
+    ap.add_argument("--mx-kv", choices=["off", "int8", "e4m3", "e5m2",
+                                        "e3m2", "e2m3", "e2m1"],
                     default="off")
     ap.add_argument("--mx-mode", choices=["paper", "ocp"], default="ocp")
     ap.add_argument("--shard", action="store_true",
                     help="serve under a (data, model) mesh with the decode "
                          "sharding rules (needs >1 device)")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over the paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="paged mode: total requests to serve "
+                         "(default 2x --batch)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="paged mode: vary prompt lengths around "
+                         "--prompt-len instead of equal lengths")
+    ap.add_argument("--shard-pool", action="store_true",
+                    help="shard the page pool's page dim over the data "
+                         "axes (with --shard)")
     args = ap.parse_args()
 
     import contextlib
 
+    import numpy as np
     import jax
 
     from repro.dist import compat
@@ -36,7 +61,8 @@ def main() -> None:
     from repro.models import Model, load_config, load_reduced, \
         make_concrete_batch
     from repro.models.config import MXPolicy
-    from repro.serve import GenerationConfig, ServeEngine
+    from repro.serve import (ContinuousBatchingEngine, GenerationConfig,
+                             ServeEngine)
 
     over = {}
     if args.mx_kv != "off":
@@ -45,21 +71,55 @@ def main() -> None:
     cfg = (load_reduced if args.reduced else load_config)(args.arch, **over)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    batch = make_concrete_batch(cfg, args.batch, args.prompt_len)
-    batch.pop("labels", None)
     rules = None
     mesh_ctx = contextlib.nullcontext()
     if args.shard:
         mesh = make_test_mesh(jax.device_count())
         # decode posture: weights stay resident (no per-token ZeRO-3 gather)
-        rules = make_rules(mesh.axis_names, fsdp_params=False)
+        rules = make_rules(mesh.axis_names, fsdp_params=False,
+                           paged_pool_sharded=args.shard_pool)
         mesh_ctx = compat.set_mesh(mesh)
         print(f"[serve] sharded over mesh {dict(mesh.shape)}")
+    gen = GenerationConfig(max_new_tokens=args.new_tokens,
+                           temperature=args.temperature)
+
+    if args.paged:
+        rng = np.random.default_rng(0)
+        n_req = args.requests or 2 * args.batch
+        if args.mixed:
+            lens = rng.integers(max(1, args.prompt_len // 4),
+                                2 * args.prompt_len, size=n_req)
+        else:
+            lens = np.full(n_req, args.prompt_len)
+        max_len = int(lens.max()) + args.new_tokens + 1
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=args.batch,
+            page_size=args.page_size, max_len=max_len, rules=rules,
+            gen=gen)
+        prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
+                   for n in lens]
+        with mesh_ctx:
+            t0 = time.perf_counter()
+            for p in prompts:
+                eng.add_request(p, args.new_tokens)
+            out = eng.run()
+            dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in out.values())
+        print(f"[serve] {cfg.name} paged mx_kv={args.mx_kv} "
+              f"page={args.page_size}: {len(out)} requests "
+              f"({'mixed' if args.mixed else 'uniform'} lengths), "
+              f"{toks} tokens in {dt:.2f}s (incl. compile) — "
+              f"{toks / dt:.1f} tok/s, {eng.n_steps} decode steps, "
+              f"{eng.blocks.free_pages}/{eng.blocks.num_pages} pages free")
+        first = out[min(out)]
+        print("[serve] sample output tokens:", first[:12].tolist())
+        return
+
+    batch = make_concrete_batch(cfg, args.batch, args.prompt_len)
+    batch.pop("labels", None)
     eng = ServeEngine(model, params,
                       max_len=args.prompt_len + args.new_tokens + 8,
                       rules=rules)
-    gen = GenerationConfig(max_new_tokens=args.new_tokens,
-                           temperature=args.temperature)
     with mesh_ctx:
         t0 = time.perf_counter()
         out = eng.generate(batch, gen)       # includes compile

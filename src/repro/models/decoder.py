@@ -64,11 +64,16 @@ def init(key, cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def _block(lp, x, cfg: ModelConfig, *, positions, cache=None, cache_pos=None,
-           moe_layer: bool, fake_quant: bool) -> Tuple[jax.Array, Any,
-                                                       jax.Array]:
+           moe_layer: bool, fake_quant: bool,
+           paged=None) -> Tuple[jax.Array, Any, jax.Array]:
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     s = x.shape[1]
-    if cfg.mla:
+    if paged is not None:
+        block_tables, lengths = paged
+        a, new_cache = L.attention_paged_decode(
+            lp["attn"], h, cfg, pool=cache, block_tables=block_tables,
+            lengths=lengths, fake_quant=fake_quant)
+    elif cfg.mla:
         if cache is not None and s == 1:
             a, new_cache = L.mla_decode(lp["attn"], h, cfg, cache=cache,
                                         cache_pos=cache_pos,
@@ -144,6 +149,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged page-pool analogue of ``init_cache``: pages are shared across
+    requests via per-slot block tables (see repro.serve)."""
+    if cfg.mla:
+        raise NotImplementedError(
+            "paged KV serving covers the GQA decoder family; the MLA "
+            "compressed cache keeps the contiguous layout")
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    mk = lambda ld: L.init_paged_kv_cache(cfg, num_pages, page_size,
+                                          cfg.n_kv_heads, cfg.hd,
+                                          layers_dim=ld)
+    cache = {"layers": mk((n_scan,))}
+    if cfg.n_dense_layers:
+        cache["dense_layers"] = [mk(()) for _ in range(cfg.n_dense_layers)]
+    return cache
+
+
 def _run_layers(params, cache, x, cfg, positions, cache_pos, fake_quant):
     moe_layer = cfg.n_experts > 0
     new_dense = []
@@ -190,3 +212,36 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig, *,
     positions = jnp.full((b, 1), pos)
     x, cache = _run_layers(params, cache, x, cfg, positions, pos, fake_quant)
     return _head(params, cfg, x), cache
+
+
+def paged_decode_step(params, token, cache, block_tables, lengths,
+                      cfg: ModelConfig, *, fake_quant: bool = False):
+    """One continuous-batching decode step over the paged KV cache.
+
+    token (B,) int32 — one in-flight token per slot; block_tables
+    (B, max_pages) int32; lengths (B,) int32 — slot b's token sits at
+    position lengths[b] (0 and a zeroed block-table row for idle slots).
+    Returns (logits (B,1,Vp), new page pools)."""
+    x = _embed(params, cfg, token[:, None], None)
+    paged = (block_tables, lengths)
+    moe_layer = cfg.n_experts > 0
+    new_dense = []
+    for i, dl in enumerate(params.get("dense_layers", [])):
+        x, nc, _ = _block(dl, x, cfg, positions=None,
+                          cache=cache["dense_layers"][i], moe_layer=False,
+                          fake_quant=fake_quant, paged=paged)
+        new_dense.append(nc)
+
+    def step(carry, xs):
+        lp, cache_l = xs
+        y, nc, _ = _block(lp, carry, cfg, positions=None, cache=cache_l,
+                          moe_layer=moe_layer, fake_quant=fake_quant,
+                          paged=paged)
+        return y, nc
+
+    x, new_layer_cache = L.layer_scan(
+        step, x, (params["layers"], cache["layers"]), cfg)
+    new_cache = {"layers": new_layer_cache}
+    if new_dense:
+        new_cache["dense_layers"] = new_dense
+    return _head(params, cfg, x), new_cache

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.convert import (MXArray, mx_dequantize, mx_quantize,
                                 quantize_dequantize)
+from repro.core.pack import pack_codes, packed_nbytes, unpack_codes
 from repro.dist.sharding import (bf16_matmul_out_enabled, logical,
                                  weight_gather_enabled, weight_gather_mode)
 from repro.models.config import ModelConfig, MXPolicy
@@ -213,6 +214,131 @@ def cache_read(cache, cfg: ModelConfig, dtype, hd: Optional[int] = None):
         v = _kv_dequant(cache["v_codes"], cache["v_scales"], cfg, dtype, hd)
         return k, v
     return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+# =============================================================================
+# Paged KV cache (continuous batching)
+# =============================================================================
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        n_kv: int, hd: int,
+                        layers_dim: Tuple[int, ...] = ()):
+    """Allocate one attention layer's page pool (optionally layer-stacked).
+
+    MX layout packs sub-byte element codes via repro.core.pack, so an FP4
+    pool really is ~4x smaller than bf16 in HBM.  Page 0 is reserved by the
+    serving engine as the trash page (inactive slots write there)."""
+    if cfg.mx.kv_cache:
+        cl = _code_len(hd, cfg.mx.block)
+        cb = packed_nbytes(cfg.mx.kv_fmt, cl)
+        shape = layers_dim + (num_pages, page_size, n_kv, cb)
+        sshape = layers_dim + (num_pages, page_size, n_kv,
+                               cl // cfg.mx.block)
+        return {"kc_pages": jnp.zeros(shape, jnp.uint8),
+                "ks_pages": jnp.zeros(sshape, jnp.uint8),
+                "vc_pages": jnp.zeros(shape, jnp.uint8),
+                "vs_pages": jnp.zeros(sshape, jnp.uint8)}
+    # distinct buffers per key: the serving engine donates the pool into
+    # its jitted step, and aliased leaves would be donated twice
+    shape = layers_dim + (num_pages, page_size, n_kv, hd)
+    return {"k_pages": jnp.zeros(shape, dtype_of(cfg)),
+            "v_pages": jnp.zeros(shape, dtype_of(cfg))}
+
+
+def paged_page_size(pool) -> int:
+    leaf = pool.get("kc_pages", pool.get("k_pages"))
+    return leaf.shape[-3]
+
+
+def paged_cache_write(pool, k: jax.Array, v: jax.Array, pages: jax.Array,
+                      offsets: jax.Array, cfg: ModelConfig):
+    """Scatter one token per slot into the page pool.
+
+    k/v (B, 1, n_kv, hd); pages/offsets (B,) i32 — slot b's token lands at
+    pool[pages[b], offsets[b]].  Distinct active slots own distinct pages,
+    so the scatter indices never collide except on the trash page."""
+    if cfg.mx.kv_cache:
+        kc, ks = _kv_quant(k, cfg)
+        vc, vs = _kv_quant(v, cfg)
+        kc = pack_codes(kc, cfg.mx.kv_fmt)
+        vc = pack_codes(vc, cfg.mx.kv_fmt)
+        upd = dict(kc_pages=kc, ks_pages=ks, vc_pages=vc, vs_pages=vs)
+        return {name: logical(pool[name].at[pages, offsets].set(val[:, 0]),
+                              "kv_pages", None, None, None)
+                for name, val in upd.items()}
+    dt = pool["k_pages"].dtype
+    return {"k_pages": logical(pool["k_pages"].at[pages, offsets].set(
+                k[:, 0].astype(dt)), "kv_pages", None, None, None),
+            "v_pages": logical(pool["v_pages"].at[pages, offsets].set(
+                v[:, 0].astype(dt)), "kv_pages", None, None, None)}
+
+
+def paged_cache_gather(pool, block_tables: jax.Array, cfg: ModelConfig,
+                       dtype, hd: int) -> Tuple[jax.Array, jax.Array]:
+    """Gather a slot-major contiguous (B, max_pages*page, n_kv, hd) K/V view
+    through the block table (dense-attention fallback path; the Pallas
+    kernel gathers at the HBM->VMEM boundary instead)."""
+    b, np_max = block_tables.shape
+    if cfg.mx.kv_cache:
+        cl = _code_len(hd, cfg.mx.block)
+
+        def one(codes_key, scales_key):
+            c = pool[codes_key][block_tables]   # (B, np, page, n_kv, CB)
+            c = c.reshape((b, -1) + c.shape[3:])
+            c = unpack_codes(c, cfg.mx.kv_fmt, cl)
+            s = pool[scales_key][block_tables]
+            s = s.reshape((b, -1) + s.shape[3:])
+            return _kv_dequant(c, s, cfg, dtype, hd)
+
+        return one("kc_pages", "ks_pages"), one("vc_pages", "vs_pages")
+    k = pool["k_pages"][block_tables]
+    v = pool["v_pages"][block_tables]
+    k = k.reshape((b, -1) + k.shape[3:])
+    v = v.reshape((b, -1) + v.shape[3:])
+    return k.astype(dtype), v.astype(dtype)
+
+
+def attention_paged_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                           pool, block_tables: jax.Array,
+                           lengths: jax.Array, fake_quant: bool = False
+                           ) -> Tuple[jax.Array, Any]:
+    """GQA decode over the paged KV cache: x (B, 1, d); slot b's new token
+    sits at logical position lengths[b] and attends positions <= lengths[b].
+    Inactive slots (lengths 0, zeroed block-table row) write to the trash
+    page and their outputs are discarded by the engine."""
+    b, s, d = x.shape                          # s == 1
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    mx = cfg.mx
+    q = dense(x, p["wq"], mx, fake_quant)
+    q = logical(q, "batch", None, "model").reshape(b, s, nh, hd)
+    k = dense(x, p["wk"], mx, fake_quant).reshape(b, s, nkv, hd)
+    v = dense(x, p["wv"], mx, fake_quant).reshape(b, s, nkv, hd)
+    positions = lengths[:, None]
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin, cfg.rope_frac)
+    k = apply_rope(k, cos, sin, cfg.rope_frac)
+    page = paged_page_size(pool)
+    pages = jnp.take_along_axis(
+        block_tables, (lengths // page)[:, None], axis=1)[:, 0]
+    pool = paged_cache_write(pool, k, v, pages, lengths % page, cfg)
+    q = logical(q, "kv_batch", None, None, None)
+    out = None
+    if cfg.mx.kv_cache and cfg.attn_impl == "flash":
+        from repro.kernels.ops import mx_paged_decode_attention_ctx
+        out = mx_paged_decode_attention_ctx(q, pool, block_tables, lengths,
+                                            cfg)
+    if out is None:
+        ka, va = paged_cache_gather(pool, block_tables, cfg, x.dtype, hd)
+        # keep the gathered view slot-sharded (decode reads stay local);
+        # without this GSPMD may replicate the full gathered KV per rank
+        ka = logical(ka, "kv_batch", None, None, None)
+        va = logical(va, "kv_batch", None, None, None)
+        sk = ka.shape[1]
+        mask = jnp.arange(sk)[None, None, None, None, :] \
+            <= lengths[:, None, None, None, None]
+        out = _sdpa_gqa(q, ka, va, mask)
+    out = out.reshape(b, s, nh * hd)
+    out = dense(out, p["wo"], mx, fake_quant, tp="row")
+    return logical(out, "batch", None, None), pool
 
 
 # =============================================================================

@@ -96,6 +96,24 @@ class Model:
             return self.mod.init_cache(cfg, batch, max_len, s_enc)
         return self.mod.init_cache(cfg, batch, max_len)
 
+    # ---- paged serving (continuous batching; GQA decoder family) ---------
+    def supports_paged(self) -> bool:
+        cfg = self.cfg
+        return (cfg.family == "decoder" and not cfg.mla
+                and cfg.frontend == "none")
+
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged KV serving needs a GQA decoder")
+        return self.mod.init_paged_cache(self.cfg, num_pages, page_size)
+
+    def paged_decode_step(self, params, token, cache, block_tables,
+                          lengths, *, fake_quant: bool = False):
+        return self.mod.paged_decode_step(params, token, cache,
+                                          block_tables, lengths, self.cfg,
+                                          fake_quant=fake_quant)
+
 
 # =============================================================================
 # input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run food)

@@ -1,26 +1,40 @@
-"""Batched serving engine: jitted prefill + decode with (optionally MX)
-KV cache.
+"""Serving engines: jitted prefill + decode with (optionally MX) KV cache.
 
-Static-batch continuous decode: requests of equal prompt length are batched,
-prefilled once, then stepped greedily (or sampled).  The KV cache layout and
-quantization policy come from the model config (cfg.mx.kv_cache /
-cfg.mx.kv_fmt) — this is the serving-side consumer of the paper's converter:
-INT8/E4M3 KV cuts decode HBM traffic ~2x vs bf16 (see the decode_32k
-roofline cells).
+Two engines share the model zoo's decode path:
+
+``ServeEngine`` — static batch: requests of equal prompt length are batched,
+prefilled once, then stepped greedily (or sampled).
+
+``ContinuousBatchingEngine`` — slot-based continuous batching over a paged
+MX KV cache: variable-length prompts are admitted into decode slots
+mid-flight, each slot's K/V lives in fixed-size pages of packed codes +
+E8M0 scales referenced through a per-slot block table, and finished
+requests are evicted so their pages recycle immediately.  Prefill runs
+per-request (bucketed to page multiples) into a contiguous cache that is
+scattered into the slot's pages; decode steps the whole slot batch at once.
+
+Either way the KV quantization policy comes from the model config
+(cfg.mx.kv_cache / cfg.mx.kv_fmt) — this is the serving-side consumer of
+the paper's converter: INT8/E4M3 KV cuts decode HBM traffic ~2x vs bf16
+(see the decode_32k roofline cells), and with ``attn_impl="flash"`` the
+paged Pallas kernel keeps HBM reads at the quantized bytes end-to-end.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pack import pack_codes
 from repro.dist.sharding import use_rules
 from repro.models.registry import Model
+from repro.serve.paging import BlockManager, pages_needed
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,3 +97,214 @@ class ServeEngine:
         return jax.random.categorical(
             key, logits.astype(jnp.float32) / gen.temperature, axis=-1
         ).astype(jnp.int32)
+
+
+# =============================================================================
+# Continuous batching over the paged MX KV cache
+# =============================================================================
+# pool key -> (contiguous prefill-cache key, is-element-code)
+_POOL_KEYS = {
+    "kc_pages": ("k_codes", True), "ks_pages": ("k_scales", False),
+    "vc_pages": ("v_codes", True), "vs_pages": ("v_scales", False),
+    "k_pages": ("k", False), "v_pages": ("v", False),
+}
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over a paged (optionally MX) KV cache.
+
+    ``max_slots``  — decode batch width (requests in flight).
+    ``page_size``  — tokens per KV page.
+    ``max_len``    — per-request cap on prompt + generated tokens; sets the
+                     block-table width.
+    ``num_pages``  — page-pool size; defaults to full occupancy
+                     (max_slots * pages(max_len) + the trash page).
+    ``rules``      — sharding rules (repro.dist.sharding.make_rules, decode
+                     posture); the page pool follows the "kv_pages" rule.
+    """
+
+    def __init__(self, model: Model, params, *, max_slots: int = 8,
+                 page_size: int = 16, max_len: int = 256,
+                 num_pages: Optional[int] = None,
+                 rules: Optional[Dict[str, Any]] = None,
+                 gen: GenerationConfig = GenerationConfig()):
+        if not model.supports_paged():
+            raise NotImplementedError(
+                f"{model.cfg.name}: continuous batching needs a GQA "
+                "decoder (no MLA / modality frontend)")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.max_pages_per_slot = pages_needed(max_len, page_size)
+        if num_pages is None:
+            num_pages = 1 + max_slots * self.max_pages_per_slot
+        self.blocks = BlockManager(num_pages, page_size, max_slots,
+                                   self.max_pages_per_slot)
+        self.scheduler = Scheduler(max_slots, self.blocks)
+        self.pool = model.init_paged_cache(num_pages, page_size)
+        self.gen = gen
+        self.rules = rules
+        self._key = jax.random.PRNGKey(gen.seed)
+        self._next_rid = 0
+        self._cur_tok = np.zeros(max_slots, np.int32)
+        self._lengths = np.zeros(max_slots, np.int32)
+        self.n_steps = 0
+        self.n_generated = 0
+        cfg = model.cfg
+        self.vocab = cfg.vocab
+
+        def _ctx():
+            return use_rules(rules) if rules is not None \
+                else contextlib.nullcontext()
+
+        def _prefill(params, tokens):
+            with _ctx():
+                return model.prefill(params, {"tokens": tokens},
+                                     max_len=tokens.shape[1])
+
+        def _step(params, tok, pool, bt, lengths):
+            with _ctx():
+                return model.paged_decode_step(params, tok, pool, bt,
+                                               lengths)
+
+        def _scatter(pool, cache, page_ids):
+            with _ctx():
+                return self._scatter_pages(pool, cache, page_ids)
+
+        self._prefill = jax.jit(_prefill)
+        # donate the pool: every decode step / prefill scatter rewrites it
+        # wholesale, and without donation XLA double-buffers the dominant
+        # serving allocation (the CPU backend ignores donation with a
+        # warning; on TPU this halves peak KV memory)
+        self._step = jax.jit(_step, donate_argnums=(2,))
+        self._scatter = jax.jit(_scatter, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ requests
+    def add_request(self, prompt, max_new_tokens: int) -> int:
+        """Queue a prompt; returns the request id.  Admission happens on a
+        subsequent ``step()`` when a slot and enough pages are free.
+        Raises ValueError (from ``Scheduler.submit``) when the sequence can
+        never fit a slot or the pool."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (prefill always "
+                             "emits the first generated token)")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens)
+        self.scheduler.submit(req)              # validates capacity
+        self._next_rid += 1
+        return req.rid
+
+    # ---------------------------------------------------------- the engine
+    def step(self) -> List[Tuple[int, int]]:
+        """Admit what fits, run one batched decode step; returns the
+        (request id, token) pairs emitted this step (admissions emit their
+        prefill token here too)."""
+        emitted = []
+        for req in self.scheduler.admit():
+            emitted.append((req.rid, self._prefill_into_slot(req)))
+            if req.done:
+                self._release(req)
+            else:
+                # the decode write position may sit in a page past the
+                # prompt's allocation (prompt length a page multiple)
+                ok = self.blocks.ensure(req.slot,
+                                        self._lengths[req.slot] + 1)
+                assert ok, "admission reserved full-sequence capacity"
+        if not self.scheduler.running:
+            return emitted
+        bt = jnp.asarray(self.blocks.tables)
+        logits, self.pool = self._step(
+            self.params, jnp.asarray(self._cur_tok), self.pool, bt,
+            jnp.asarray(self._lengths))
+        self.n_steps += 1
+        lg = np.asarray(logits[:, -1, :self.vocab], np.float32)
+        for slot in sorted(self.scheduler.running):
+            req = self.scheduler.running[slot]
+            nxt = self._pick_host(lg[slot])
+            self._lengths[slot] += 1
+            self._cur_tok[slot] = nxt
+            req.out.append(nxt)
+            self.n_generated += 1
+            emitted.append((req.rid, nxt))
+            if req.done:
+                self._release(req)
+            else:
+                ok = self.blocks.ensure(slot, self._lengths[slot] + 1)
+                assert ok, "admission reserved full-sequence capacity"
+        return emitted
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive ``step()`` until every queued request finishes; returns
+        {request id: generated tokens} for the requests finished by this
+        call (the engine is reusable: jitted closures stay warm across
+        batches)."""
+        start = len(self.scheduler.finished)
+        while self.scheduler.has_work():
+            if not self.step() and not self.scheduler.running:
+                raise RuntimeError(
+                    "no progress: waiting requests cannot be admitted")
+        return {r.rid: np.asarray(r.out, np.int32)
+                for r in self.scheduler.finished[start:]}
+
+    # ------------------------------------------------------------ internals
+    def _prefill_into_slot(self, req: Request) -> int:
+        """Prefill one admitted request (prompt padded to a page multiple),
+        scatter its contiguous cache into the slot's pages, emit the first
+        generated token."""
+        slot, n = req.slot, req.prompt_len
+        npr = pages_needed(n, self.page_size)
+        toks = np.zeros((1, npr * self.page_size), np.int32)
+        toks[0, :n] = req.prompt
+        logits, cache, _ = self._prefill(self.params, jnp.asarray(toks))
+        page_ids = jnp.asarray(self.blocks.tables[slot, :npr])
+        self.pool = self._scatter(self.pool, cache, page_ids)
+        first = self._pick_host(
+            np.asarray(logits[0, n - 1, :self.vocab], np.float32))
+        self._cur_tok[slot] = first
+        self._lengths[slot] = n
+        req.out.append(first)
+        self.n_generated += 1
+        return first
+
+    def _release(self, req: Request) -> None:
+        slot = req.slot
+        self.scheduler.evict(req)
+        self._cur_tok[slot] = 0
+        self._lengths[slot] = 0
+
+    def _pick_host(self, logits: np.ndarray) -> int:
+        if self.gen.temperature <= 0.0:
+            return int(np.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(logits) / self.gen.temperature))
+
+    def _scatter_pages(self, pool, cache, page_ids):
+        """Contiguous prefill cache (B=1, padded to full pages) -> the
+        slot's physical pages (packing sub-byte codes on the way)."""
+        fmt = self.model.cfg.mx.kv_fmt
+
+        def group(pool_g, cache_g):
+            out = {}
+            for pk, leaf in pool_g.items():
+                ck, is_code = _POOL_KEYS[pk]
+                val = cache_g[ck]
+                stacked = val.ndim == 5          # (n_scan, 1, L, n_kv, X)
+                val = val[:, 0] if stacked else val[0]
+                if is_code:
+                    val = pack_codes(val, fmt)
+                lead = val.shape[:-3]
+                npr = val.shape[-3] // self.page_size
+                val = val.reshape(lead + (npr, self.page_size)
+                                  + val.shape[-2:])
+                out[pk] = leaf.at[:, page_ids].set(val) if stacked \
+                    else leaf.at[page_ids].set(val)
+            return out
+
+        new = {"layers": group(pool["layers"], cache["layers"])}
+        if "dense_layers" in pool:
+            new["dense_layers"] = [
+                group(pg, cg) for pg, cg in zip(pool["dense_layers"],
+                                                cache["dense_layers"])]
+        return new

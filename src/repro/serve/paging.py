@@ -1,0 +1,84 @@
+"""Host-side page accounting for the paged MX KV cache.
+
+The device side is a page pool per attention layer (see
+``models/layers.init_paged_kv_cache``): ``num_pages`` pages of ``page_size``
+tokens of packed codes + E8M0 scales.  This module owns the free list and
+the per-slot block tables that map a slot's logical token positions to
+physical pages.
+
+Physical page 0 is the **trash page**: it is never handed out, every idle
+slot's block-table row points at it, and the decode step's unconditional
+scatter for idle slots lands there — masked decode writes can never corrupt
+a live request's pages.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Pages required to hold ``tokens`` positions (>= 1 so every admitted
+    request owns the page its first generated token lands in)."""
+    return max(1, -(-tokens // page_size))
+
+
+class BlockManager:
+    """Free-list allocator + block tables over a fixed page pool.
+
+    ``tables`` is the host mirror of the device block-table operand: rows
+    are zero (the trash page) beyond a slot's allocation, so the kernel's
+    out-of-range page lookups always hit valid (masked) memory.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 max_pages_per_slot: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        # LIFO free list; page 0 reserved as trash
+        self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self.tables = np.full((max_slots, max_pages_per_slot), TRASH_PAGE,
+                              np.int32)
+        self._owned = [[] for _ in range(max_slots)]
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    # ----------------------------------------------------------- mutations
+    def allocate(self, slot: int, n: int) -> bool:
+        """Append ``n`` pages to ``slot``'s block-table row.  Returns False
+        (allocating nothing) if the pool or the row can't hold them."""
+        owned = self._owned[slot]
+        if not self.can_allocate(n) \
+                or len(owned) + n > self.max_pages_per_slot:
+            return False
+        for _ in range(n):
+            pg = self._free.pop()
+            self.tables[slot, len(owned)] = pg
+            owned.append(pg)
+        return True
+
+    def ensure(self, slot: int, tokens: int) -> bool:
+        """Grow ``slot``'s allocation to cover ``tokens`` positions."""
+        need = pages_needed(tokens, self.page_size) - self.slot_pages(slot)
+        return True if need <= 0 else self.allocate(slot, need)
+
+    def free_slot(self, slot: int) -> None:
+        """Return all of ``slot``'s pages and re-point its row at trash."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.tables[slot, :] = TRASH_PAGE

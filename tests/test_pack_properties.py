@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) for repro.core.pack: bit-packed storage
+of sub-byte MX element codes must be a lossless trailing-axis transform."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import ALL_FORMATS, get_format
+from repro.core.pack import pack_codes, packed_nbytes, unpack_codes
+
+ALL_FMTS = [f.name for f in ALL_FORMATS]
+# trailing lengths aligned per bit width: 4-bit needs %2, 6-bit needs %4
+ALIGN = {4: 2, 6: 4, 8: 1}
+
+
+def _aligned(fmt: str, n: int) -> int:
+    a = ALIGN[get_format(fmt).code_bits]
+    return -(-n // a) * a
+
+
+@st.composite
+def codes_and_fmt(draw):
+    fmt = draw(st.sampled_from(ALL_FMTS))
+    f = get_format(fmt)
+    lead = draw(st.sampled_from([(), (3,), (2, 5)]))
+    n = _aligned(fmt, draw(st.integers(min_value=1, max_value=96)))
+    bits = draw(st.integers(0, 2 ** 32 - 1))
+    rng = np.random.default_rng(bits)
+    codes = rng.integers(0, 1 << f.code_bits,
+                         size=lead + (n,)).astype(np.uint8)
+    return fmt, codes
+
+
+@given(codes_and_fmt())
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_is_identity(args):
+    """unpack(pack(x)) == x on the trailing axis for every format."""
+    fmt, codes = args
+    packed = pack_codes(jnp.asarray(codes), fmt)
+    assert packed.shape[:-1] == codes.shape[:-1]
+    assert packed.shape[-1] == packed_nbytes(fmt, codes.shape[-1])
+    out = unpack_codes(packed, fmt, codes.shape[-1])
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_adversarial_bit_patterns(fmt):
+    """All-zeros, all-ones (full code width), and alternating min/max codes
+    survive the roundtrip — the patterns most likely to smear across byte
+    boundaries in the 6-bit 4->3 layout."""
+    f = get_format(fmt)
+    top = (1 << f.code_bits) - 1
+    n = _aligned(fmt, 24)
+    pats = [np.zeros(n, np.uint8),
+            np.full(n, top, np.uint8),
+            np.asarray([0, top] * (n // 2), np.uint8),
+            np.asarray([top, 1] * (n // 2), np.uint8)]
+    for pat in pats:
+        out = unpack_codes(pack_codes(jnp.asarray(pat), fmt), fmt, n)
+        np.testing.assert_array_equal(np.asarray(out), pat)
+
+
+@given(st.integers(min_value=1, max_value=128),
+       st.sampled_from(ALL_FMTS))
+@settings(max_examples=60, deadline=None)
+def test_nonaligned_pad_then_pack(n, fmt):
+    """Non-aligned trailing lengths, padded the way mx_quantize pads (zeros
+    to the alignment), roundtrip to the padded identity and the original
+    prefix — the kernel-facing contract for ragged head dims."""
+    f = get_format(fmt)
+    rng = np.random.default_rng(n)
+    codes = rng.integers(0, 1 << f.code_bits, size=n).astype(np.uint8)
+    na = _aligned(fmt, n)
+    padded = np.pad(codes, (0, na - n))
+    out = np.asarray(unpack_codes(pack_codes(jnp.asarray(padded), fmt),
+                                  fmt, na))
+    np.testing.assert_array_equal(out, padded)
+    np.testing.assert_array_equal(out[:n], codes)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_packed_nbytes_ratio(fmt):
+    """Packed bytes per code reflect the format's bit width (the HBM win
+    the page pool banks on): 4-bit -> 1/2, 6-bit -> 3/4, 8-bit -> 1."""
+    f = get_format(fmt)
+    n = 96
+    ratio = packed_nbytes(fmt, n) / n
+    assert ratio == {4: 0.5, 6: 0.75, 8: 1.0}[f.code_bits]
