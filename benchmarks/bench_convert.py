@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ALL_FORMATS, mx_quantize
-from repro.core.formats import get_format
 
 N_ROWS, N_COLS = 256, 4096          # 1M elements = 32k paper-blocks
 REPS = 20

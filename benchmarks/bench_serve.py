@@ -1,13 +1,16 @@
 """Continuous-batching serving throughput over the paged MX KV cache.
 
 Serves the same request trace through ``ContinuousBatchingEngine`` under
-several cache configurations (fp32 vs MX INT8/E4M3 pages) and batch mixes
-(uniform vs mixed prompt lengths), and emits both the harness CSV rows and
-a machine-readable ``BENCH_serve.json``:
+several cache policies (fp32 pages, uniform MX INT8/E4M3 pages, and the
+mixed per-role INT8-keys/E2M1-values policy) and batch mixes (uniform vs
+mixed prompt lengths), and emits both the harness CSV rows and a
+machine-readable ``BENCH_serve.json``:
 
     {"schema": "bench_serve/v1", "arch": ..., "page_size": ...,
      "max_slots": ..., "new_tokens": ...,
      "configs": [{"cache": "mx-int8", "kv_fmt": "int8", "mode": "ocp",
+                  "kv_key_fmt": "int8", "kv_value_fmt": "int8",
+                  "quant": "kv_key=int8@32:ocp,kv_value=int8@32:ocp",
                   "mix": "mixed", "requests": N, "prompt_tokens": ...,
                   "generated_tokens": ..., "decode_steps": ...,
                   "wall_s": ..., "tokens_per_s": ...,
@@ -31,10 +34,12 @@ import numpy as np
 DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
 
 ARCH = "chatglm3_6b"
+# cache name -> QuantPolicy grammar (None = dense pages, compute dtype)
 CACHE_CONFIGS = (
-    ("fp32", None),          # dense pages in the compute dtype (reduced=f32)
-    ("mx-int8", "int8"),
-    ("mx-e4m3", "e4m3"),
+    ("fp32", None),
+    ("mx-int8", "kv=int8@32:ocp"),
+    ("mx-e4m3", "kv=e4m3@32:ocp"),
+    ("mx-mixed", "kv_key=int8@32:ocp,kv_value=e2m1@32:ocp"),
 )
 MIXES = ("uniform", "mixed")
 
@@ -57,7 +62,7 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
     import jax
 
     from repro.models import Model, load_reduced
-    from repro.models.config import MXPolicy
+    from repro.models.config import QuantPolicy
     from repro.serve import ContinuousBatchingEngine, GenerationConfig
 
     # toy sizes: the CPU container measures the schedule, not the silicon
@@ -69,10 +74,12 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
 
     rows: List[Tuple[str, float, str]] = []
     configs = []
-    for cache_name, kv_fmt in CACHE_CONFIGS:
+    for cache_name, policy_s in CACHE_CONFIGS:
         over = {}
-        if kv_fmt is not None:
-            over["mx"] = MXPolicy(mode="ocp", kv_cache=True, kv_fmt=kv_fmt)
+        policy = None
+        if policy_s is not None:
+            policy = QuantPolicy.parse(policy_s)
+            over["mx"] = policy
         cfg = load_reduced(ARCH, **over)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -102,10 +109,16 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
             tps = toks / dt
             name = f"serve_{cache_name}_{mix}"
             rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
+            kk = policy.kv_key if policy else None
+            kv = policy.kv_value if policy else None
             configs.append({
                 "cache": cache_name,
-                "kv_fmt": kv_fmt,
-                "mode": "ocp" if kv_fmt else None,
+                "kv_fmt": None if kk is None else (
+                    kk.fmt if kk.fmt == kv.fmt else f"{kk.fmt}+{kv.fmt}"),
+                "mode": kk.mode if kk else None,
+                "kv_key_fmt": kk.fmt if kk else None,
+                "kv_value_fmt": kv.fmt if kv else None,
+                "quant": str(policy) if policy else None,
                 "mix": mix,
                 "requests": int(n_req),
                 "prompt_tokens": int(lens.sum()),

@@ -24,6 +24,9 @@ CONFIG_FIELDS = {
     "cache": str,
     "kv_fmt": (str, type(None)),
     "mode": (str, type(None)),
+    "kv_key_fmt": (str, type(None)),
+    "kv_value_fmt": (str, type(None)),
+    "quant": (str, type(None)),
     "mix": str,
     "requests": int,
     "prompt_tokens": int,
@@ -34,8 +37,9 @@ CONFIG_FIELDS = {
     "kv_pool_bytes": int,
 }
 KNOWN_CACHES = {"fp32", "mx-int8", "mx-e4m3", "mx-e5m2", "mx-e3m2",
-                "mx-e2m3", "mx-e2m1"}
+                "mx-e2m3", "mx-e2m1", "mx-mixed"}
 KNOWN_MIXES = {"uniform", "mixed"}
+KNOWN_FMTS = {"int8", "e4m3", "e5m2", "e3m2", "e2m3", "e2m1", None}
 
 
 def check(doc) -> list:
@@ -68,6 +72,17 @@ def check(doc) -> list:
                 errs.append(f"configs[{i}].cache: unknown {c['cache']!r}")
             if c["mix"] not in KNOWN_MIXES:
                 errs.append(f"configs[{i}].mix: unknown {c['mix']!r}")
+            for role in ("kv_key_fmt", "kv_value_fmt"):
+                if c[role] not in KNOWN_FMTS:
+                    errs.append(f"configs[{i}].{role}: unknown "
+                                f"{c[role]!r}")
+            if (c["kv_key_fmt"] is None) != (c["kv_value_fmt"] is None):
+                errs.append(f"configs[{i}]: kv_key_fmt/kv_value_fmt must "
+                            f"be set together")
+            if c["cache"] == "mx-mixed" \
+                    and c["kv_key_fmt"] == c["kv_value_fmt"]:
+                errs.append(f"configs[{i}]: mx-mixed row must carry "
+                            f"distinct key/value formats")
             if c["tokens_per_s"] <= 0 or c["wall_s"] <= 0:
                 errs.append(f"configs[{i}]: non-positive throughput")
             if c["generated_tokens"] <= 0 or c["kv_pool_bytes"] <= 0:
@@ -75,6 +90,9 @@ def check(doc) -> list:
     caches = {c.get("cache") for c in doc["configs"]}
     if len(caches) < 2:
         errs.append(f"configs: need >= 2 distinct cache types, got {caches}")
+    if "mx-mixed" not in caches:
+        errs.append("configs: missing the mixed-policy row (mx-mixed: "
+                    "INT8 keys / E2M1 values)")
     return errs
 
 

@@ -1,12 +1,14 @@
 """Quickstart: convert FP32 tensors to every MX format (the paper's
-algorithm), inspect scales/codes, and measure reconstruction quality.
+algorithm) through the QuantSpec API, inspect scales/codes, and measure
+reconstruction quality.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ALL_FORMATS, metrics, mx_dequantize, mx_quantize)
+from repro.core import (ALL_FORMATS, QuantSpec, metrics, mx_dequantize,
+                        mx_quantize)
 from repro.kernels.ops import mx_quantize_pallas
 
 
@@ -18,7 +20,7 @@ def main() -> None:
     v = np.zeros(32, np.float32)
     v[:4] = [np.uint32(b).view(np.float32) for b in
              [0x55B00000, 0x54600000, 0x15900000, 0xC7900000]]
-    mx = mx_quantize(jnp.asarray(v), fmt="e5m2", mode="paper")
+    mx = mx_quantize(jnp.asarray(v), QuantSpec.parse("e5m2@32:paper"))
     print(f"shared scale X = {int(np.asarray(mx.scales)[0]):#010b} "
           f"(paper: 0b10011100)")
     print("P1..P4 =", [f"{c:#010b}" for c in np.asarray(mx.codes)[:4]])
@@ -28,7 +30,7 @@ def main() -> None:
           f"{'max rel err vs blockmax':>24s}")
     for f in ALL_FORMATS:
         for mode in ("paper", "ocp"):
-            mx = mx_quantize(x, fmt=f.name, mode=mode)
+            mx = mx_quantize(x, QuantSpec(f.name, mode))
             y = mx_dequantize(mx)
             sq = float(metrics.sqnr_db(x, y))
             mr = float(metrics.max_rel_err_vs_blockmax(x, y))
@@ -36,8 +38,9 @@ def main() -> None:
                   f"{sq:8.2f} {mr:24.4f}")
 
     print("\n=== Pallas kernel path (interpret) is bit-identical ===")
-    mx_k = mx_quantize_pallas(x, fmt="e4m3", mode="paper")
-    mx_c = mx_quantize(x, fmt="e4m3", mode="paper")
+    spec = QuantSpec("e4m3", "paper")
+    mx_k = mx_quantize_pallas(x, spec)
+    mx_c = mx_quantize(x, spec)
     same = bool(jnp.all(mx_k.codes == mx_c.codes)
                 & jnp.all(mx_k.scales == mx_c.scales))
     print("kernel == reference:", same)

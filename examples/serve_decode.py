@@ -1,15 +1,14 @@
-"""Serving example: batched greedy decoding with an MX-INT8 KV cache
-(2x smaller than bf16; the decode-roofline lever from the paper's format).
+"""Serving example: batched greedy decoding with an MX KV cache — uniform
+INT8 pages, and a mixed per-role policy (INT8 keys + E2M1 values) that the
+pre-spec API could not express.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.models import Model, load_reduced, make_concrete_batch
-from repro.models.config import MXPolicy
+from repro.models.config import QuantPolicy
 from repro.serve import GenerationConfig, ServeEngine
 
 B, PROMPT, NEW = 4, 48, 24
@@ -19,7 +18,10 @@ def main() -> None:
     for label, over in [
         ("bf16 KV cache", {}),
         ("MX-INT8 KV cache",
-         {"mx": MXPolicy(mode="ocp", kv_cache=True, kv_fmt="int8")}),
+         {"mx": QuantPolicy.parse("kv=int8@32:ocp")}),
+        ("mixed INT8-K / E2M1-V cache",
+         {"mx": QuantPolicy.parse("kv_key=int8@32:ocp,"
+                                  "kv_value=e2m1@32:ocp")}),
     ]:
         cfg = load_reduced("yi_34b", **over)
         model = Model(cfg)

@@ -8,21 +8,21 @@ checkpointing + auto-resume included.
 (embeddings dominate: 2*32000*512 = 33M + 8 layers * ~8M = ~96M params).
 """
 import argparse
-import dataclasses
 import tempfile
 
 import jax
 
 from repro.data import DataConfig, SyntheticLM, make_batch_for
 from repro.models import Model
-from repro.models.config import ModelConfig, MXPolicy
+from repro.models.config import ModelConfig, QuantPolicy
 from repro.optim import AdamWConfig
 from repro.train import (LoopConfig, build_train_step, init_train_state,
                          train_loop)
 
 
 def config(mx_mode: str) -> ModelConfig:
-    mx = MXPolicy(fmt="e4m3", mode=mx_mode, weights=(mx_mode != "off"))
+    mx = QuantPolicy() if mx_mode == "off" else \
+        QuantPolicy.parse(f"weights=e4m3@32:{mx_mode}")
     return ModelConfig(
         name="lm100m", family="decoder", n_layers=8, d_model=512,
         n_heads=8, n_kv_heads=2, d_ff=2048, vocab=32000, head_dim=64,

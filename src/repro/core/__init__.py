@@ -3,8 +3,11 @@ from repro.core.formats import (  # noqa: F401
     ALL_FORMATS, DEFAULT_BLOCK, E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS, INT8,
     MXFormat, SCALE_BIAS, SCALE_INF, SCALE_NAN, get_format,
 )
+from repro.core.spec import (  # noqa: F401
+    MODES, QuantPolicy, QuantSpec, ROLES, as_spec, resolve_spec,
+)
 from repro.core.convert import (  # noqa: F401
-    MODES, MXArray, block_max_exponent, decode_elements, max_exponent_tree,
+    MXArray, block_max_exponent, decode_elements, max_exponent_tree,
     mx_dequantize, mx_error_bound, mx_quantize, pow2_f32, quantize_dequantize,
     scale_to_f32, shared_scale,
 )

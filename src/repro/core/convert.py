@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core.formats import MXFormat, get_format
+from repro.core.spec import MODES, QuantSpec, resolve_spec  # noqa: F401
 
 Array = jax.Array
 
@@ -52,7 +53,8 @@ _I32 = jnp.int32
 _U32 = jnp.uint32
 _U8 = jnp.uint8
 
-MODES = ("paper", "ocp")
+# the historical defaults of this module's entry points (paper mode)
+_PAPER_DEFAULT = QuantSpec("e4m3", "paper")
 
 
 # =============================================================================
@@ -85,6 +87,50 @@ class MXArray:
     def tree_unflatten(cls, aux, children):
         codes, scales = children
         return cls(codes, scales, *aux)
+
+    # -- validated construction ---------------------------------------------
+    @classmethod
+    def from_spec(cls, codes: Array, scales: Array, spec: QuantSpec, *,
+                  orig_len: Optional[int] = None,
+                  axis: int = -1) -> "MXArray":
+        """The validated constructor: checks fmt/mode/block consistency and
+        the codes/scales shape contract before building the container.
+        All call sites outside the pytree protocol should use this.
+
+        MXArray codes are always stored one byte per element — the spec's
+        ``packed`` storage preference applies to packed consumers (the
+        paged KV pool), not to this container."""
+        from repro.core.spec import as_spec
+        spec = as_spec(spec)          # rejects None/'none' with a clear error
+        axis = _normalize_axis(axis, codes.ndim)
+        n = codes.shape[axis]
+        if n % spec.block:
+            raise ValueError(
+                f"codes axis {axis} has length {n}, not a multiple of "
+                f"block={spec.block}")
+        want = list(codes.shape)
+        want[axis] = n // spec.block
+        if tuple(scales.shape) != tuple(want):
+            raise ValueError(
+                f"scales shape {tuple(scales.shape)} does not match codes "
+                f"{tuple(codes.shape)} blocked by {spec.block} along axis "
+                f"{axis} (expected {tuple(want)})")
+        orig_len = n if orig_len is None else int(orig_len)
+        if not (0 < orig_len <= n) or n - orig_len >= spec.block:
+            raise ValueError(
+                f"orig_len={orig_len} inconsistent with padded length {n} "
+                f"(must satisfy 0 < orig_len <= {n} with less than one "
+                f"block of padding)")
+        return cls(codes=codes, scales=scales, fmt=spec.fmt, mode=spec.mode,
+                   block=spec.block, orig_len=orig_len, axis=axis)
+
+    @property
+    def spec(self) -> QuantSpec:
+        """The QuantSpec this array was quantized under.  ``packed`` is
+        reported False because MXArray codes are stored one byte per
+        element regardless of the quantizing spec's storage preference
+        (so ``spec.storage_nbytes`` matches this container's layout)."""
+        return QuantSpec(self.fmt, self.mode, self.block, packed=False)
 
     @property
     def format(self) -> MXFormat:
@@ -301,15 +347,26 @@ def _to_blocked(x: Array, block: int, axis: int) -> Tuple[Array, int]:
     return x, n
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "block", "axis",
-                                              "sign_erratum"))
-def mx_quantize(x: Array, fmt: str = "e4m3", mode: str = "paper",
-                block: int = F.DEFAULT_BLOCK, axis: int = -1,
-                sign_erratum: bool = False) -> MXArray:
-    """Convert a float tensor to MX format along ``axis`` (paper steps 1-3)."""
-    if mode not in MODES:
-        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-    f = get_format(fmt)
+def mx_quantize(x: Array, spec=None, mode: Optional[str] = None,
+                block: Optional[int] = None, axis: int = -1,
+                sign_erratum: bool = False, *,
+                fmt: Optional[str] = None) -> MXArray:
+    """Convert a float tensor to MX format along ``axis`` (paper steps 1-3).
+
+    ``spec`` is a :class:`QuantSpec` (or a spec string such as
+    ``"e4m3@32:ocp"``); the default is the paper-faithful
+    ``e4m3@32:paper``.  The ``fmt=``/``mode=``/``block=`` keyword form is
+    a deprecation shim (warns once)."""
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="mx_quantize")
+    return _mx_quantize(x, spec, axis, sign_erratum)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "axis", "sign_erratum"))
+def _mx_quantize(x: Array, spec: QuantSpec, axis: int,
+                 sign_erratum: bool) -> MXArray:
+    f = spec.format
+    mode, block = spec.mode, spec.block
     axis = _normalize_axis(axis, x.ndim)
     xb, orig_len = _to_blocked(x, block, axis)
     lead = xb.shape[:-1]
@@ -351,8 +408,8 @@ def mx_quantize(x: Array, fmt: str = "e4m3", mode: str = "paper",
     # having their block dimension at ``axis``
     codes = jnp.moveaxis(codes, -1, axis)
     scales = jnp.moveaxis(xscale, -1, axis)
-    return MXArray(codes=codes, scales=scales, fmt=f.name, mode=mode,
-                   block=block, orig_len=orig_len, axis=axis)
+    return MXArray.from_spec(codes, scales, spec, orig_len=orig_len,
+                             axis=axis)
 
 
 def decode_elements(codes: Array, fmt: MXFormat, mode: str) -> Array:
@@ -414,17 +471,25 @@ def mx_dequantize(mx: MXArray) -> Array:
     return jnp.moveaxis(val, -1, mx.axis)
 
 
-def quantize_dequantize(x: Array, fmt: str = "e4m3", mode: str = "paper",
-                        block: int = F.DEFAULT_BLOCK, axis: int = -1) -> Array:
-    """Fake-quantization round trip (used for QAT-style layers and tests)."""
-    return mx_dequantize(mx_quantize(x, fmt, mode, block, axis))
+def quantize_dequantize(x: Array, spec=None, mode: Optional[str] = None,
+                        block: Optional[int] = None, axis: int = -1, *,
+                        fmt: Optional[str] = None) -> Array:
+    """Fake-quantization round trip (used for QAT-style layers and tests).
+    Spec-based like :func:`mx_quantize`; old kwargs warn once."""
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="quantize_dequantize")
+    return mx_dequantize(_mx_quantize(x, spec, axis, False))
 
 
-def mx_error_bound(fmt: str | MXFormat, mode: str = "paper") -> float:
+def mx_error_bound(spec: "QuantSpec | str | MXFormat" = "e4m3",
+                   mode: Optional[str] = None) -> float:
     """Worst-case |dequant(quant(v)) - v| / 2^(X-127+emax-ish) style bound:
     relative to the largest block element, error <= 2^-mbits (paper keeps
-    R+1 bits then rounds ties-away) — used by property tests."""
-    f = get_format(fmt)
+    R+1 bits then rounds ties-away) — used by property tests.  The bound
+    depends only on the element format; ``mode`` is a legacy no-op."""
+    del mode
+    f = spec.format if isinstance(spec, QuantSpec) else get_format(
+        spec if isinstance(spec, MXFormat) else QuantSpec.parse(spec).fmt)
     if f.is_int:
         return 2.0 ** (-f.int_frac_bits)         # 1/64 ulp at scale
     # one ulp at the top binade of the block: 2^(emax_unbiased - R)

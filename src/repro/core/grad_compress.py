@@ -15,24 +15,44 @@ ulp (tests assert it).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import formats as F
 from repro.core.convert import MXArray, mx_dequantize, mx_quantize
+from repro.core.spec import QuantSpec, resolve_spec
 from repro.dist import compat
 
 AxisNames = Sequence[str]
 
+_GRAD_DEFAULT = QuantSpec("e4m3", "ocp")
 
-def mx_allreduce_mean(g: jax.Array, axis_names: AxisNames,
-                      fmt: str = "e4m3", mode: str = "ocp",
-                      block: int = F.DEFAULT_BLOCK) -> jax.Array:
+
+def _grads_spec(spec, fmt, mode, block) -> QuantSpec:
+    """Resolve the exchange spec: explicit arg > legacy kwargs > the
+    ``grads`` role of the policy installed with the sharding rules >
+    the e4m3/ocp default."""
+    if spec is None and fmt is None and mode is None and block is None:
+        from repro.dist.sharding import quant_spec_for
+        rule = quant_spec_for("grads")
+        if rule is not None:
+            return rule
+    return resolve_spec(spec, fmt, mode, block, default=_GRAD_DEFAULT,
+                        caller="mx_allreduce")
+
+
+def mx_allreduce_mean(g: jax.Array, axis_names: AxisNames, spec=None,
+                      mode: Optional[str] = None,
+                      block: Optional[int] = None, *,
+                      fmt: Optional[str] = None) -> jax.Array:
     """All-reduce-mean of ``g`` over ``axis_names`` with MX-compressed
-    gather.  Must run inside shard_map with those axes manual."""
+    gather.  Must run inside shard_map with those axes manual.  ``spec``
+    is a QuantSpec (default: the policy's ``grads`` role if sharding rules
+    carry one, else e4m3/ocp); ``fmt=``/``mode=`` kwargs are the
+    deprecation shim."""
+    spec = _grads_spec(spec, fmt, mode, block)
+    block = spec.block
     names = tuple(axis_names)
     n = 1
     for a in names:
@@ -53,32 +73,34 @@ def mx_allreduce_mean(g: jax.Array, axis_names: AxisNames,
                                  scatter_dimension=0, tiled=False)
     shard = x.reshape(-1) / n
     # compress the owned shard, all-gather codes+scales, decompress
-    mx = mx_quantize(shard, fmt=fmt, mode=mode, block=block)
+    mx = mx_quantize(shard, spec)
     codes, scales = mx.codes, mx.scales
     for a in reversed(names):
         codes = jax.lax.all_gather(codes, a, tiled=True)
         scales = jax.lax.all_gather(scales, a, tiled=True)
-    out = mx_dequantize(MXArray(
-        codes=codes, scales=scales, fmt=fmt, mode=mode, block=block,
-        orig_len=codes.shape[-1], axis=0))
+    out = mx_dequantize(MXArray.from_spec(codes, scales, spec, axis=0))
     return out[: g.size].reshape(shape).astype(g.dtype)
 
 
-def mx_allreduce_tree(grads, axis_names: AxisNames, fmt: str = "e4m3",
-                      mode: str = "ocp") -> "jax.tree_util.PyTreeDef":
+def mx_allreduce_tree(grads, axis_names: AxisNames, spec=None,
+                      mode: Optional[str] = None, *,
+                      fmt: Optional[str] = None
+                      ) -> "jax.tree_util.PyTreeDef":
     """Apply mx_allreduce_mean over every leaf of a gradient pytree."""
+    spec = _grads_spec(spec, fmt, mode, None)
     return jax.tree_util.tree_map(
-        lambda g: mx_allreduce_mean(g, axis_names, fmt, mode), grads)
+        lambda g: mx_allreduce_mean(g, axis_names, spec), grads)
 
 
-def exchanged_bytes(n_params: int, n_devices: int, fmt: str = "e4m3",
+def exchanged_bytes(n_params: int, n_devices: int,
+                    spec: "QuantSpec | str" = "e4m3",
                     compressed: bool = True) -> float:
     """Analytic wire bytes per device for one gradient all-reduce (ring):
     baseline f32 ring all-reduce moves 2 * P * 4 * (n-1)/n bytes;
     compressed: scatter f32 (P*4*(n-1)/n) + gather MX (P*1.03*(n-1)/n)."""
-    from repro.core.formats import get_format
+    from repro.core.spec import as_spec
     f = (n_devices - 1) / n_devices
     if not compressed:
         return 2 * n_params * 4 * f
-    mx_b = get_format(fmt).bits_per_element() / 8.0
+    mx_b = as_spec(spec).format.bits_per_element() / 8.0
     return (n_params * 4 + n_params * mx_b) * f

@@ -9,7 +9,6 @@ semantics, for realism.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, Iterator, Optional
 
 import jax

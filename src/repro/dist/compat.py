@@ -20,9 +20,7 @@ thing is absent, so upgrading jax silently switches to the native API.
 """
 from __future__ import annotations
 
-import contextlib
 import threading
-from typing import Optional
 
 import jax
 

@@ -65,7 +65,8 @@ def _stack():
 def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
                seq_sharded: bool = False, bf16_matmul_out: bool = False,
                pure_fsdp: bool = False,
-               paged_pool_sharded: bool = False) -> Rules:
+               paged_pool_sharded: bool = False,
+               quant: Any = None) -> Rules:
     """Build a logical->physical rule table for a mesh with ``axes``.
 
     ``fsdp_params``    — enable use-point weight gathering (ZeRO-3); decode
@@ -80,6 +81,11 @@ def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
                          the cost of a block-table gather per decode step);
                          default False replicates the pool so any slot can
                          reference any physical page locally.
+    ``quant``          — a ``repro.core.spec.QuantPolicy`` to install with
+                         the rules; distributed consumers resolve their
+                         per-tensor-role specs through ``quant_spec_for``
+                         (e.g. the compressed-DP gradient exchange reads
+                         the "grads" role).
     """
     axes = tuple(axes)
     batch = tuple(a for a in DP_AXES if a in axes)
@@ -96,6 +102,7 @@ def make_rules(axes: Sequence[str], *, fsdp_params: bool = True,
         "wgather": wgather,
         "wgather_mode": "full" if pure_fsdp else "col",
         "bf16_matmul_out": bool(bf16_matmul_out),
+        "quant": quant,
     }
 
 
@@ -130,6 +137,17 @@ def weight_gather_mode() -> str:
 def bf16_matmul_out_enabled() -> bool:
     r = current_rules()
     return bool(r and r.get("bf16_matmul_out"))
+
+
+def quant_spec_for(role: str):
+    """The installed rules' per-tensor-role quantization spec, or None.
+
+    Distributed consumers key their compression off the policy this way
+    (e.g. ``grad_compress.mx_allreduce_mean`` defaults its exchange spec
+    to the "grads" role) rather than threading fmt/mode strings."""
+    r = current_rules()
+    pol = (r or {}).get("quant")
+    return pol.role(role) if pol is not None else None
 
 
 # =============================================================================

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Dict, Optional
 
 _state = threading.local()
 

@@ -18,8 +18,6 @@ forward half.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

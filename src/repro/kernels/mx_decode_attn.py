@@ -6,6 +6,9 @@ inside the online-softmax loop, so HLO-level HBM traffic is the *quantized*
 cache — the full memory-roofline win of the format (a separate dequantize op
 would write the f32 cache back to HBM and give most of it back).
 
+K and V carry independent ``QuantSpec``s (the ``kv_key`` / ``kv_value``
+policy roles), so e.g. INT8 keys can pair with E2M1 values in one cache.
+
 Grid (B, Hq, nk); per step:
     q_ref        (1, 1, D)        query for this (batch, head)
     kc/vc_ref    (1, blk_k, 1, D)       u8 element codes (kv head = h//rep)
@@ -15,17 +18,20 @@ Grid (B, Hq, nk); per step:
 
 ``mx_paged_decode_attention`` is the continuous-batching variant: K/V live
 in a shared page pool (pages of ``page_size`` tokens, sub-byte codes
-bit-packed via repro.core.pack) and each slot's logical sequence is the
-concatenation of the pages named by its block-table row.  The block table
-and per-slot lengths ride in as scalar-prefetch operands so the BlockSpec
-index maps can translate (slot, page-step) -> physical page before the DMA
-is issued — the gather happens at the HBM->VMEM boundary and HBM traffic
-stays at the quantized cache, exactly as in the contiguous kernel.
+bit-packed via repro.core.pack when the spec says ``packed``) and each
+slot's logical sequence is the concatenation of the pages named by its
+block-table row.  The block table and per-slot lengths ride in as
+scalar-prefetch operands so the BlockSpec index maps can translate
+(slot, page-step) -> physical page before the DMA is issued — the gather
+happens at the HBM->VMEM boundary and HBM traffic stays at the quantized
+cache, exactly as in the contiguous kernel.  The two pools are sized
+per-role: a packed E2M1 value pool really is half the bytes of its INT8
+key pool.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,33 +40,51 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.convert import decode_elements, scale_to_f32
-from repro.core.formats import get_format
-from repro.core.pack import packed_nbytes, unpack_codes
+from repro.core.pack import unpack_codes
+from repro.core.spec import QuantSpec, resolve_kv_specs
 from repro.kernels import accounting
 
 DEFAULT_BLK_K = 512
 NEG_INF = -1e30
 
+_KV_DEFAULT = QuantSpec("int8", "ocp")
 
-def _dequant_block(codes, scales, fmt, mode):
+
+def _require_block32(key_spec: QuantSpec, value_spec: QuantSpec,
+                     caller: str) -> None:
+    """The decode kernels' scale layout is hardwired to 32-wide blocks
+    (D/32 scale columns); reject other block sizes instead of silently
+    dequantizing with the wrong grouping."""
+    for role, spec in (("key_spec", key_spec), ("value_spec", value_spec)):
+        if spec.block != 32:
+            raise ValueError(
+                f"{caller}: {role}={spec} has block={spec.block}, but the "
+                f"decode-attention kernels support only block=32 scale "
+                f"layouts")
+
+
+def _dequant_block(codes, scales, spec: QuantSpec):
     """(blk_k, D) u8 + (blk_k, D/32) u8 -> (blk_k, D) f32, in VMEM."""
-    f = get_format(fmt)
     blk, d = codes.shape
-    elem = decode_elements(codes, f, mode)
+    elem = decode_elements(codes, spec.format, spec.mode)
     sfac = scale_to_f32(scales)                     # (blk_k, D/32)
     w = elem.reshape(blk, d // 32, 32) * sfac[:, :, None]
     return w.reshape(blk, d)
 
 
-def _dequant_packed_block(codes, scales, fmt, mode, d):
-    """(blk, CB) packed u8 + (blk, D/32) u8 -> (blk, D) f32.  Unpacks the
-    bit-packed sub-byte codes in VMEM (identity for 8-bit formats), then
-    dequantizes like the contiguous path."""
-    return _dequant_block(unpack_codes(codes, fmt, d), scales, fmt, mode)
+def _dequant_pool_block(codes, scales, spec: QuantSpec, d):
+    """(blk, CB) pool u8 + (blk, D/32) u8 -> (blk, D) f32.  Unpacks the
+    bit-packed sub-byte codes in VMEM when the spec stores packed
+    (identity for 8-bit formats), then dequantizes like the contiguous
+    path."""
+    if spec.packed:
+        codes = unpack_codes(codes, spec.fmt, d)
+    return _dequant_block(codes, scales, spec)
 
 
 def _decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, o_ref,
-                   acc, mrow, lrow, *, fmt: str, mode: str, nk: int):
+                   acc, mrow, lrow, *, key_spec: QuantSpec,
+                   value_spec: QuantSpec, nk: int):
     jk = pl.program_id(2)
 
     @pl.when(jk == 0)
@@ -70,8 +94,8 @@ def _decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, o_ref,
         lrow[...] = jnp.zeros_like(lrow)
 
     q = q_ref[0, 0].astype(jnp.float32)                    # (1, D)
-    k = _dequant_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :], fmt, mode)
-    v = _dequant_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :], fmt, mode)
+    k = _dequant_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :], key_spec)
+    v = _dequant_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :], value_spec)
     d = q.shape[-1]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) \
@@ -93,16 +117,35 @@ def _decode_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, mask_ref, o_ref,
         o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "rep", "blk_k",
-                                             "interpret"))
 def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
                         k_scales: jax.Array, v_codes: jax.Array,
                         v_scales: jax.Array, pos: jax.Array, *,
-                        fmt: str = "int8", mode: str = "ocp", rep: int = 1,
-                        blk_k: int = DEFAULT_BLK_K,
-                        interpret: bool = True) -> jax.Array:
+                        spec=None, key_spec=None, value_spec=None,
+                        rep: int = 1, blk_k: int = DEFAULT_BLK_K,
+                        interpret: bool = True,
+                        fmt: Optional[str] = None,
+                        mode: Optional[str] = None) -> jax.Array:
     """q (B,1,Hq,D); cache codes (B,S,Hkv,D) u8 + scales (B,S,Hkv,D/32);
-    attends over positions <= pos.  Returns (B,1,Hq,D)."""
+    attends over positions <= pos.  Returns (B,1,Hq,D).
+
+    ``key_spec``/``value_spec`` (or the uniform ``spec``) select the
+    per-role element formats; the ``fmt=``/``mode=`` kwargs are the
+    uniform deprecation shim (warns once)."""
+    key_spec, value_spec = resolve_kv_specs(
+        spec, key_spec, value_spec, fmt, mode, default=_KV_DEFAULT,
+        caller="mx_decode_attention")
+    _require_block32(key_spec, value_spec, "mx_decode_attention")
+    return _mx_decode_attention(q, k_codes, k_scales, v_codes, v_scales,
+                                pos, key_spec, value_spec, rep, blk_k,
+                                interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("key_spec", "value_spec",
+                                             "rep", "blk_k", "interpret"))
+def _mx_decode_attention(q, k_codes, k_scales, v_codes, v_scales, pos,
+                         key_spec: QuantSpec, value_spec: QuantSpec,
+                         rep: int, blk_k: int,
+                         interpret: bool) -> jax.Array:
     b, _, hq, d = q.shape
     s, hkv = k_codes.shape[1], k_codes.shape[2]
     bk = min(blk_k, s)
@@ -111,7 +154,8 @@ def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
     mask = (jnp.arange(s)[None, :] <= pos).astype(jnp.bool_)
     mask = jnp.broadcast_to(mask, (b, s))
     qt = q[:, 0][:, :, None, :]                            # (B, Hq, 1, D)
-    kernel = functools.partial(_decode_kernel, fmt=fmt, mode=mode, nk=nk)
+    kernel = functools.partial(_decode_kernel, key_spec=key_spec,
+                               value_spec=value_spec, nk=nk)
     nbl = d // 32
     out = pl.pallas_call(
         kernel,
@@ -149,8 +193,8 @@ def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
 # Paged variant (continuous batching)
 # =============================================================================
 def _paged_kernel(bt_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                  o_ref, acc, mrow, lrow, *, fmt: str, mode: str, d: int,
-                  page: int, np_max: int):
+                  o_ref, acc, mrow, lrow, *, key_spec: QuantSpec,
+                  value_spec: QuantSpec, d: int, page: int, np_max: int):
     bb = pl.program_id(0)
     jk = pl.program_id(2)
 
@@ -161,10 +205,10 @@ def _paged_kernel(bt_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         lrow[...] = jnp.zeros_like(lrow)
 
     q = q_ref[0, 0].astype(jnp.float32)                    # (1, D)
-    k = _dequant_packed_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
-                              fmt, mode, d)
-    v = _dequant_packed_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
-                              fmt, mode, d)
+    k = _dequant_pool_block(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                            key_spec, d)
+    v = _dequant_pool_block(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                            value_spec, d)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) \
         / np.sqrt(d)                                       # (1, page)
@@ -186,19 +230,20 @@ def _paged_kernel(bt_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
         o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "rep",
-                                             "interpret"))
 def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
                               ks_pool: jax.Array, vc_pool: jax.Array,
                               vs_pool: jax.Array, block_tables: jax.Array,
-                              lengths: jax.Array, *, fmt: str = "int8",
-                              mode: str = "ocp", rep: int = 1,
-                              interpret: bool = True) -> jax.Array:
+                              lengths: jax.Array, *, spec=None,
+                              key_spec=None, value_spec=None, rep: int = 1,
+                              interpret: bool = True,
+                              fmt: Optional[str] = None,
+                              mode: Optional[str] = None) -> jax.Array:
     """Decode attention over a paged MX KV cache.
 
     q             (B, 1, Hq, D)
-    kc/vc_pool    (n_pages, page, Hkv, CB) u8 — CB = packed code bytes per
-                  token-head (== D for 8-bit formats; bit-packed below that)
+    kc/vc_pool    (n_pages, page, Hkv, CB) u8 — CB is the per-role storage
+                  bytes per token-head (== D for 8-bit or unpacked specs;
+                  bit-packed below that); K and V pools may differ
     ks/vs_pool    (n_pages, page, Hkv, D/32) u8 E8M0 scales
     block_tables  (B, max_pages) i32 physical page per (slot, logical page);
                   rows padded with 0 (a reserved trash page) past the slot's
@@ -207,15 +252,35 @@ def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
 
     Returns (B, 1, Hq, D).  The block table and lengths are scalar-prefetch
     operands: index maps resolve the physical page before the page's DMA.
+    ``key_spec``/``value_spec`` (or uniform ``spec``) pick the per-role
+    formats; ``fmt=``/``mode=`` is the uniform deprecation shim.
     """
+    key_spec, value_spec = resolve_kv_specs(
+        spec, key_spec, value_spec, fmt, mode, default=_KV_DEFAULT,
+        caller="mx_paged_decode_attention")
+    _require_block32(key_spec, value_spec, "mx_paged_decode_attention")
+    return _mx_paged_decode_attention(q, kc_pool, ks_pool, vc_pool,
+                                      vs_pool, block_tables, lengths,
+                                      key_spec, value_spec, rep, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("key_spec", "value_spec",
+                                             "rep", "interpret"))
+def _mx_paged_decode_attention(q, kc_pool, ks_pool, vc_pool, vs_pool,
+                               block_tables, lengths,
+                               key_spec: QuantSpec, value_spec: QuantSpec,
+                               rep: int, interpret: bool) -> jax.Array:
     b, _, hq, d = q.shape
-    n_pages, page, hkv, cb = kc_pool.shape
+    n_pages, page, hkv, cb_k = kc_pool.shape
+    cb_v = vc_pool.shape[-1]
     np_max = block_tables.shape[1]
-    assert cb == packed_nbytes(fmt, d), (cb, fmt, d)
+    assert cb_k == key_spec.storage_nbytes(d), (cb_k, key_spec, d)
+    assert cb_v == value_spec.storage_nbytes(d), (cb_v, value_spec, d)
     nbl = d // 32
     qt = q[:, 0][:, :, None, :]                            # (B, Hq, 1, D)
-    kernel = functools.partial(_paged_kernel, fmt=fmt, mode=mode, d=d,
-                               page=page, np_max=np_max)
+    kernel = functools.partial(_paged_kernel, key_spec=key_spec,
+                               value_spec=value_spec, d=d, page=page,
+                               np_max=np_max)
 
     def page_map(bb, h, j, bt, ln, rep=rep):
         return (bt[bb, j], 0, h // rep, 0)
@@ -226,9 +291,9 @@ def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
         in_specs=[
             pl.BlockSpec((1, 1, 1, d),
                          lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, cb), page_map),
+            pl.BlockSpec((1, page, 1, cb_k), page_map),
             pl.BlockSpec((1, page, 1, nbl), page_map),
-            pl.BlockSpec((1, page, 1, cb), page_map),
+            pl.BlockSpec((1, page, 1, cb_v), page_map),
             pl.BlockSpec((1, page, 1, nbl), page_map),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, d),
@@ -248,7 +313,7 @@ def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
     # analytic cost: the gathered pages (quantized bytes), not the pool
     s = np_max * page
     flops = 4.0 * b * hq * s * d + 10.0 * b * hq * s * d
-    io = (b * s * hkv * (2 * cb + 2 * nbl)
+    io = (b * s * hkv * (cb_k + cb_v + 2 * nbl)
           + q.size * q.dtype.itemsize * 2)
     accounting.record(flops, io)
     return out.transpose(0, 2, 1, 3)                       # (B, 1, Hq, D)

@@ -19,55 +19,63 @@ accumulated across it (standard Pallas reduction pattern).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import formats as F
 from repro.core.convert import decode_elements, scale_to_f32
-from repro.core.formats import MXFormat, get_format
+from repro.core.spec import QuantSpec, resolve_spec
 
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 DEFAULT_BK = 256
 
 
-def dequant_tile(codes: jax.Array, scales: jax.Array, fmt: MXFormat,
-                 mode: str, block: int) -> jax.Array:
+def dequant_tile(codes: jax.Array, scales: jax.Array,
+                 spec: QuantSpec) -> jax.Array:
     """(BK, BN) u8 codes + (BK//block, BN) u8 scales -> (BK, BN) f32."""
     bk, bn = codes.shape
-    elem = decode_elements(codes, fmt, mode)
+    block = spec.block
+    elem = decode_elements(codes, spec.format, spec.mode)
     sfac = scale_to_f32(scales)                      # (BK//block, BN)
     w = elem.reshape(bk // block, block, bn) * sfac[:, None, :]
     return w.reshape(bk, bn)
 
 
-def _mx_matmul_kernel(a_ref, c_ref, s_ref, o_ref, *, fmt: MXFormat,
-                      mode: str, block: int):
+def _mx_matmul_kernel(a_ref, c_ref, s_ref, o_ref, *, spec: QuantSpec):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = a_ref[...].astype(jnp.float32)
-    w = dequant_tile(c_ref[...], s_ref[...], fmt, mode, block)
+    w = dequant_tile(c_ref[...], s_ref[...], spec)
     o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("fmt", "mode", "block", "bm", "bn", "bk",
-                                    "interpret"))
 def mx_matmul_2d(a: jax.Array, codes: jax.Array, scales: jax.Array,
-                 fmt: str = "e4m3", mode: str = "paper",
-                 block: int = F.DEFAULT_BLOCK, bm: int = DEFAULT_BM,
+                 spec=None, mode: Optional[str] = None,
+                 block: Optional[int] = None, bm: int = DEFAULT_BM,
                  bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = True, *,
+                 fmt: Optional[str] = None) -> jax.Array:
     """a (M, K) @ dequant(codes (K, N), scales (K//block, N)) -> (M, N) f32.
 
-    K must be a multiple of ``block``; M/N/K are padded to tile multiples.
-    """
-    f = get_format(fmt)
+    K must be a multiple of the spec's block; M/N/K are padded to tile
+    multiples.  ``spec`` is a QuantSpec (deprecation shim: fmt=/mode=)."""
+    spec = resolve_spec(spec, fmt, mode, block,
+                        default=QuantSpec("e4m3", "paper"),
+                        caller="mx_matmul_2d")
+    return _mx_matmul_2d(a, codes, scales, spec, bm, bn, bk, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "bn", "bk", "interpret"))
+def _mx_matmul_2d(a: jax.Array, codes: jax.Array, scales: jax.Array,
+                  spec: QuantSpec, bm: int, bn: int, bk: int,
+                  interpret: bool) -> jax.Array:
+    block = spec.block
     m, k = a.shape
     k2, n = codes.shape
     assert k == k2, (a.shape, codes.shape)
@@ -82,8 +90,7 @@ def mx_matmul_2d(a: jax.Array, codes: jax.Array, scales: jax.Array,
     mp, kp = ap.shape
     np_ = cp.shape[1]
     grid = (mp // bm_, np_ // bn_, kp // bk_)
-    kernel = functools.partial(_mx_matmul_kernel, fmt=f, mode=mode,
-                               block=block)
+    kernel = functools.partial(_mx_matmul_kernel, spec=spec)
     out = pl.pallas_call(
         kernel,
         grid=grid,

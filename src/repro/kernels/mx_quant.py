@@ -23,17 +23,17 @@ pure-JAX reference (repro/core/convert.py), so tests assert bit-identity.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import formats as F
 from repro.core.convert import (_f32_fields, _quant_float_ocp,
                                 _quant_float_paper, _quant_int8,
                                 _marker_codes, shared_scale)
-from repro.core.formats import MXFormat, get_format
+from repro.core.formats import MXFormat
+from repro.core.spec import QuantSpec, resolve_spec
 
 DEFAULT_BM = 256
 DEFAULT_BN = 512  # multiple of 32 (block) and 128 (lanes)
@@ -80,17 +80,26 @@ def _mx_quant_kernel(x_ref, codes_ref, scales_ref, *, fmt: MXFormat,
     scales_ref[...] = scales
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("fmt", "mode", "block", "bm", "bn",
-                                    "interpret"))
-def mx_quantize_2d(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
-                   block: int = F.DEFAULT_BLOCK, bm: int = DEFAULT_BM,
-                   bn: int = DEFAULT_BN, interpret: bool = True
+def mx_quantize_2d(x: jax.Array, spec=None, mode: Optional[str] = None,
+                   block: Optional[int] = None, bm: int = DEFAULT_BM,
+                   bn: int = DEFAULT_BN, interpret: bool = True, *,
+                   fmt: Optional[str] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Quantize a 2-D array (M, N) along the trailing axis with the Pallas
     converter kernel.  M, N need not be tile-aligned (zero padding; zeros
-    never perturb a block's max exponent)."""
-    f = get_format(fmt)
+    never perturb a block's max exponent).  ``spec`` is a QuantSpec; the
+    ``fmt=``/``mode=``/``block=`` kwargs are the deprecation shim."""
+    spec = resolve_spec(spec, fmt, mode, block,
+                        default=QuantSpec("e4m3", "paper"),
+                        caller="mx_quantize_2d")
+    return _mx_quantize_2d(x, spec, bm, bn, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "bn", "interpret"))
+def _mx_quantize_2d(x: jax.Array, spec: QuantSpec, bm: int, bn: int,
+                    interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    f, mode, block = spec.format, spec.mode, spec.block
     m, n = x.shape
     bm_ = min(bm, max(1, m))
     bn_ = min(bn, n) if n % block == 0 and n < bn else bn

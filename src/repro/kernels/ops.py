@@ -7,38 +7,43 @@ TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` to compile to Mosaic.
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import formats as F
 from repro.core.convert import MXArray
+from repro.core.spec import QuantSpec, resolve_spec
 from repro.kernels import mx_matmul as _mm
 from repro.kernels import mx_quant as _mq
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
+_PAPER_DEFAULT = QuantSpec("e4m3", "paper")
 
-def mx_quantize_pallas(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
-                       block: int = F.DEFAULT_BLOCK) -> MXArray:
+
+def mx_quantize_pallas(x: jax.Array, spec=None, mode: Optional[str] = None,
+                       block: Optional[int] = None, *,
+                       fmt: Optional[str] = None) -> MXArray:
     """Quantize an ND tensor along its trailing axis with the Pallas
     converter kernel; returns the same MXArray container as the pure-JAX
-    path (bit-identical codes/scales)."""
+    path (bit-identical codes/scales).  ``spec`` is a QuantSpec; the
+    ``fmt=``/``mode=``/``block=`` kwargs are the deprecation shim."""
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="mx_quantize_pallas")
     shape = x.shape
     n = shape[-1]
     x2 = x.reshape(-1, n)
-    codes, scales = _mq.mx_quantize_2d(x2, fmt=fmt, mode=mode, block=block,
-                                       interpret=INTERPRET)
-    nblk = (n + block - 1) // block
+    codes, scales = _mq.mx_quantize_2d(x2, spec, interpret=INTERPRET)
+    nblk = (n + spec.block - 1) // spec.block
     # re-pad codes to the block multiple to match MXArray's invariant
-    pad = nblk * block - n
+    pad = nblk * spec.block - n
     if pad:
         codes = jnp.pad(codes, ((0, 0), (0, pad)))
-    codes = codes.reshape(shape[:-1] + (nblk * block,))
+    codes = codes.reshape(shape[:-1] + (nblk * spec.block,))
     scales = scales.reshape(shape[:-1] + (nblk,))
-    return MXArray(codes=codes, scales=scales, fmt=fmt, mode=mode,
-                   block=block, orig_len=n, axis=len(shape) - 1)
+    return MXArray.from_spec(codes, scales, spec, orig_len=n,
+                             axis=len(shape) - 1)
 
 
 def mx_matmul(a: jax.Array, w: MXArray) -> jax.Array:
@@ -48,16 +53,19 @@ def mx_matmul(a: jax.Array, w: MXArray) -> jax.Array:
     k, n = w.shape
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
-    out = _mm.mx_matmul_2d(a2, w.codes, w.scales, fmt=w.fmt, mode=w.mode,
-                           block=w.block, interpret=INTERPRET)
+    out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec,
+                           interpret=INTERPRET)
     return out.reshape(lead + (n,))
 
 
-def quantize_weight(w: jax.Array, fmt: str = "e4m3", mode: str = "paper",
-                    block: int = F.DEFAULT_BLOCK) -> MXArray:
+def quantize_weight(w: jax.Array, spec=None, mode: Optional[str] = None,
+                    block: Optional[int] = None, *,
+                    fmt: Optional[str] = None) -> MXArray:
     """Quantize a (K, N) weight along K (contraction) for mx_matmul."""
     from repro.core.convert import mx_quantize
-    return mx_quantize(w, fmt=fmt, mode=mode, block=block, axis=0)
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="quantize_weight")
+    return mx_quantize(w, spec, axis=0)
 
 
 def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -131,13 +139,15 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
     hq, d = q.shape[2], q.shape[3]
     hkv = kc.shape[2]
     rep = hq // hkv
-    if d % 32 or kc.shape[-1] != d:
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
+    if d % 32 or kc.shape[-1] != d or vc.shape[-1] != d \
+            or kk.block != 32 or kv.block != 32:
         return None                      # padded code layout unsupported
-    fmt, mode = cfg.mx.kv_fmt, cfg.mx.mode
 
     def call(q_, kc_, ks_, vc_, vs_, pos_):
-        return mx_decode_attention(q_, kc_, ks_, vc_, vs_, pos_, fmt=fmt,
-                                   mode=mode, rep=rep, interpret=INTERPRET)
+        return mx_decode_attention(q_, kc_, ks_, vc_, vs_, pos_,
+                                   key_spec=kk, value_spec=kv, rep=rep,
+                                   interpret=INTERPRET)
 
     rules = current_rules()
     if rules is None:
@@ -171,7 +181,6 @@ def mx_paged_decode_attention_ctx(q: jax.Array, pool: dict,
     from jax.sharding import PartitionSpec as P
     from repro.dist import compat
     from repro.dist.sharding import current_rules
-    from repro.core.pack import packed_nbytes
     from repro.kernels.mx_decode_attn import mx_paged_decode_attention
 
     kc, ks = pool["kc_pages"], pool["ks_pages"]
@@ -179,15 +188,17 @@ def mx_paged_decode_attention_ctx(q: jax.Array, pool: dict,
     hq, d = q.shape[2], q.shape[3]
     hkv = kc.shape[2]
     rep = hq // hkv
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
     if d % 32 or ks.shape[-1] * 32 != d \
-            or kc.shape[-1] != packed_nbytes(cfg.mx.kv_fmt, d):
+            or kk.block != 32 or kv.block != 32 \
+            or kc.shape[-1] != kk.storage_nbytes(d) \
+            or vc.shape[-1] != kv.storage_nbytes(d):
         return None                      # padded head dim unsupported
-    fmt, mode = cfg.mx.kv_fmt, cfg.mx.mode
 
     def call(q_, kc_, ks_, vc_, vs_, bt_, ln_):
         return mx_paged_decode_attention(q_, kc_, ks_, vc_, vs_, bt_, ln_,
-                                         fmt=fmt, mode=mode, rep=rep,
-                                         interpret=INTERPRET)
+                                         key_spec=kk, value_spec=kv,
+                                         rep=rep, interpret=INTERPRET)
 
     rules = current_rules()
     if rules is None:

@@ -1,54 +1,62 @@
 """Pure-jnp oracles for every Pallas kernel (bit-exact / allclose targets)."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import formats as F
 from repro.core.convert import (decode_elements, mx_quantize, scale_to_f32)
-from repro.core.formats import get_format
 from repro.core.pack import unpack_codes
+from repro.core.spec import QuantSpec, resolve_kv_specs, resolve_spec
+
+_PAPER_DEFAULT = QuantSpec("e4m3", "paper")
+_KV_DEFAULT = QuantSpec("int8", "ocp")
 
 
-def mx_quantize_2d_ref(x: jax.Array, fmt: str = "e4m3", mode: str = "paper",
-                       block: int = F.DEFAULT_BLOCK
+def mx_quantize_2d_ref(x: jax.Array, spec=None, mode: Optional[str] = None,
+                       block: Optional[int] = None, *,
+                       fmt: Optional[str] = None
                        ) -> Tuple[jax.Array, jax.Array]:
     """Oracle for kernels.mx_quant.mx_quantize_2d (trailing-axis blocks)."""
-    mx = mx_quantize(x.astype(jnp.float32), fmt=fmt, mode=mode, block=block,
-                     axis=-1)
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="mx_quantize_2d_ref")
+    mx = mx_quantize(x.astype(jnp.float32), spec, axis=-1)
     n = x.shape[-1]
-    nblk = (n + block - 1) // block
+    nblk = (n + spec.block - 1) // spec.block
     return mx.codes[..., :n], mx.scales[..., :nblk]
 
 
-def dequant_ref(codes: jax.Array, scales: jax.Array, fmt: str, mode: str,
-                block: int = F.DEFAULT_BLOCK) -> jax.Array:
+def dequant_ref(codes: jax.Array, scales: jax.Array, spec=None,
+                mode: Optional[str] = None, block: Optional[int] = None, *,
+                fmt: Optional[str] = None) -> jax.Array:
     """Dequantize (K, N) codes quantized along axis 0 (contraction dim)."""
-    f = get_format(fmt)
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="dequant_ref")
     k, n = codes.shape
-    elem = decode_elements(codes, f, mode)
+    elem = decode_elements(codes, spec.format, spec.mode)
     sfac = scale_to_f32(scales)
-    w = elem.reshape(k // block, block, n) * sfac[:, None, :]
+    w = elem.reshape(k // spec.block, spec.block, n) * sfac[:, None, :]
     return w.reshape(k, n)
 
 
 def mx_matmul_2d_ref(a: jax.Array, codes: jax.Array, scales: jax.Array,
-                     fmt: str = "e4m3", mode: str = "paper",
-                     block: int = F.DEFAULT_BLOCK) -> jax.Array:
+                     spec=None, mode: Optional[str] = None,
+                     block: Optional[int] = None, *,
+                     fmt: Optional[str] = None) -> jax.Array:
     """Oracle for kernels.mx_matmul.mx_matmul_2d."""
-    w = dequant_ref(codes, scales, fmt, mode, block)
+    spec = resolve_spec(spec, fmt, mode, block, default=_PAPER_DEFAULT,
+                        caller="mx_matmul_2d_ref")
+    w = dequant_ref(codes, scales, spec)
     return jnp.dot(a.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32)
 
 
-def _dequant_cache_ref(codes: jax.Array, scales: jax.Array, fmt: str,
-                       mode: str) -> jax.Array:
+def _dequant_cache_ref(codes: jax.Array, scales: jax.Array,
+                       spec: QuantSpec) -> jax.Array:
     """(B, S, H, D) u8 codes + (B, S, H, D/32) scales -> f32."""
-    f = get_format(fmt)
     d = codes.shape[-1]
-    elem = decode_elements(codes, f, mode)
+    elem = decode_elements(codes, spec.format, spec.mode)
     sfac = scale_to_f32(scales)
     w = elem.reshape(codes.shape[:-1] + (d // 32, 32)) * sfac[..., None]
     return w.reshape(codes.shape)
@@ -56,14 +64,22 @@ def _dequant_cache_ref(codes: jax.Array, scales: jax.Array, fmt: str,
 
 def mx_decode_attention_ref(q: jax.Array, k_codes: jax.Array,
                             k_scales: jax.Array, v_codes: jax.Array,
-                            v_scales: jax.Array, lengths, *, fmt: str,
-                            mode: str, rep: int = 1) -> jax.Array:
+                            v_scales: jax.Array, lengths, *, spec=None,
+                            key_spec=None, value_spec=None, rep: int = 1,
+                            fmt: Optional[str] = None,
+                            mode: Optional[str] = None) -> jax.Array:
     """Oracle for kernels.mx_decode_attn.mx_decode_attention (and, with a
     per-slot ``lengths`` vector, for the paged kernel's semantics over an
     already-gathered contiguous layout): dequantize the whole cache, dense
     masked softmax over positions <= lengths[b].  q (B,1,Hq,D) -> same."""
-    k = _dequant_cache_ref(k_codes, k_scales, fmt, mode)
-    v = _dequant_cache_ref(v_codes, v_scales, fmt, mode)
+    from repro.kernels.mx_decode_attn import _require_block32
+
+    key_spec, value_spec = resolve_kv_specs(
+        spec, key_spec, value_spec, fmt, mode, default=_KV_DEFAULT,
+        caller="mx_decode_attention_ref")
+    _require_block32(key_spec, value_spec, "mx_decode_attention_ref")
+    k = _dequant_cache_ref(k_codes, k_scales, key_spec)
+    v = _dequant_cache_ref(v_codes, v_scales, value_spec)
     b, s, hkv, d = k.shape
     hq = q.shape[2]
     idx = jnp.arange(hq) // rep
@@ -86,11 +102,16 @@ def mx_paged_decode_attention_ref(q: jax.Array, kc_pool: jax.Array,
                                   ks_pool: jax.Array, vc_pool: jax.Array,
                                   vs_pool: jax.Array,
                                   block_tables: jax.Array, lengths,
-                                  *, fmt: str, mode: str,
-                                  rep: int = 1) -> jax.Array:
+                                  *, spec=None, key_spec=None,
+                                  value_spec=None, rep: int = 1,
+                                  fmt: Optional[str] = None,
+                                  mode: Optional[str] = None) -> jax.Array:
     """Oracle for kernels.mx_decode_attn.mx_paged_decode_attention: gather
     the block-table pages into a contiguous layout, unpack the bit-packed
-    codes, then run the contiguous reference."""
+    codes per role, then run the contiguous reference."""
+    key_spec, value_spec = resolve_kv_specs(
+        spec, key_spec, value_spec, fmt, mode, default=_KV_DEFAULT,
+        caller="mx_paged_decode_attention_ref")
     d = ks_pool.shape[-1] * 32
     b, np_max = block_tables.shape
     page, hkv = kc_pool.shape[1], kc_pool.shape[2]
@@ -99,9 +120,14 @@ def mx_paged_decode_attention_ref(q: jax.Array, kc_pool: jax.Array,
         g = pool[block_tables]                    # (B, np_max, page, H, X)
         return g.reshape(b, np_max * page, hkv, last)
 
-    kc = unpack_codes(gather(kc_pool, kc_pool.shape[-1]), fmt, d)
-    vc = unpack_codes(gather(vc_pool, vc_pool.shape[-1]), fmt, d)
+    def codes_of(pool, role_spec):
+        g = gather(pool, pool.shape[-1])
+        return unpack_codes(g, role_spec.fmt, d) if role_spec.packed else g
+
+    kc = codes_of(kc_pool, key_spec)
+    vc = codes_of(vc_pool, value_spec)
     ks = gather(ks_pool, ks_pool.shape[-1])
     vs = gather(vs_pool, vs_pool.shape[-1])
-    return mx_decode_attention_ref(q, kc, ks, vc, vs, lengths, fmt=fmt,
-                                   mode=mode, rep=rep)
+    return mx_decode_attention_ref(q, kc, ks, vc, vs, lengths,
+                                   key_spec=key_spec,
+                                   value_spec=value_spec, rep=rep)

@@ -12,17 +12,16 @@ Variants:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import make_rules, param_specs, use_rules
 from repro.models import (Model, batch_specs, decode_specs, load_config)
-from repro.models.config import ModelConfig, MXPolicy, SHAPES, ShapeSpec
+from repro.models.config import (ModelConfig, QuantPolicy, QuantSpec,
+                                 SHAPES, ShapeSpec)
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.step import build_train_step
 
@@ -39,12 +38,14 @@ def variant_config(arch: str, variant: str) -> ModelConfig:
     if variant == "baseline":
         return cfg
     if variant == "paper":
-        mx = MXPolicy(fmt="e4m3", mode="paper", weights=True, kv_cache=True,
-                      kv_fmt="int8", grads=True, grad_fmt="e4m3")
+        mx = QuantPolicy(weights=QuantSpec("e4m3", "paper"),
+                         kv_key=QuantSpec("int8", "paper"),
+                         kv_value=QuantSpec("int8", "paper"),
+                         grads=QuantSpec("e4m3", "paper"))
         return dataclasses.replace(cfg, mx=mx)
     if variant == "optimized":
-        mx = MXPolicy(fmt="e4m3", mode="ocp", weights=True, kv_cache=True,
-                      kv_fmt="int8", grads=True, grad_fmt="e4m3")
+        mx = QuantPolicy.parse(
+            "weights=e4m3@32:ocp,kv=int8@32:ocp,grads=e4m3@32:ocp")
         return dataclasses.replace(cfg, mx=mx, attn_impl="flash")
     raise ValueError(f"unknown variant {variant!r}")
 
@@ -177,8 +178,10 @@ def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline",
         b_sds = batch_specs(cfg, shape)
         bshard = shardings_for_batch(b_sds, mesh)
         step_sds = jax.ShapeDtypeStruct((), jnp.int32)
-        fn = build_train_step(model, opt_cfg, microbatches=1,
-                              fake_quant=cfg.mx.weights)
+        fn = build_train_step(
+            model, opt_cfg, microbatches=1,
+            fake_quant=(cfg.mx.weights is not None
+                        or cfg.mx.activations is not None))
 
         def wrapped(params, opt_state, batch, step):
             with use_rules(rules):

@@ -66,7 +66,8 @@ def _kernel_corrections(cfg, shape_name: str, variant: str, kind: str,
         if cfg.family == "encdec":
             n_attn = n_layers // 2            # decoder self-attn only
         flops += per_layer * n_attn
-    if kind == "decode" and cfg.mx.kv_cache and cfg.attn_impl == "flash" \
+    if kind == "decode" and cfg.mx.kv_key is not None \
+            and cfg.attn_impl == "flash" \
             and not cfg.mla and cfg.family == "decoder" \
             and cfg.hd % 32 == 0:
         b_loc = max(1, sp.global_batch // ndata)

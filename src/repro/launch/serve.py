@@ -1,17 +1,21 @@
 """Serving launcher: batched greedy/sampled generation with optional MX
 weights + MX KV cache (the paper's converter on the serving path).
 
-Static batch (equal-length prompts):
+The quantization policy is one ``--quant`` flag of ``role=spec`` pairs
+(see ``repro.core.spec``); K and V pages may use different formats:
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi_34b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16 --mx-kv int8
+        --batch 4 --prompt-len 32 --new-tokens 16 --quant kv=int8@32:ocp
 
 Continuous batching over the paged MX KV cache (variable-length prompts
-admitted mid-flight; see README §Continuous batching & paged KV):
+admitted mid-flight; see README §Continuous batching & paged KV), with
+mixed-format pages:
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi_34b --reduced \
         --paged --page-size 16 --batch 8 --requests 24 --mixed \
-        --mx-kv int8
+        --quant kv_key=int8@32:ocp,kv_value=e2m1@32:ocp
+
+``--mx-kv``/``--mx-mode`` are deprecated aliases for uniform KV policies.
 """
 from __future__ import annotations
 
@@ -28,10 +32,17 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quant", default=None,
+                    help="quantization policy, e.g. "
+                         "'kv_key=int8@32:ocp,kv_value=e2m1@32:ocp' "
+                         "(roles: weights, activations, kv_key, kv_value, "
+                         "grads; 'kv=' sets both KV roles)")
     ap.add_argument("--mx-kv", choices=["off", "int8", "e4m3", "e5m2",
                                         "e3m2", "e2m3", "e2m1"],
-                    default="off")
-    ap.add_argument("--mx-mode", choices=["paper", "ocp"], default="ocp")
+                    default="off",
+                    help="deprecated: use --quant kv=<fmt>@32:<mode>")
+    ap.add_argument("--mx-mode", choices=["paper", "ocp"], default="ocp",
+                    help="deprecated: use --quant")
     ap.add_argument("--shard", action="store_true",
                     help="serve under a (data, model) mesh with the decode "
                          "sharding rules (needs >1 device)")
@@ -60,14 +71,18 @@ def main() -> None:
     from repro.launch.mesh import make_test_mesh
     from repro.models import Model, load_config, load_reduced, \
         make_concrete_batch
-    from repro.models.config import MXPolicy
+    from repro.models.config import QuantPolicy, QuantSpec
     from repro.serve import (ContinuousBatchingEngine, GenerationConfig,
                              ServeEngine)
 
     over = {}
-    if args.mx_kv != "off":
-        over["mx"] = MXPolicy(mode=args.mx_mode, kv_cache=True,
-                              kv_fmt=args.mx_kv)
+    if args.quant:
+        over["mx"] = QuantPolicy.parse(args.quant)
+    elif args.mx_kv != "off":
+        print(f"[serve] --mx-kv/--mx-mode are deprecated; use "
+              f"--quant kv={args.mx_kv}@32:{args.mx_mode}")
+        kv = QuantSpec(args.mx_kv, args.mx_mode)
+        over["mx"] = QuantPolicy(kv_key=kv, kv_value=kv)
     cfg = (load_reduced if args.reduced else load_config)(args.arch, **over)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -77,7 +92,8 @@ def main() -> None:
         mesh = make_test_mesh(jax.device_count())
         # decode posture: weights stay resident (no per-token ZeRO-3 gather)
         rules = make_rules(mesh.axis_names, fsdp_params=False,
-                           paged_pool_sharded=args.shard_pool)
+                           paged_pool_sharded=args.shard_pool,
+                           quant=cfg.mx)
         mesh_ctx = compat.set_mesh(mesh)
         print(f"[serve] sharded over mesh {dict(mesh.shape)}")
     gen = GenerationConfig(max_new_tokens=args.new_tokens,
@@ -105,7 +121,7 @@ def main() -> None:
             out = eng.run()
             dt = time.perf_counter() - t0
         toks = sum(len(v) for v in out.values())
-        print(f"[serve] {cfg.name} paged mx_kv={args.mx_kv} "
+        print(f"[serve] {cfg.name} paged quant={cfg.mx} "
               f"page={args.page_size}: {len(out)} requests "
               f"({'mixed' if args.mixed else 'uniform'} lengths), "
               f"{toks} tokens in {dt:.2f}s (incl. compile) — "
@@ -128,7 +144,7 @@ def main() -> None:
         out = eng.generate(batch, gen)
         t_steady = time.perf_counter() - t0
     toks = out.size
-    print(f"[serve] {cfg.name} mx_kv={args.mx_kv}: generated {toks} tokens; "
+    print(f"[serve] {cfg.name} quant={cfg.mx}: generated {toks} tokens; "
           f"first {t_first:.2f}s (incl. compile), steady {t_steady:.2f}s "
           f"({toks / t_steady:.1f} tok/s)")
     print("[serve] sample output tokens:", out[0][:12].tolist())

@@ -14,14 +14,15 @@ the cluster scheduler on failure.  Recommended libtpu env for overlap:
     LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true
       --xla_tpu_enable_latency_hiding_scheduler=true
       --xla_tpu_overlap_compute_collective_tc=true"
-MX levers: --mx {off,paper,ocp} applies the converter to weights (training
-fake-quant) and --compressed-dp switches the gradient exchange to the
-MX-compressed collective (ZeRO-1 explicit-DP path).
+MX levers: --quant takes the unified per-role policy (e.g.
+--quant weights=e4m3@32:ocp,grads=e4m3@32:ocp), --mx {off,paper,ocp} is
+the deprecated uniform alias, and --compressed-dp switches the gradient
+exchange to the MX-compressed collective (ZeRO-1 explicit-DP path; the
+exchange format follows the policy's ``grads`` role).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 
 
@@ -36,7 +37,12 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--mx", choices=["off", "paper", "ocp"], default="off")
+    ap.add_argument("--quant", default=None,
+                    help="quantization policy, e.g. "
+                         "'weights=e4m3@32:ocp,grads=e4m3@32:ocp'")
+    ap.add_argument("--mx", choices=["off", "paper", "ocp"], default="off",
+                    help="deprecated: use --quant (applies e4m3 to "
+                         "weights+grads in the given mode)")
     ap.add_argument("--compressed-dp", action="store_true",
                     help="explicit-DP shard_map step with MX-compressed "
                          "gradient all-reduce (needs >1 device)")
@@ -49,36 +55,39 @@ def main() -> None:
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
 
     from repro.data import DataConfig, SyntheticLM, make_batch_for
     from repro.models import Model, load_config, load_reduced
-    from repro.models.config import MXPolicy
+    from repro.models.config import QuantPolicy
     from repro.optim import AdamWConfig
     from repro.train import (LoopConfig, build_train_step,
                              build_train_step_compressed_dp,
                              init_train_state, train_loop)
 
     over = {}
-    if args.mx != "off":
-        over["mx"] = MXPolicy(fmt="e4m3", mode=args.mx, weights=True,
-                              grads=True)
+    if args.quant:
+        over["mx"] = QuantPolicy.parse(args.quant)
+    elif args.mx != "off":
+        print(f"[train] --mx is deprecated; use --quant "
+              f"weights=e4m3@32:{args.mx},grads=e4m3@32:{args.mx}")
+        over["mx"] = QuantPolicy.parse(
+            f"weights=e4m3@32:{args.mx},grads=e4m3@32:{args.mx}")
     cfg = (load_reduced if args.reduced else load_config)(args.arch, **over)
     model = Model(cfg)
     params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
     n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
     print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
-          f"mx={args.mx}, devices={jax.device_count()}")
+          f"quant={cfg.mx}, devices={jax.device_count()}")
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10
                                                        + 1),
                           total_steps=args.steps)
-    fake_quant = args.mx != "off"
+    fake_quant = cfg.mx.weights is not None \
+        or cfg.mx.activations is not None
     if args.compressed_dp:
         ndev = jax.device_count()
         mesh = jax.make_mesh((ndev,), ("data",))
         step = build_train_step_compressed_dp(
             model, opt_cfg, mesh=mesh, dp_axes=("data",),
-            mode="paper" if args.mx == "paper" else "ocp",
             fake_quant=fake_quant)
         step = jax.jit(step)
         ctx = jax.set_mesh(mesh)

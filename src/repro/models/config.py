@@ -1,21 +1,19 @@
-"""Model configuration shared by every assigned architecture."""
+"""Model configuration shared by every assigned architecture.
+
+Quantization is configured with a per-tensor-role ``QuantPolicy`` (see
+``repro.core.spec``): each role — weights, activations, kv_key, kv_value,
+grads — carries an optional ``QuantSpec`` (element format @ block : mode),
+so e.g. INT8 keys can pair with E2M1 values.  ``MXPolicy`` is the
+deprecation shim over the old where-booleans + how-strings form.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
-
-@dataclasses.dataclass(frozen=True)
-class MXPolicy:
-    """Where the paper's converter is applied inside the model/trainer."""
-    fmt: str = "e4m3"
-    mode: str = "ocp"              # "paper" for the faithful baseline
-    block: int = 32
-    weights: bool = False          # matmul weights stored/used as MX
-    kv_cache: bool = False         # serving KV cache stored as MX
-    grads: bool = False            # gradient all-gather compressed to MX
-    kv_fmt: str = "int8"           # KV cache element format
-    grad_fmt: str = "e4m3"         # gradient exchange element format
+from repro.core.spec import (  # noqa: F401  (re-exported for callers)
+    QuantPolicy, QuantSpec, mx_policy as MXPolicy,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +58,7 @@ class ModelConfig:
     prefix_len: int = 0            # internvl2: ViT patch tokens (stub embeds)
     frontend: str = "none"         # none | patch | frames
     # --- numerics / the paper's technique ---
-    mx: MXPolicy = dataclasses.field(default_factory=MXPolicy)
+    mx: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
     dtype: str = "bfloat16"        # compute dtype
     param_dtype: str = "bfloat16"  # stored parameter dtype (master is f32)
     remat: bool = True             # activation checkpointing per layer

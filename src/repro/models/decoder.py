@@ -6,12 +6,10 @@ through the same scan.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.dist.sharding import logical
 from repro.models import layers as L

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.dist.sharding import logical
 from repro.models import layers as L
 from repro.models.config import ModelConfig
-from repro.models.decoder import VOCAB_PAD, padded_vocab
+from repro.models.decoder import padded_vocab
 
 
 def _enc_layer_init(key, cfg):

@@ -1,16 +1,18 @@
 """Shared neural layers for the model zoo (functional JAX, no framework).
 
 Every matmul routes through ``dense()``, which is where the paper's MX
-converter plugs in:
-  * training     — fake-quantization of weights (MX direct-cast training);
+converter plugs in, steered by the per-tensor-role ``QuantPolicy``:
+  * training     — fake-quantization of weights (and optionally
+                   activations) per the ``weights``/``activations`` roles;
   * serving      — weights stored as MXArray (uint8 codes + E8M0 scales),
                    dequantized on the fly => ~4x less weight HBM traffic;
-  * KV caches    — quantized along head_dim in 32-element blocks.
+  * KV caches    — quantized along head_dim per the ``kv_key``/``kv_value``
+                   roles, which may carry *different* element formats
+                   (e.g. INT8 keys + E2M1 values).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -19,10 +21,11 @@ import numpy as np
 
 from repro.core.convert import (MXArray, mx_dequantize, mx_quantize,
                                 quantize_dequantize)
-from repro.core.pack import pack_codes, packed_nbytes, unpack_codes
+from repro.core.pack import pack_codes, unpack_codes
+from repro.core.spec import QuantPolicy, QuantSpec
 from repro.dist.sharding import (bf16_matmul_out_enabled, logical,
                                  weight_gather_enabled, weight_gather_mode)
-from repro.models.config import ModelConfig, MXPolicy
+from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
 
@@ -82,31 +85,32 @@ def _gather_spec(tp: str, rank: int):
     return lead + (None, "model")          # col (default)
 
 
-def dense(x: jax.Array, w, mx: Optional[MXPolicy] = None,
+def dense(x: jax.Array, w, mx: Optional[QuantPolicy] = None,
           fake_quant: bool = False, tp: str = "col") -> jax.Array:
-    """x @ w with optional MX weight handling (see module docstring).
+    """x @ w steered by the policy's ``weights``/``activations`` roles
+    (see module docstring).
 
     ``tp`` is the tensor-parallel role of the weight: "col" shards the
     output dim over "model", "row" the input dim (Megatron convention).
     """
     gather = weight_gather_enabled()
+    if fake_quant and mx is not None and mx.activations is not None:
+        x = quantize_dequantize(x.astype(jnp.float32), mx.activations,
+                                axis=-1).astype(x.dtype)
     if isinstance(w, MXArray):
         # gather the *codes* (u8): the FSDP all-gather moves ~4x fewer
         # bytes than gathering f32/bf16 weights — the paper's converter as
         # a collective-compression lever
         if gather:
             spec = _gather_spec(tp, w.codes.ndim)
-            codes = logical(w.codes, *spec)
-            scales = logical(w.scales, *spec)
-            w = MXArray(codes=codes, scales=scales, fmt=w.fmt, mode=w.mode,
-                        block=w.block, orig_len=w.orig_len, axis=w.axis)
+            w = dataclasses.replace(w, codes=logical(w.codes, *spec),
+                                    scales=logical(w.scales, *spec))
         wd = mx_dequantize(w).astype(x.dtype)
     else:
         if gather:
             w = logical(w, *_gather_spec(tp, w.ndim))
-        if fake_quant and mx is not None and mx.weights:
-            wd = quantize_dequantize(w.astype(jnp.float32), fmt=mx.fmt,
-                                     mode=mx.mode, block=mx.block,
+        if fake_quant and mx is not None and mx.weights is not None:
+            wd = quantize_dequantize(w.astype(jnp.float32), mx.weights,
                                      axis=0).astype(x.dtype)
         else:
             wd = w.astype(x.dtype)
@@ -146,7 +150,7 @@ def softmax_f32(scores: jax.Array, axis: int = -1) -> jax.Array:
 
 
 # =============================================================================
-# KV cache (bf16 or MX)
+# KV cache (bf16 or MX; per-role key/value specs)
 # =============================================================================
 def _code_len(dim: int, block: int) -> int:
     return -(-dim // block) * block
@@ -154,32 +158,37 @@ def _code_len(dim: int, block: int) -> int:
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   n_kv: int, hd: int, layers_dim: Tuple[int, ...] = ()):
-    """Allocate one attention layer's cache (optionally layer-stacked)."""
-    if cfg.mx.kv_cache:
-        cl = _code_len(hd, cfg.mx.block)
-        shape = layers_dim + (batch, max_len, n_kv, cl)
-        sshape = layers_dim + (batch, max_len, n_kv, cl // cfg.mx.block)
-        z8 = jnp.zeros(shape, jnp.uint8)
-        s8 = jnp.zeros(sshape, jnp.uint8)
-        return {"k_codes": z8, "k_scales": s8,
-                "v_codes": z8, "v_scales": s8}
+    """Allocate one attention layer's cache (optionally layer-stacked).
+    K and V are sized per their policy roles (blocks may differ)."""
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
+    if kk is not None:
+        def side(spec):
+            cl = _code_len(hd, spec.block)
+            codes = jnp.zeros(layers_dim + (batch, max_len, n_kv, cl),
+                              jnp.uint8)
+            scales = jnp.zeros(
+                layers_dim + (batch, max_len, n_kv, cl // spec.block),
+                jnp.uint8)
+            return codes, scales
+
+        kc, ks = side(kk)
+        vc, vs = side(kv)
+        return {"k_codes": kc, "k_scales": ks,
+                "v_codes": vc, "v_scales": vs}
     shape = layers_dim + (batch, max_len, n_kv, hd)
     z = jnp.zeros(shape, dtype_of(cfg))
     return {"k": z, "v": z}
 
 
-def _kv_quant(x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
-    mx = mx_quantize(x.astype(jnp.float32), fmt=cfg.mx.kv_fmt,
-                     mode=cfg.mx.mode, block=cfg.mx.block, axis=-1)
+def _kv_quant(x: jax.Array, spec: QuantSpec) -> Tuple[jax.Array, jax.Array]:
+    mx = mx_quantize(x.astype(jnp.float32), spec, axis=-1)
     return mx.codes, mx.scales
 
 
-def _kv_dequant(codes: jax.Array, scales: jax.Array, cfg: ModelConfig,
+def _kv_dequant(codes: jax.Array, scales: jax.Array, spec: QuantSpec,
                 dtype, orig_len: Optional[int] = None) -> jax.Array:
-    mx = MXArray(codes=codes, scales=scales, fmt=cfg.mx.kv_fmt,
-                 mode=cfg.mx.mode, block=cfg.mx.block,
-                 orig_len=orig_len or codes.shape[-1],
-                 axis=codes.ndim - 1)
+    mx = MXArray.from_spec(codes, scales, spec, orig_len=orig_len,
+                           axis=codes.ndim - 1)
     return mx_dequantize(mx).astype(dtype)
 
 
@@ -191,9 +200,9 @@ def cache_write(cache, k: jax.Array, v: jax.Array, pos, cfg: ModelConfig):
     all-gather the full cache — only the one-token update is gathered."""
     k = logical(k, "kv_batch", None, None, None)
     v = logical(v, "kv_batch", None, None, None)
-    if cfg.mx.kv_cache:
-        kc, ks = _kv_quant(k, cfg)
-        vc, vs = _kv_quant(v, cfg)
+    if cfg.mx.kv_key is not None:
+        kc, ks = _kv_quant(k, cfg.mx.kv_key)
+        vc, vs = _kv_quant(v, cfg.mx.kv_value)
         upd = dict(k_codes=kc, k_scales=ks, v_codes=vc, v_scales=vs)
         out = {}
         for name, val in upd.items():
@@ -209,9 +218,11 @@ def cache_write(cache, k: jax.Array, v: jax.Array, pos, cfg: ModelConfig):
 
 
 def cache_read(cache, cfg: ModelConfig, dtype, hd: Optional[int] = None):
-    if cfg.mx.kv_cache:
-        k = _kv_dequant(cache["k_codes"], cache["k_scales"], cfg, dtype, hd)
-        v = _kv_dequant(cache["v_codes"], cache["v_scales"], cfg, dtype, hd)
+    if cfg.mx.kv_key is not None:
+        k = _kv_dequant(cache["k_codes"], cache["k_scales"], cfg.mx.kv_key,
+                        dtype, hd)
+        v = _kv_dequant(cache["v_codes"], cache["v_scales"],
+                        cfg.mx.kv_value, dtype, hd)
         return k, v
     return cache["k"].astype(dtype), cache["v"].astype(dtype)
 
@@ -224,19 +235,28 @@ def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
                         layers_dim: Tuple[int, ...] = ()):
     """Allocate one attention layer's page pool (optionally layer-stacked).
 
-    MX layout packs sub-byte element codes via repro.core.pack, so an FP4
-    pool really is ~4x smaller than bf16 in HBM.  Page 0 is reserved by the
-    serving engine as the trash page (inactive slots write there)."""
-    if cfg.mx.kv_cache:
-        cl = _code_len(hd, cfg.mx.block)
-        cb = packed_nbytes(cfg.mx.kv_fmt, cl)
-        shape = layers_dim + (num_pages, page_size, n_kv, cb)
-        sshape = layers_dim + (num_pages, page_size, n_kv,
-                               cl // cfg.mx.block)
-        return {"kc_pages": jnp.zeros(shape, jnp.uint8),
-                "ks_pages": jnp.zeros(sshape, jnp.uint8),
-                "vc_pages": jnp.zeros(shape, jnp.uint8),
-                "vs_pages": jnp.zeros(sshape, jnp.uint8)}
+    MX layout packs sub-byte element codes via repro.core.pack (when the
+    role's spec says ``packed``), so an FP4 pool really is ~4x smaller
+    than bf16 in HBM — and K/V pools are sized per their own roles, so
+    INT8 keys can share an engine with half-size E2M1 value pages.
+    Page 0 is reserved by the serving engine as the trash page (inactive
+    slots write there)."""
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
+    if kk is not None:
+        def side(spec):
+            cl = _code_len(hd, spec.block)
+            cb = spec.storage_nbytes(cl)
+            codes = jnp.zeros(
+                layers_dim + (num_pages, page_size, n_kv, cb), jnp.uint8)
+            scales = jnp.zeros(
+                layers_dim + (num_pages, page_size, n_kv, cl // spec.block),
+                jnp.uint8)
+            return codes, scales
+
+        kc, ks = side(kk)
+        vc, vs = side(kv)
+        return {"kc_pages": kc, "ks_pages": ks,
+                "vc_pages": vc, "vs_pages": vs}
     # distinct buffers per key: the serving engine donates the pool into
     # its jitted step, and aliased leaves would be donated twice
     shape = layers_dim + (num_pages, page_size, n_kv, hd)
@@ -256,11 +276,14 @@ def paged_cache_write(pool, k: jax.Array, v: jax.Array, pages: jax.Array,
     k/v (B, 1, n_kv, hd); pages/offsets (B,) i32 — slot b's token lands at
     pool[pages[b], offsets[b]].  Distinct active slots own distinct pages,
     so the scatter indices never collide except on the trash page."""
-    if cfg.mx.kv_cache:
-        kc, ks = _kv_quant(k, cfg)
-        vc, vs = _kv_quant(v, cfg)
-        kc = pack_codes(kc, cfg.mx.kv_fmt)
-        vc = pack_codes(vc, cfg.mx.kv_fmt)
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
+    if kk is not None:
+        kc, ks = _kv_quant(k, kk)
+        vc, vs = _kv_quant(v, kv)
+        if kk.packed:
+            kc = pack_codes(kc, kk.fmt)
+        if kv.packed:
+            vc = pack_codes(vc, kv.fmt)
         upd = dict(kc_pages=kc, ks_pages=ks, vc_pages=vc, vs_pages=vs)
         return {name: logical(pool[name].at[pages, offsets].set(val[:, 0]),
                               "kv_pages", None, None, None)
@@ -278,18 +301,19 @@ def paged_cache_gather(pool, block_tables: jax.Array, cfg: ModelConfig,
     through the block table (dense-attention fallback path; the Pallas
     kernel gathers at the HBM->VMEM boundary instead)."""
     b, np_max = block_tables.shape
-    if cfg.mx.kv_cache:
-        cl = _code_len(hd, cfg.mx.block)
-
-        def one(codes_key, scales_key):
+    if cfg.mx.kv_key is not None:
+        def one(codes_key, scales_key, spec):
+            cl = _code_len(hd, spec.block)
             c = pool[codes_key][block_tables]   # (B, np, page, n_kv, CB)
             c = c.reshape((b, -1) + c.shape[3:])
-            c = unpack_codes(c, cfg.mx.kv_fmt, cl)
+            if spec.packed:
+                c = unpack_codes(c, spec.fmt, cl)
             s = pool[scales_key][block_tables]
             s = s.reshape((b, -1) + s.shape[3:])
-            return _kv_dequant(c, s, cfg, dtype, hd)
+            return _kv_dequant(c, s, spec, dtype, hd)
 
-        return one("kc_pages", "ks_pages"), one("vc_pages", "vs_pages")
+        return (one("kc_pages", "ks_pages", cfg.mx.kv_key),
+                one("vc_pages", "vs_pages", cfg.mx.kv_value))
     k = pool["k_pages"][block_tables]
     v = pool["v_pages"][block_tables]
     k = k.reshape((b, -1) + k.shape[3:])
@@ -322,7 +346,7 @@ def attention_paged_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
     pool = paged_cache_write(pool, k, v, pages, lengths % page, cfg)
     q = logical(q, "kv_batch", None, None, None)
     out = None
-    if cfg.mx.kv_cache and cfg.attn_impl == "flash":
+    if cfg.mx.kv_key is not None and cfg.attn_impl == "flash":
         from repro.kernels.ops import mx_paged_decode_attention_ctx
         out = mx_paged_decode_attention_ctx(q, pool, block_tables, lengths,
                                             cfg)
@@ -411,7 +435,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
             # kv-subgroup-shards the read and gathers the full cache to
             # honor the cache's replicated output contract.
             q = logical(q, "kv_batch", None, None, None)
-            if cfg.mx.kv_cache and cfg.attn_impl == "flash":
+            if cfg.mx.kv_key is not None and cfg.attn_impl == "flash":
                 # fused path: the u8 cache never leaves HBM un-quantized —
                 # dequant happens in VMEM inside the kernel
                 from repro.kernels.ops import mx_decode_attention_ctx
@@ -485,22 +509,25 @@ def mla_init(key, cfg: ModelConfig) -> Params:
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    layers_dim: Tuple[int, ...] = ()):
     """MLA caches the compressed c_kv (kv_lora) + shared k_rope — 576 values
-    per token instead of 2*H*hd = 32768; optionally MX-quantized."""
+    per token instead of 2*H*hd = 32768; optionally MX-quantized.  The
+    compressed cache has no separate K/V tensors, so it follows the
+    ``kv_key`` role's spec."""
     dt = dtype_of(cfg)
     ckv = layers_dim + (batch, max_len, cfg.kv_lora)
     krs = layers_dim + (batch, max_len, cfg.qk_rope_dim)
-    if cfg.mx.kv_cache:
-        cl = _code_len(cfg.kv_lora, cfg.mx.block)
-        clr = _code_len(cfg.qk_rope_dim, cfg.mx.block)
+    spec = cfg.mx.kv_key
+    if spec is not None:
+        cl = _code_len(cfg.kv_lora, spec.block)
+        clr = _code_len(cfg.qk_rope_dim, spec.block)
         return {"ckv_codes": jnp.zeros(
                     layers_dim + (batch, max_len, cl), jnp.uint8),
                 "ckv_scales": jnp.zeros(
-                    layers_dim + (batch, max_len, cl // cfg.mx.block),
+                    layers_dim + (batch, max_len, cl // spec.block),
                     jnp.uint8),
                 "kr_codes": jnp.zeros(
                     layers_dim + (batch, max_len, clr), jnp.uint8),
                 "kr_scales": jnp.zeros(
-                    layers_dim + (batch, max_len, clr // cfg.mx.block),
+                    layers_dim + (batch, max_len, clr // spec.block),
                     jnp.uint8)}
     return {"ckv": jnp.zeros(ckv, dt), "kr": jnp.zeros(krs, dt)}
 
@@ -562,9 +589,9 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
 def _mla_cache_write(cache, ckv, kr, pos, cfg):
     ckv = logical(ckv, "kv_batch", None, None)
     kr = logical(kr, "kv_batch", None, None)
-    if cfg.mx.kv_cache:
-        cc, cs = _kv_quant(ckv, cfg)
-        kc, kss = _kv_quant(kr, cfg)
+    if cfg.mx.kv_key is not None:
+        cc, cs = _kv_quant(ckv, cfg.mx.kv_key)
+        kc, kss = _kv_quant(kr, cfg.mx.kv_key)
         out = {}
         for name, val in dict(ckv_codes=cc, ckv_scales=cs, kr_codes=kc,
                               kr_scales=kss).items():
@@ -579,11 +606,11 @@ def _mla_cache_write(cache, ckv, kr, pos, cfg):
 
 
 def _mla_cache_read(cache, cfg, dtype):
-    if cfg.mx.kv_cache:
-        ckv = _kv_dequant(cache["ckv_codes"], cache["ckv_scales"], cfg,
-                          dtype, cfg.kv_lora)
-        kr = _kv_dequant(cache["kr_codes"], cache["kr_scales"], cfg, dtype,
-                         cfg.qk_rope_dim)
+    if cfg.mx.kv_key is not None:
+        ckv = _kv_dequant(cache["ckv_codes"], cache["ckv_scales"],
+                          cfg.mx.kv_key, dtype, cfg.kv_lora)
+        kr = _kv_dequant(cache["kr_codes"], cache["kr_scales"],
+                         cfg.mx.kv_key, dtype, cfg.qk_rope_dim)
         return ckv, kr
     return cache["ckv"].astype(dtype), cache["kr"].astype(dtype)
 
@@ -720,23 +747,35 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig,
     xe = logical(xe, "batch", "model", None, None)
     we = p["experts"]
 
+    def act_q(t):
+        # activations-role QAT covers the expert matmul inputs too (the
+        # dense()/mlp() paths handle their own inputs)
+        if fake_quant and mx.activations is not None:
+            return quantize_dequantize(t.astype(jnp.float32),
+                                       mx.activations,
+                                       axis=-1).astype(t.dtype)
+        return t
+
+    xe = act_q(xe)
+
     def exp_mm(t, w):
         if weight_gather_enabled():
             w = logical(w, "model", None, None)  # EP on E; gather FSDP dim
-        if fake_quant and mx.weights:
-            w = quantize_dequantize(w.astype(jnp.float32), fmt=mx.fmt,
-                                    mode=mx.mode, axis=1).astype(t.dtype)
+        if fake_quant and mx.weights is not None:
+            w = quantize_dequantize(w.astype(jnp.float32), mx.weights,
+                                    axis=1).astype(t.dtype)
         return jnp.einsum("gecd,edf->gecf", t, w.astype(t.dtype),
                           preferred_element_type=jnp.float32).astype(t.dtype)
 
     h = exp_mm(xe, we["w1"])
     gte = exp_mm(xe, we["w3"])
     h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * gte
+    h = act_q(h)
     w2g = logical(we["w2"], "model", None, None) \
         if weight_gather_enabled() else we["w2"]
-    if fake_quant and mx.weights:
-        w2 = quantize_dequantize(w2g.astype(jnp.float32), fmt=mx.fmt,
-                                 mode=mx.mode, axis=1).astype(x.dtype)
+    if fake_quant and mx.weights is not None:
+        w2 = quantize_dequantize(w2g.astype(jnp.float32), mx.weights,
+                                 axis=1).astype(x.dtype)
     else:
         w2 = w2g.astype(x.dtype)
     ye = jnp.einsum("gecf,efd->gecd", h, w2,

@@ -13,11 +13,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.dist.sharding import logical
 from repro.models.config import ModelConfig
-from repro.models.layers import dense, dense_init, dtype_of, rms_norm
+from repro.models.layers import dense, dense_init, dtype_of
 
 HEAD_DIM = 64
 CHUNK = 16

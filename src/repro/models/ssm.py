@@ -13,7 +13,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.dist.sharding import logical
 from repro.models.config import ModelConfig

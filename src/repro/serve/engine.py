@@ -13,17 +13,18 @@ requests are evicted so their pages recycle immediately.  Prefill runs
 per-request (bucketed to page multiples) into a contiguous cache that is
 scattered into the slot's pages; decode steps the whole slot batch at once.
 
-Either way the KV quantization policy comes from the model config
-(cfg.mx.kv_cache / cfg.mx.kv_fmt) — this is the serving-side consumer of
-the paper's converter: INT8/E4M3 KV cuts decode HBM traffic ~2x vs bf16
-(see the decode_32k roofline cells), and with ``attn_impl="flash"`` the
-paged Pallas kernel keeps HBM reads at the quantized bytes end-to-end.
+Either way the KV quantization policy comes from the model config's
+``QuantPolicy`` roles (cfg.mx.kv_key / cfg.mx.kv_value) — this is the
+serving-side consumer of the paper's converter: INT8/E4M3 KV cuts decode
+HBM traffic ~2x vs bf16 (see the decode_32k roofline cells), K and V may
+carry *different* element formats (e.g. INT8 keys + E2M1 values, each
+pool sized per-role), and with ``attn_impl="flash"`` the paged Pallas
+kernel keeps HBM reads at the quantized bytes end-to-end.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -102,11 +103,11 @@ class ServeEngine:
 # =============================================================================
 # Continuous batching over the paged MX KV cache
 # =============================================================================
-# pool key -> (contiguous prefill-cache key, is-element-code)
+# pool key -> (contiguous prefill-cache key, element-code policy role)
 _POOL_KEYS = {
-    "kc_pages": ("k_codes", True), "ks_pages": ("k_scales", False),
-    "vc_pages": ("v_codes", True), "vs_pages": ("v_scales", False),
-    "k_pages": ("k", False), "v_pages": ("v", False),
+    "kc_pages": ("k_codes", "kv_key"), "ks_pages": ("k_scales", None),
+    "vc_pages": ("v_codes", "kv_value"), "vs_pages": ("v_scales", None),
+    "k_pages": ("k", None), "v_pages": ("v", None),
 }
 
 
@@ -282,18 +283,20 @@ class ContinuousBatchingEngine:
 
     def _scatter_pages(self, pool, cache, page_ids):
         """Contiguous prefill cache (B=1, padded to full pages) -> the
-        slot's physical pages (packing sub-byte codes on the way)."""
-        fmt = self.model.cfg.mx.kv_fmt
+        slot's physical pages (packing sub-byte codes per role on the
+        way)."""
+        policy = self.model.cfg.mx
 
         def group(pool_g, cache_g):
             out = {}
             for pk, leaf in pool_g.items():
-                ck, is_code = _POOL_KEYS[pk]
+                ck, role = _POOL_KEYS[pk]
                 val = cache_g[ck]
                 stacked = val.ndim == 5          # (n_scan, 1, L, n_kv, X)
                 val = val[:, 0] if stacked else val[0]
-                if is_code:
-                    val = pack_codes(val, fmt)
+                spec = policy.role(role) if role is not None else None
+                if spec is not None and spec.packed:
+                    val = pack_codes(val, spec.fmt)
                 lead = val.shape[:-3]
                 npr = val.shape[-3] // self.page_size
                 val = val.reshape(lead + (npr, self.page_size)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List
 
 import numpy as np
 

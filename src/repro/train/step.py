@@ -13,16 +13,13 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.grad_compress import mx_allreduce_tree
 from repro.dist import compat
-from repro.models.config import ModelConfig
-from repro.models.decoder import padded_vocab
 from repro.models.registry import Model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 
@@ -99,16 +96,29 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, *,
 
 def build_train_step_compressed_dp(model: Model, opt_cfg: AdamWConfig, *,
                                    mesh, dp_axes: Sequence[str],
-                                   fmt: str = "e4m3", mode: str = "ocp",
+                                   spec=None, fmt: Optional[str] = None,
+                                   mode: Optional[str] = None,
                                    fake_quant: bool = False) -> Callable:
     """Explicit-DP train step: per-shard grads + MX-compressed all-reduce.
 
     Parameters are replicated over the DP axes (ZeRO-1); any "model" axis
     stays automatic (GSPMD handles TP inside the shard_map body).
+
+    The gradient-exchange ``spec`` defaults to the model policy's
+    ``grads`` role (else e4m3/ocp); the ``fmt=``/``mode=`` kwargs are the
+    deprecation shim.
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.core.spec import QuantSpec, resolve_spec
+
     cfg = model.cfg
+    if spec is None and fmt is None and mode is None:
+        spec = cfg.mx.grads or QuantSpec("e4m3", "ocp")
+    else:
+        spec = resolve_spec(spec, fmt, mode, None,
+                            default=QuantSpec("e4m3", "ocp"),
+                            caller="build_train_step_compressed_dp")
     param_dtype = jnp.dtype(cfg.param_dtype)
     dp = tuple(dp_axes)
 
@@ -119,7 +129,7 @@ def build_train_step_compressed_dp(model: Model, opt_cfg: AdamWConfig, *,
         (loss, met), grads = jax.value_and_grad(
             lambda p: _loss_fn(model, p, batch, fake_quant=fake_quant),
             has_aux=True)(params)
-        grads = mx_allreduce_tree(grads, dp, fmt=fmt, mode=mode)
+        grads = mx_allreduce_tree(grads, dp, spec)
         loss = jax.lax.pmean(loss, dp)
         new_params, new_opt, omet = adamw_update(
             opt_cfg, grads, opt_state, step, param_dtype)

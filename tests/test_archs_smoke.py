@@ -1,9 +1,7 @@
 """Per-architecture smoke tests: reduced same-family configs, one forward
 (+ one train-style grad step elsewhere), asserting shapes and finiteness."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

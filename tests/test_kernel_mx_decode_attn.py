@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import mx_quantize, mx_dequantize
-from repro.core.convert import MXArray
 from repro.kernels.mx_decode_attn import mx_decode_attention
 
 

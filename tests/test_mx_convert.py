@@ -1,6 +1,5 @@
 """Unit tests for the FP32->MX converter: rounding tables, markers, INT8,
 packing, and paper-vs-ocp mode contrasts."""
-import itertools
 
 import jax.numpy as jnp
 import numpy as np

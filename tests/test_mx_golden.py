@@ -19,7 +19,7 @@ import pytest
 
 from repro.core import (ALL_FORMATS, E5M2, SCALE_INF, SCALE_NAN,
                         block_max_exponent, max_exponent_tree, mx_dequantize,
-                        mx_quantize, shared_scale)
+                        mx_quantize)
 
 ALL_FMTS = [f.name for f in ALL_FORMATS]
 

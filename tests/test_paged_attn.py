@@ -124,3 +124,65 @@ def test_paged_trash_page_rows_are_inert():
                                 jnp.asarray(50, jnp.int32), fmt=fmt,
                                 mode=mode, rep=HQ // HKV, blk_k=PAGE)
     np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out_c[0]))
+
+
+# =============================================================================
+# mixed per-role specs (INT8 keys / E2M1 values)
+# =============================================================================
+def test_paged_mixed_role_specs_match_contiguous_and_ref():
+    """K and V pools in different formats: the paged kernel, the contiguous
+    kernel and the dense-softmax reference must agree on the same tokens."""
+    from repro.core import QuantSpec
+
+    key_spec = QuantSpec("int8", "ocp")
+    value_spec = QuantSpec("e2m1", "ocp")
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(B, 1, HQ, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, HKV, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, HKV, D)).astype(np.float32))
+    mk = mx_quantize(k, key_spec, axis=-1)
+    mv = mx_quantize(v, value_spec, axis=-1)
+    pos = 50
+    lengths = jnp.full((B,), pos, jnp.int32)
+    out_c = mx_decode_attention(q, mk.codes, mk.scales, mv.codes, mv.scales,
+                                jnp.asarray(pos, jnp.int32),
+                                key_spec=key_spec, value_spec=value_spec,
+                                rep=HQ // HKV, blk_k=PAGE)
+    ref_c = mx_decode_attention_ref(q, mk.codes, mk.scales, mv.codes,
+                                    mv.scales, lengths, key_spec=key_spec,
+                                    value_spec=value_spec, rep=HQ // HKV)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(ref_c),
+                               rtol=2e-5, atol=2e-5)
+    # paged layout: per-role storage bytes (packed E2M1 half the bytes)
+    pk = np.asarray(pack_codes(mk.codes, key_spec.fmt))
+    pv = np.asarray(pack_codes(mv.codes, value_spec.fmt))
+    assert pv.shape[-1] * 2 == pk.shape[-1] == packed_nbytes("int8", D)
+    ks_np, vs_np = np.asarray(mk.scales), np.asarray(mv.scales)
+    n_pool = B * NPG + 1
+    perm = np.random.default_rng(12).permutation(np.arange(1, n_pool))
+    bt = np.zeros((B, NPG), np.int32)
+    kc_pool = np.zeros((n_pool, PAGE, HKV, pk.shape[-1]), np.uint8)
+    vc_pool = np.zeros((n_pool, PAGE, HKV, pv.shape[-1]), np.uint8)
+    ks_pool = np.zeros((n_pool, PAGE, HKV, D // 32), np.uint8)
+    vs_pool = np.zeros_like(ks_pool)
+    for i, (b, j) in enumerate((b, j) for b in range(B)
+                               for j in range(NPG)):
+        pg = int(perm[i])
+        bt[b, j] = pg
+        sl = slice(j * PAGE, (j + 1) * PAGE)
+        kc_pool[pg], vc_pool[pg] = pk[b, sl], pv[b, sl]
+        ks_pool[pg], vs_pool[pg] = ks_np[b, sl], vs_np[b, sl]
+    pools = tuple(jnp.asarray(a) for a in
+                  (kc_pool, ks_pool, vc_pool, vs_pool, bt))
+    out_p = mx_paged_decode_attention(q, *pools, lengths,
+                                      key_spec=key_spec,
+                                      value_spec=value_spec, rep=HQ // HKV)
+    # same dequant + online-softmax arithmetic => bit-identical to the
+    # contiguous kernel even with mixed per-role formats
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_c))
+    ref_p = mx_paged_decode_attention_ref(q, *pools, lengths,
+                                          key_spec=key_spec,
+                                          value_spec=value_spec,
+                                          rep=HQ // HKV)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(ref_p),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,314 @@
+"""Unit tests for the unified QuantSpec/QuantPolicy API: grammar
+round-trips, precise parse errors, MXArray.from_spec validation, and the
+deprecation shims (old fmt=/mode=/block= call forms must produce identical
+arrays and emit exactly one DeprecationWarning)."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ALL_FORMATS, MXArray, QuantPolicy, QuantSpec,
+                        get_format, mx_quantize, quantize_dequantize)
+from repro.core.spec import (ROLES, as_spec, reset_deprecation_warnings,
+                             resolve_spec)
+from repro.kernels.mx_quant import mx_quantize_2d
+from repro.kernels.ops import mx_quantize_pallas, quantize_weight
+
+
+def _rand(shape=(4, 64), seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# =============================================================================
+# QuantSpec grammar
+# =============================================================================
+@pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_spec_str_parse_roundtrip(fmt, mode):
+    for packed in (True, False):
+        s = QuantSpec(fmt, mode, 32, packed)
+        assert QuantSpec.parse(str(s)) == s
+
+
+def test_spec_parse_defaults_and_none():
+    s = QuantSpec.parse("e4m3")
+    assert (s.fmt, s.mode, s.block, s.packed) == ("e4m3", "ocp", 32, True)
+    assert QuantSpec.parse("int8@16").block == 16
+    assert QuantSpec.parse("e2m1:paper").mode == "paper"
+    assert QuantSpec.parse("e2m1@32:ocp+unpacked").packed is False
+    for tok in ("none", "off", "fp", " NONE "):
+        assert QuantSpec.parse(tok) is None
+
+
+def test_spec_parse_precise_errors():
+    with pytest.raises(ValueError, match="unknown MX format"):
+        QuantSpec.parse("e9m9")
+    with pytest.raises(ValueError, match="e4m3"):   # lists the valid names
+        QuantSpec.parse("float8")
+    with pytest.raises(ValueError, match="block must be a positive"):
+        QuantSpec.parse("e4m3@zero")
+    with pytest.raises(ValueError, match="block must be a positive"):
+        QuantSpec.parse("e4m3@0")
+    with pytest.raises(ValueError, match="choose from"):
+        QuantSpec.parse("e4m3@32:fast")
+    with pytest.raises(ValueError, match="flags"):
+        QuantSpec.parse("e4m3+zipped")
+    with pytest.raises(ValueError, match="empty"):
+        QuantSpec.parse("   ")
+
+
+def test_spec_constructor_validates():
+    with pytest.raises(ValueError, match="unknown MX format"):
+        QuantSpec("nope")
+    with pytest.raises(ValueError, match="mode"):
+        QuantSpec("e4m3", "fast")
+    with pytest.raises(ValueError, match="block"):
+        QuantSpec("e4m3", "ocp", 0)
+    # name normalization through the registry
+    assert QuantSpec("E4M3").fmt == "e4m3"
+
+
+def test_spec_is_hashable_and_jit_static():
+    s1, s2 = QuantSpec("int8", "ocp"), QuantSpec("int8", "ocp")
+    assert hash(s1) == hash(s2) and s1 == s2
+
+    @jax.jit
+    def roundtrip(x):
+        return quantize_dequantize(x, s1, axis=-1)
+
+    np.testing.assert_allclose(np.asarray(roundtrip(_rand())),
+                               np.asarray(quantize_dequantize(
+                                   _rand(), s2)), rtol=0, atol=0)
+
+
+def test_get_format_error_lists_valid_names():
+    with pytest.raises(ValueError) as ei:
+        get_format("fp8")
+    msg = str(ei.value)
+    for f in ALL_FORMATS:
+        assert f.name in msg
+
+
+def test_storage_nbytes_per_packing():
+    assert QuantSpec("int8").storage_nbytes(64) == 64
+    assert QuantSpec("e2m1").storage_nbytes(64) == 32
+    assert QuantSpec("e3m2").storage_nbytes(64) == 48
+    assert QuantSpec("e2m1", packed=False).storage_nbytes(64) == 64
+
+
+# =============================================================================
+# QuantPolicy
+# =============================================================================
+def test_policy_parse_roles_and_roundtrip():
+    p = QuantPolicy.parse(
+        "kv_key=int8@32:ocp,kv_value=e2m1@32:ocp,grads=e4m3")
+    assert p.kv_key.fmt == "int8" and p.kv_value.fmt == "e2m1"
+    assert p.grads == QuantSpec("e4m3", "ocp", 32)
+    assert p.weights is None and p.activations is None
+    assert QuantPolicy.parse(str(p)) == p
+    assert str(QuantPolicy()) == "none"
+    assert QuantPolicy.parse("none") == QuantPolicy()
+
+
+def test_policy_kv_shorthand_and_str_coercion():
+    p = QuantPolicy.parse("kv=e4m3@32:paper")
+    assert p.kv_key == p.kv_value == QuantSpec("e4m3", "paper")
+    # constructor coerces spec strings per role
+    q = QuantPolicy(kv_key="int8", kv_value="int8")
+    assert q.kv_key == QuantSpec("int8", "ocp")
+
+
+def test_policy_parse_errors():
+    with pytest.raises(ValueError, match="unknown tensor role"):
+        QuantPolicy.parse("cache=int8")
+    with pytest.raises(ValueError, match="role=spec"):
+        QuantPolicy.parse("int8")
+    with pytest.raises(ValueError, match="twice"):
+        QuantPolicy.parse("kv=int8,kv_key=e4m3")
+    with pytest.raises(ValueError, match="kv_key and kv_value"):
+        QuantPolicy(kv_key=QuantSpec("int8"))
+    with pytest.raises(ValueError, match="unknown tensor role"):
+        QuantPolicy().role("caches")
+    assert [QuantPolicy().role(r) for r in ROLES] == [None] * len(ROLES)
+
+
+def test_mx_policy_shim_maps_and_warns_once():
+    from repro.models.config import MXPolicy
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p = MXPolicy(fmt="e5m2", mode="paper", weights=True, kv_cache=True,
+                     kv_fmt="int8", grads=True, grad_fmt="e4m3")
+        MXPolicy()          # second call: no second warning
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert p.weights == QuantSpec("e5m2", "paper")
+    assert p.kv_key == p.kv_value == QuantSpec("int8", "paper")
+    assert p.grads == QuantSpec("e4m3", "paper")
+    assert isinstance(p, QuantPolicy)
+
+
+# =============================================================================
+# MXArray.from_spec validation
+# =============================================================================
+def test_from_spec_accepts_consistent_and_sets_fields():
+    mx = mx_quantize(_rand(), QuantSpec("e4m3", "ocp"))
+    rebuilt = MXArray.from_spec(mx.codes, mx.scales, mx.spec,
+                                orig_len=mx.orig_len, axis=mx.axis)
+    assert rebuilt.fmt == "e4m3" and rebuilt.mode == "ocp" \
+        and rebuilt.block == 32
+    # MXArray codes are stored one byte per element, so .spec reports the
+    # unpacked layout (storage_nbytes matches the container)
+    assert rebuilt.spec == QuantSpec("e4m3", "ocp", packed=False)
+    assert rebuilt.spec.storage_nbytes(64) == 64
+
+
+def test_from_spec_rejects_none_spec():
+    mx = mx_quantize(_rand(), QuantSpec("e4m3", "ocp"))
+    with pytest.raises(ValueError, match="concrete"):
+        MXArray.from_spec(mx.codes, mx.scales, "none")
+    with pytest.raises(TypeError):
+        MXArray.from_spec(mx.codes, mx.scales, None)
+
+
+def test_from_spec_rejects_inconsistent():
+    mx = mx_quantize(_rand(), QuantSpec("e4m3", "ocp"))
+    with pytest.raises(ValueError, match="multiple of"):
+        MXArray.from_spec(mx.codes[..., :33], mx.scales, mx.spec)
+    with pytest.raises(ValueError, match="scales shape"):
+        MXArray.from_spec(mx.codes, mx.scales[..., :1], mx.spec)
+    with pytest.raises(ValueError, match="orig_len"):
+        MXArray.from_spec(mx.codes, mx.scales, mx.spec, orig_len=5)
+    with pytest.raises(ValueError, match="unknown MX format"):
+        MXArray.from_spec(mx.codes, mx.scales,
+                          dataclasses.replace(mx.spec))  # sanity: valid
+        MXArray.from_spec(mx.codes, mx.scales, "e9m9")
+
+
+# =============================================================================
+# deprecation shims: identical arrays + exactly one warning
+# =============================================================================
+def _one_warning(fn):
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn()
+        fn()                      # repeated call must not warn again
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    return out
+
+
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_mx_quantize_shim_identical(mode):
+    x = _rand()
+    new = mx_quantize(x, QuantSpec("e3m2", mode, 32))
+    old = _one_warning(lambda: mx_quantize(x, fmt="e3m2", mode=mode,
+                                           block=32))
+    np.testing.assert_array_equal(np.asarray(new.codes),
+                                  np.asarray(old.codes))
+    np.testing.assert_array_equal(np.asarray(new.scales),
+                                  np.asarray(old.scales))
+
+
+def test_quantize_dequantize_shim_identical():
+    x = _rand(seed=3)
+    new = quantize_dequantize(x, QuantSpec("e5m2", "ocp"))
+    old = _one_warning(lambda: quantize_dequantize(x, fmt="e5m2",
+                                                   mode="ocp"))
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+def test_legacy_positional_fmt_string_warns():
+    x = _rand(seed=4)
+    new = mx_quantize(x, QuantSpec("e4m3", "ocp"))
+    old = _one_warning(lambda: mx_quantize(x, "e4m3", "ocp"))
+    np.testing.assert_array_equal(np.asarray(new.codes),
+                                  np.asarray(old.codes))
+
+
+def test_ops_wrapper_shims_identical():
+    x = _rand(seed=5)
+    new = mx_quantize_pallas(x, QuantSpec("e2m3", "paper"))
+    old = _one_warning(lambda: mx_quantize_pallas(x, fmt="e2m3",
+                                                  mode="paper"))
+    np.testing.assert_array_equal(np.asarray(new.codes),
+                                  np.asarray(old.codes))
+    w = _rand((64, 8), seed=6)
+    new_w = quantize_weight(w, QuantSpec("e4m3", "ocp"))
+    old_w = _one_warning(lambda: quantize_weight(w, fmt="e4m3",
+                                                 mode="ocp"))
+    np.testing.assert_array_equal(np.asarray(new_w.codes),
+                                  np.asarray(old_w.codes))
+
+
+def test_kernel_2d_shim_identical():
+    x = _rand(seed=7)
+    cn, sn = mx_quantize_2d(x, QuantSpec("int8", "ocp"))
+    co, so = _one_warning(lambda: mx_quantize_2d(x, fmt="int8",
+                                                 mode="ocp"))
+    np.testing.assert_array_equal(np.asarray(cn), np.asarray(co))
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(so))
+
+
+def test_resolve_spec_conflicts_and_as_spec():
+    with pytest.raises(TypeError, match="not both"):
+        resolve_spec(QuantSpec("e4m3"), fmt="e4m3")
+    with pytest.raises(TypeError, match="twice"):
+        resolve_spec("e4m3", fmt="e5m2")
+    with pytest.raises(TypeError):
+        resolve_spec(123)
+    assert as_spec("e4m3@32:paper") == QuantSpec("e4m3", "paper")
+    with pytest.raises(ValueError, match="concrete"):
+        as_spec("none")
+    with pytest.raises(TypeError):
+        as_spec(None)
+
+
+def test_decode_kernels_reject_non32_blocks():
+    """The decode-attention kernels' scale layout is hardwired to 32-wide
+    blocks; other blocks must raise, not silently mis-dequantize."""
+    from repro.kernels.mx_decode_attn import (mx_decode_attention,
+                                              mx_paged_decode_attention)
+    from repro.kernels.ref import mx_decode_attention_ref
+
+    b, s, h, d = 1, 32, 1, 32
+    x = _rand((b, s, h, d), seed=9)
+    q = _rand((b, 1, h, d), seed=10)
+    bad = QuantSpec("int8", "ocp", 16)
+    mk = mx_quantize(x, bad, axis=-1)
+    for fn in (mx_decode_attention, mx_decode_attention_ref):
+        with pytest.raises(ValueError, match="block=32"):
+            fn(q, mk.codes, mk.scales, mk.codes, mk.scales,
+               jnp.asarray(3, jnp.int32), key_spec=bad, value_spec=bad)
+    with pytest.raises(ValueError, match="block=32"):
+        mx_paged_decode_attention(
+            q, mk.codes, mk.scales, mk.codes, mk.scales,
+            jnp.zeros((b, 2), jnp.int32), jnp.zeros((b,), jnp.int32),
+            key_spec=bad, value_spec=bad)
+
+
+def test_moe_applies_activations_role():
+    """The activations role fake-quantizes MoE expert matmul inputs too."""
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+
+    base = dict(name="t", family="decoder", n_layers=1, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, n_experts=4,
+                moe_topk=2, moe_d_ff=32, dtype="float32",
+                param_dtype="float32")
+    cfg_fp = ModelConfig(**base)
+    cfg_act = ModelConfig(
+        **base, mx=QuantPolicy.parse("activations=e2m1@32:ocp"))
+    p = L.moe_init(jax.random.PRNGKey(0), cfg_fp)
+    x = _rand((2, 8, 32), seed=11)
+    out_fp, _ = L.moe(p, x, cfg_fp, fake_quant=True)
+    out_q, _ = L.moe(p, x, cfg_act, fake_quant=True)
+    out_q2, _ = L.moe(p, x, cfg_act, fake_quant=False)  # gated off
+    assert np.isfinite(np.asarray(out_q)).all()
+    assert not np.allclose(np.asarray(out_fp), np.asarray(out_q))
+    np.testing.assert_array_equal(np.asarray(out_fp), np.asarray(out_q2))

@@ -1,6 +1,5 @@
 """Serving tests: MX KV-cache error bounds; engine greedy decode matches a
 step-by-step full-forward reference."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

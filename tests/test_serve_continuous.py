@@ -4,7 +4,9 @@ The load-bearing guarantee: mixed-length requests served through the
 slot-based continuous-batching engine over the paged MX KV cache produce
 token-for-token the same greedy outputs as each request served alone
 through the contiguous-cache engine (temperature=0, fixed seed) — for all
-six MX element formats and for the unquantized cache.
+six MX element formats x both conversion modes (uniform policies), for
+mixed per-role policies (INT8 keys + E2M1 values), and for the
+unquantized cache.
 """
 import jax
 import numpy as np
@@ -12,10 +14,12 @@ import pytest
 
 from repro.core.formats import ALL_FORMATS
 from repro.models import Model, load_reduced
-from repro.models.config import MXPolicy
+from repro.models.config import QuantPolicy, QuantSpec
 from repro.serve import (BlockManager, ContinuousBatchingEngine,
                          GenerationConfig, Request, RequestState, Scheduler,
                          ServeEngine, pages_needed)
+
+MIXED = QuantPolicy.parse("kv_key=int8@32:ocp,kv_value=e2m1@32:ocp")
 
 # >= 8 requests, mixed lengths (3 distinct values to bound jit retraces)
 LENS = [4, 9, 14, 4, 9, 14, 9, 4]
@@ -48,18 +52,15 @@ def _serve_both(cfg):
         yield outs[rids.pop(0)], ref
 
 
+@pytest.mark.parametrize("mode", ["ocp", "paper"])
 @pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
-def test_continuous_matches_solo_all_formats(fmt):
-    """Token-identical to solo contiguous serving, all six MX formats."""
-    mx = MXPolicy(mode="ocp", kv_cache=True, kv_fmt=fmt)
-    cfg = load_reduced("chatglm3_6b", mx=mx)
-    for got, ref in _serve_both(cfg):
-        np.testing.assert_array_equal(got, ref)
-
-
-def test_continuous_matches_solo_paper_mode():
-    mx = MXPolicy(mode="paper", kv_cache=True, kv_fmt="e4m3")
-    cfg = load_reduced("chatglm3_6b", mx=mx)
+def test_continuous_matches_solo_all_formats(fmt, mode):
+    """Token-identical to solo contiguous serving — all six MX formats x
+    both modes, K and V set to the same spec through the policy (the
+    uniform path of the pre-spec engine)."""
+    kv = QuantSpec(fmt, mode)
+    cfg = load_reduced("chatglm3_6b",
+                       mx=QuantPolicy(kv_key=kv, kv_value=kv))
     for got, ref in _serve_both(cfg):
         np.testing.assert_array_equal(got, ref)
 
@@ -73,10 +74,42 @@ def test_continuous_matches_solo_fp_cache():
 
 def test_continuous_matches_solo_flash_kernel():
     """attn_impl=flash routes decode through the paged Pallas kernel."""
-    mx = MXPolicy(mode="ocp", kv_cache=True, kv_fmt="int8")
-    cfg = load_reduced("chatglm3_6b", mx=mx, attn_impl="flash")
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"),
+                       attn_impl="flash")
     for got, ref in _serve_both(cfg):
         np.testing.assert_array_equal(got, ref)
+
+
+# =============================================================================
+# mixed per-role policies (INT8 keys / E2M1 values)
+# =============================================================================
+def test_continuous_matches_solo_mixed_roles():
+    """INT8 keys + E2M1 values end-to-end: the paged continuous engine is
+    token-identical to solo contiguous serving under the same policy."""
+    cfg = load_reduced("chatglm3_6b", mx=MIXED)
+    for got, ref in _serve_both(cfg):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_continuous_matches_solo_mixed_roles_flash():
+    """Mixed-role policy through the paged Pallas kernel (per-role pool
+    layouts resolved at the HBM->VMEM boundary)."""
+    cfg = load_reduced("chatglm3_6b", mx=MIXED, attn_impl="flash")
+    for got, ref in _serve_both(cfg):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_mixed_role_pool_sized_per_role():
+    """The E2M1 value pool is bit-packed to half the bytes of the INT8 key
+    pool; same scale layout."""
+    cfg = load_reduced("chatglm3_6b", mx=MIXED)
+    model = Model(cfg)
+    pool = jax.eval_shape(lambda: model.init_paged_cache(8, 8))
+    kc = pool["layers"]["kc_pages"]
+    vc = pool["layers"]["vc_pages"]
+    assert vc.shape[-1] * 2 == kc.shape[-1]
+    assert pool["layers"]["ks_pages"].shape \
+        == pool["layers"]["vs_pages"].shape
 
 
 def test_mla_rejects_paged():

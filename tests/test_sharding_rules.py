@@ -1,8 +1,6 @@
 """Unit tests for the logical sharding-rule engine (no mesh needed)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import (current_rules, logical, make_rules,

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import DataConfig, SyntheticLM, make_batch_for
 from repro.models import Model, load_reduced
