@@ -1,10 +1,13 @@
-"""Validate BENCH_serve.json against the bench_serve/v1 schema (dep-free).
+"""Validate BENCH_serve.json against the bench_serve/v2 schema (dep-free).
 
     python benchmarks/validate_bench_serve.py [BENCH_serve.json]
 
-Exits nonzero with a per-field report on mismatch; used by the CI
-bench-smoke job so the emitted artifact can't silently drift from the
-schema documented in README §Continuous batching & paged KV.
+Schema v2 adds the per-phase wall-time split (prefill vs decode vs
+host-sync) and the fused-window accounting (``sync_every`` /
+``sync_points``) of the device-resident decode loop.  Exits nonzero with a
+per-field report on mismatch — including *unknown* fields, so the emitted
+artifact can't silently drift from the schema documented in README
+§Continuous batching & paged KV.
 """
 from __future__ import annotations
 
@@ -12,12 +15,14 @@ import json
 import sys
 from pathlib import Path
 
+SCHEMA = "bench_serve/v2"
 TOP_FIELDS = {
     "schema": str,
     "arch": str,
     "page_size": int,
     "max_slots": int,
     "new_tokens": int,
+    "sync_every": int,
     "configs": list,
 }
 CONFIG_FIELDS = {
@@ -28,12 +33,18 @@ CONFIG_FIELDS = {
     "kv_value_fmt": (str, type(None)),
     "quant": (str, type(None)),
     "mix": str,
+    "prefill_bucket": int,
     "requests": int,
     "prompt_tokens": int,
     "generated_tokens": int,
     "decode_steps": int,
+    "sync_points": int,
     "wall_s": float,
     "tokens_per_s": float,
+    "prefill_s": float,
+    "decode_s": float,
+    "sync_s": float,
+    "decode_tokens_per_s": float,
     "kv_pool_bytes": int,
 }
 KNOWN_CACHES = {"fp32", "mx-int8", "mx-e4m3", "mx-e5m2", "mx-e3m2",
@@ -50,11 +61,15 @@ def check(doc) -> list:
         elif not isinstance(doc[field], ty):
             errs.append(f"{field!r}: expected {ty.__name__}, "
                         f"got {type(doc[field]).__name__}")
+    for field in sorted(set(doc) - set(TOP_FIELDS)):
+        errs.append(f"unknown top-level field {field!r} (schema drift — "
+                    f"extend the validator in the same PR)")
     if errs:
         return errs
-    if doc["schema"] != "bench_serve/v1":
-        errs.append(f"schema: expected 'bench_serve/v1', "
-                    f"got {doc['schema']!r}")
+    if doc["schema"] != SCHEMA:
+        errs.append(f"schema: expected {SCHEMA!r}, got {doc['schema']!r}")
+    if doc["sync_every"] < 1:
+        errs.append(f"sync_every: must be >= 1, got {doc['sync_every']}")
     if len(doc["configs"]) < 2:
         errs.append("configs: need >= 2 cache configurations")
     for i, c in enumerate(doc["configs"]):
@@ -67,6 +82,9 @@ def check(doc) -> list:
                     "/".join(t.__name__ for t in ty)
                 errs.append(f"configs[{i}].{field}: expected {tn}, "
                             f"got {type(c[field]).__name__}")
+        for field in sorted(set(c) - set(CONFIG_FIELDS)):
+            errs.append(f"configs[{i}]: unknown field {field!r} (schema "
+                        f"drift — extend the validator in the same PR)")
         if len(errs) == before:          # this config's fields are sound
             if c["cache"] not in KNOWN_CACHES:
                 errs.append(f"configs[{i}].cache: unknown {c['cache']!r}")
@@ -87,6 +105,20 @@ def check(doc) -> list:
                 errs.append(f"configs[{i}]: non-positive throughput")
             if c["generated_tokens"] <= 0 or c["kv_pool_bytes"] <= 0:
                 errs.append(f"configs[{i}]: non-positive token/byte counts")
+            if c["sync_points"] <= 0:
+                errs.append(f"configs[{i}]: non-positive sync_points")
+            if c["decode_steps"] < c["sync_points"]:
+                errs.append(f"configs[{i}]: decode_steps < sync_points "
+                            f"(each fused window runs >= 1 device step)")
+            for ph in ("prefill_s", "decode_s", "sync_s"):
+                if c[ph] < 0:
+                    errs.append(f"configs[{i}].{ph}: negative phase time")
+            if len(errs) == before \
+                    and c["prefill_s"] + c["decode_s"] > c["wall_s"] * 1.05:
+                errs.append(f"configs[{i}]: prefill_s + decode_s exceed "
+                            f"wall_s (phase accounting broken)")
+            if c["decode_tokens_per_s"] < 0:
+                errs.append(f"configs[{i}]: negative decode throughput")
     caches = {c.get("cache") for c in doc["configs"]}
     if len(caches) < 2:
         errs.append(f"configs: need >= 2 distinct cache types, got {caches}")
@@ -111,8 +143,8 @@ def main() -> None:
             print(f"  - {e}", file=sys.stderr)
         sys.exit(1)
     caches = sorted({c["cache"] for c in doc["configs"]})
-    print(f"{path}: valid bench_serve/v1 ({len(doc['configs'])} configs, "
-          f"caches={caches})")
+    print(f"{path}: valid {SCHEMA} ({len(doc['configs'])} configs, "
+          f"caches={caches}, sync_every={doc['sync_every']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Backend-aware execution-mode defaults for the Pallas kernels.
+
+Every kernel entry point takes ``interpret=None`` and resolves it through
+``resolve_interpret``: explicit booleans win, then the
+``REPRO_PALLAS_INTERPRET`` environment override, and finally the backend —
+interpret mode (kernel bodies executed in Python, the correctness path)
+everywhere except a real TPU, where the kernels compile to Mosaic.  This
+keeps CPU CI bit-exact while real hardware gets compiled kernels without
+any call-site churn.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` kwarg: explicit value > env var > backend.
+
+    ``None`` means "interpret only off-TPU".  The result is a plain bool so
+    it can ride through jit static arguments.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"

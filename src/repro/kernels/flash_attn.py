@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import accounting
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BLK_Q = 256
 DEFAULT_BLK_K = 512
@@ -117,6 +118,7 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def _flash_bshd_fwd(q, k, v, causal, interpret):
     """(B,S,H,D) wrapper with GQA expansion; returns o (B,Sq,H,D)."""
+    interpret = resolve_interpret(interpret)
     b, sq, h, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     if hkv != h:
@@ -137,8 +139,10 @@ def _flash_bshd_fwd(q, k, v, causal, interpret):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def flash_attention(q, k, v, causal: bool = True, interpret: bool = True):
-    """Flash attention (B,S,H,D) with GQA k/v (B,S,Hkv,D)."""
+def flash_attention(q, k, v, causal: bool = True, interpret=None):
+    """Flash attention (B,S,H,D) with GQA k/v (B,S,Hkv,D).
+
+    ``interpret=None`` resolves backend-aware (interpret only off-TPU)."""
     return _flash_bshd_fwd(q, k, v, causal, interpret)
 
 

@@ -43,6 +43,7 @@ from repro.core.convert import decode_elements, scale_to_f32
 from repro.core.pack import unpack_codes
 from repro.core.spec import QuantSpec, resolve_kv_specs
 from repro.kernels import accounting
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BLK_K = 512
 NEG_INF = -1e30
@@ -122,7 +123,7 @@ def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
                         v_scales: jax.Array, pos: jax.Array, *,
                         spec=None, key_spec=None, value_spec=None,
                         rep: int = 1, blk_k: int = DEFAULT_BLK_K,
-                        interpret: bool = True,
+                        interpret: Optional[bool] = None,
                         fmt: Optional[str] = None,
                         mode: Optional[str] = None) -> jax.Array:
     """q (B,1,Hq,D); cache codes (B,S,Hkv,D) u8 + scales (B,S,Hkv,D/32);
@@ -130,14 +131,15 @@ def mx_decode_attention(q: jax.Array, k_codes: jax.Array,
 
     ``key_spec``/``value_spec`` (or the uniform ``spec``) select the
     per-role element formats; the ``fmt=``/``mode=`` kwargs are the
-    uniform deprecation shim (warns once)."""
+    uniform deprecation shim (warns once).  ``interpret=None`` resolves
+    backend-aware (interpret only off-TPU)."""
     key_spec, value_spec = resolve_kv_specs(
         spec, key_spec, value_spec, fmt, mode, default=_KV_DEFAULT,
         caller="mx_decode_attention")
     _require_block32(key_spec, value_spec, "mx_decode_attention")
     return _mx_decode_attention(q, k_codes, k_scales, v_codes, v_scales,
                                 pos, key_spec, value_spec, rep, blk_k,
-                                interpret)
+                                resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("key_spec", "value_spec",
@@ -235,7 +237,7 @@ def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
                               vs_pool: jax.Array, block_tables: jax.Array,
                               lengths: jax.Array, *, spec=None,
                               key_spec=None, value_spec=None, rep: int = 1,
-                              interpret: bool = True,
+                              interpret: Optional[bool] = None,
                               fmt: Optional[str] = None,
                               mode: Optional[str] = None) -> jax.Array:
     """Decode attention over a paged MX KV cache.
@@ -261,7 +263,8 @@ def mx_paged_decode_attention(q: jax.Array, kc_pool: jax.Array,
     _require_block32(key_spec, value_spec, "mx_paged_decode_attention")
     return _mx_paged_decode_attention(q, kc_pool, ks_pool, vc_pool,
                                       vs_pool, block_tables, lengths,
-                                      key_spec, value_spec, rep, interpret)
+                                      key_spec, value_spec, rep,
+                                      resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("key_spec", "value_spec",

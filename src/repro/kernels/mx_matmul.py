@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.convert import decode_elements, scale_to_f32
 from repro.core.spec import QuantSpec, resolve_spec
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BM = 256
 DEFAULT_BN = 256
@@ -58,16 +59,18 @@ def mx_matmul_2d(a: jax.Array, codes: jax.Array, scales: jax.Array,
                  spec=None, mode: Optional[str] = None,
                  block: Optional[int] = None, bm: int = DEFAULT_BM,
                  bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
-                 interpret: bool = True, *,
+                 interpret: Optional[bool] = None, *,
                  fmt: Optional[str] = None) -> jax.Array:
     """a (M, K) @ dequant(codes (K, N), scales (K//block, N)) -> (M, N) f32.
 
     K must be a multiple of the spec's block; M/N/K are padded to tile
-    multiples.  ``spec`` is a QuantSpec (deprecation shim: fmt=/mode=)."""
+    multiples.  ``spec`` is a QuantSpec (deprecation shim: fmt=/mode=).
+    ``interpret=None`` resolves backend-aware (interpret only off-TPU)."""
     spec = resolve_spec(spec, fmt, mode, block,
                         default=QuantSpec("e4m3", "paper"),
                         caller="mx_matmul_2d")
-    return _mx_matmul_2d(a, codes, scales, spec, bm, bn, bk, interpret)
+    return _mx_matmul_2d(a, codes, scales, spec, bm, bn, bk,
+                         resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,

@@ -34,6 +34,7 @@ from repro.core.convert import (_f32_fields, _quant_float_ocp,
                                 _marker_codes, shared_scale)
 from repro.core.formats import MXFormat
 from repro.core.spec import QuantSpec, resolve_spec
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BM = 256
 DEFAULT_BN = 512  # multiple of 32 (block) and 128 (lanes)
@@ -82,17 +83,19 @@ def _mx_quant_kernel(x_ref, codes_ref, scales_ref, *, fmt: MXFormat,
 
 def mx_quantize_2d(x: jax.Array, spec=None, mode: Optional[str] = None,
                    block: Optional[int] = None, bm: int = DEFAULT_BM,
-                   bn: int = DEFAULT_BN, interpret: bool = True, *,
+                   bn: int = DEFAULT_BN,
+                   interpret: Optional[bool] = None, *,
                    fmt: Optional[str] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Quantize a 2-D array (M, N) along the trailing axis with the Pallas
     converter kernel.  M, N need not be tile-aligned (zero padding; zeros
     never perturb a block's max exponent).  ``spec`` is a QuantSpec; the
-    ``fmt=``/``mode=``/``block=`` kwargs are the deprecation shim."""
+    ``fmt=``/``mode=``/``block=`` kwargs are the deprecation shim.
+    ``interpret=None`` resolves backend-aware (interpret only off-TPU)."""
     spec = resolve_spec(spec, fmt, mode, block,
                         default=QuantSpec("e4m3", "paper"),
                         caller="mx_quantize_2d")
-    return _mx_quantize_2d(x, spec, bm, bn, interpret)
+    return _mx_quantize_2d(x, spec, bm, bn, resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,

@@ -1,12 +1,13 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-``INTERPRET`` defaults to True in this CPU container (Pallas interpret mode
-executes the kernel bodies in Python for correctness validation); on a real
-TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` to compile to Mosaic.
+Pallas execution mode is backend-aware (``kernels.backend``): interpret
+mode (kernel bodies executed in Python for correctness validation) on CPU,
+compiled Mosaic on TPU; ``REPRO_PALLAS_INTERPRET=0/1`` overrides either
+way.  Every wrapper below passes ``interpret=None`` through to the kernels,
+which resolve it per call.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
@@ -16,8 +17,6 @@ from repro.core.convert import MXArray
 from repro.core.spec import QuantSpec, resolve_spec
 from repro.kernels import mx_matmul as _mm
 from repro.kernels import mx_quant as _mq
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 _PAPER_DEFAULT = QuantSpec("e4m3", "paper")
 
@@ -34,7 +33,7 @@ def mx_quantize_pallas(x: jax.Array, spec=None, mode: Optional[str] = None,
     shape = x.shape
     n = shape[-1]
     x2 = x.reshape(-1, n)
-    codes, scales = _mq.mx_quantize_2d(x2, spec, interpret=INTERPRET)
+    codes, scales = _mq.mx_quantize_2d(x2, spec, interpret=None)
     nblk = (n + spec.block - 1) // spec.block
     # re-pad codes to the block multiple to match MXArray's invariant
     pad = nblk * spec.block - n
@@ -54,7 +53,7 @@ def mx_matmul(a: jax.Array, w: MXArray) -> jax.Array:
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
     out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec,
-                           interpret=INTERPRET)
+                           interpret=None)
     return out.reshape(lead + (n,))
 
 
@@ -86,10 +85,10 @@ def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
 
     rules = current_rules()
     if rules is None:
-        return flash_attention(q, k, v, causal, INTERPRET)
+        return flash_attention(q, k, v, causal)
     mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or not rules.get("model"):
-        return flash_attention(q, k, v, causal, INTERPRET)
+        return flash_attention(q, k, v, causal)
     model_ax = rules["model"][0]
     batch_axes = rules.get("batch")
     h, hkv = q.shape[2], k.shape[2]
@@ -108,7 +107,7 @@ def flash_attention_ctx(q: jax.Array, k: jax.Array, v: jax.Array,
         idx = (off + jnp.arange(hl)) // rep
         ke = jnp.take(kl, idx, axis=2)
         ve = jnp.take(vl, idx, axis=2)
-        return flash_attention(ql, ke, ve, causal, INTERPRET)
+        return flash_attention(ql, ke, ve, causal)
 
     manual = set(a for a in ((batch_axes or ()) + (model_ax,)))
     return compat.shard_map(body, mesh=mesh,
@@ -146,8 +145,7 @@ def mx_decode_attention_ctx(q: jax.Array, cache: dict, pos, cfg):
 
     def call(q_, kc_, ks_, vc_, vs_, pos_):
         return mx_decode_attention(q_, kc_, ks_, vc_, vs_, pos_,
-                                   key_spec=kk, value_spec=kv, rep=rep,
-                                   interpret=INTERPRET)
+                                   key_spec=kk, value_spec=kv, rep=rep)
 
     rules = current_rules()
     if rules is None:
@@ -177,7 +175,17 @@ def mx_paged_decode_attention_ctx(q: jax.Array, pool: dict,
     (default) replicates it inside the shard_map region so any slot can
     reference any physical page without a gather.  Returns (B, 1, Hq, D)
     or None if the layout is unsupported (caller falls back to the
-    gather + dense path)."""
+    gather + dense path).
+
+    This wrapper is also the kernel entry of the *scanned* decode step:
+    the serving engine's fused multi-step window traces it once inside a
+    ``lax.scan`` body whose carry includes the page pool, so everything
+    here must be trace-stable — the mesh/rules are resolved from ambient
+    context (constant across the window), the scalar-prefetch operands
+    (block table, lengths) are scan-carried values, and the shard_map
+    region closes over no per-step Python state.  On jax 0.4.x,
+    dist.compat lowers shard_map-under-scan to full-manual mode
+    (see repro.dist.compat.shard_map)."""
     from jax.sharding import PartitionSpec as P
     from repro.dist import compat
     from repro.dist.sharding import current_rules
@@ -198,7 +206,7 @@ def mx_paged_decode_attention_ctx(q: jax.Array, pool: dict,
     def call(q_, kc_, ks_, vc_, vs_, bt_, ln_):
         return mx_paged_decode_attention(q_, kc_, ks_, vc_, vs_, bt_, ln_,
                                          key_spec=kk, value_spec=kv,
-                                         rep=rep, interpret=INTERPRET)
+                                         rep=rep)
 
     rules = current_rules()
     if rules is None:

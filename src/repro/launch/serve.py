@@ -50,6 +50,17 @@ def main() -> None:
                     help="continuous batching over the paged KV cache")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged mode)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="paged mode: decode steps fused into one "
+                         "device-resident lax.scan window; the host syncs "
+                         "(drain tokens / evict / admit) only at window "
+                         "boundaries.  1 = the per-step loop "
+                         "(token-identical either way)")
+    ap.add_argument("--prefill-bucket", type=int, default=0,
+                    help="paged mode: pad admission prompts to a multiple "
+                         "of this (rounded up to a page multiple; default "
+                         "--page-size) and prefill same-bucket admissions "
+                         "as one batch")
     ap.add_argument("--requests", type=int, default=0,
                     help="paged mode: total requests to serve "
                          "(default 2x --batch)")
@@ -111,7 +122,8 @@ def main() -> None:
         eng = ContinuousBatchingEngine(
             model, params, max_slots=args.batch,
             page_size=args.page_size, max_len=max_len, rules=rules,
-            gen=gen)
+            gen=gen, sync_every=args.sync_every,
+            prefill_bucket=args.prefill_bucket or None)
         prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
                    for n in lens]
         with mesh_ctx:
@@ -121,12 +133,17 @@ def main() -> None:
             out = eng.run()
             dt = time.perf_counter() - t0
         toks = sum(len(v) for v in out.values())
+        ph = eng.phase
         print(f"[serve] {cfg.name} paged quant={cfg.mx} "
-              f"page={args.page_size}: {len(out)} requests "
+              f"page={args.page_size} sync_every={args.sync_every}: "
+              f"{len(out)} requests "
               f"({'mixed' if args.mixed else 'uniform'} lengths), "
               f"{toks} tokens in {dt:.2f}s (incl. compile) — "
-              f"{toks / dt:.1f} tok/s, {eng.n_steps} decode steps, "
+              f"{toks / dt:.1f} tok/s, {eng.n_steps} decode steps in "
+              f"{eng.n_syncs} fused windows, "
               f"{eng.blocks.free_pages}/{eng.blocks.num_pages} pages free")
+        print(f"[serve] phase wall: prefill {ph['prefill']:.2f}s, "
+              f"decode {ph['decode']:.2f}s, host-sync {ph['sync']:.2f}s")
         first = out[min(out)]
         print("[serve] sample output tokens:", first[:12].tolist())
         return

@@ -212,6 +212,40 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig, *,
     return _head(params, cfg, x), cache
 
 
+def sample_tokens(logits, keys, temperature: float):
+    """Sample one token per slot inside the jitted decode path.
+
+    logits (B, vocab) f32; keys (B, 2) uint32 per-slot PRNG keys.  The keys
+    are split every call regardless of temperature, so greedy and sampled
+    runs share one key-evolution schedule and the fused multi-step loop is
+    token-identical to the per-step loop at any temperature.  Returns
+    (new keys, tokens (B,) int32)."""
+    split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    keys, sub = split[:, 0], split[:, 1]
+    if temperature <= 0.0:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        nxt = jax.vmap(
+            lambda k, row: jax.random.categorical(
+                k, row.astype(jnp.float32) / temperature)
+        )(sub, logits).astype(jnp.int32)
+    return keys, nxt
+
+
+def scatter_prefill(cfg: ModelConfig, pool, cache, page_ids):
+    """Scatter a batched contiguous prefill cache (G requests padded to the
+    same page-multiple length) into the paged pools; one donated scatter
+    per leaf, sub-byte codes packed on the way (see
+    layers.paged_cache_scatter)."""
+    new = {"layers": L.paged_cache_scatter(pool["layers"], cache["layers"],
+                                           page_ids, cfg)}
+    if "dense_layers" in pool:
+        new["dense_layers"] = [
+            L.paged_cache_scatter(pg, cg, page_ids, cfg)
+            for pg, cg in zip(pool["dense_layers"], cache["dense_layers"])]
+    return new
+
+
 def paged_decode_step(params, token, cache, block_tables, lengths,
                       cfg: ModelConfig, *, fake_quant: bool = False):
     """One continuous-batching decode step over the paged KV cache.
@@ -243,3 +277,46 @@ def paged_decode_step(params, token, cache, block_tables, lengths,
     if new_dense:
         new_cache["dense_layers"] = new_dense
     return _head(params, cfg, x), new_cache
+
+
+def paged_decode_multi_step(params, token, cache, block_tables, lengths,
+                            remaining, keys, cfg: ModelConfig, *,
+                            n_steps: int, temperature: float = 0.0,
+                            trash_page: int = 0,
+                            fake_quant: bool = False):
+    """``n_steps`` fused continuous-batching decode steps in one
+    ``lax.scan`` — the device-resident hot loop.
+
+    Carries tokens, per-slot lengths, remaining generation budgets, and
+    PRNG keys on device; each iteration runs ``paged_decode_step`` (KV
+    writes land in the paged pool inside the scan) and samples the next
+    token with ``sample_tokens``.  Slots whose budget hits zero are masked:
+    their block-table row is re-pointed at ``trash_page`` (the serving
+    engine passes ``repro.serve.paging.TRASH_PAGE``) and their
+    length/token freeze, so over-generated steps can never corrupt live
+    pages (idle slots enter with remaining == 0 and stay masked).  The
+    caller must have pre-granted every page the window's writes need
+    (``Scheduler.plan_window``).
+
+    token/lengths/remaining (B,) int32; keys (B, 2) uint32.  Returns
+    (tokens (n_steps, B) int32, new cache, new lengths, new remaining,
+    new keys).
+    """
+    vocab = cfg.vocab
+
+    def one(carry, _):
+        tok, cache, lengths, remaining, keys = carry
+        done = remaining <= 0
+        bt = jnp.where(done[:, None], trash_page, block_tables)
+        ln = jnp.where(done, 0, lengths)
+        logits, cache = paged_decode_step(params, tok, cache, bt, ln, cfg,
+                                          fake_quant=fake_quant)
+        keys, nxt = sample_tokens(logits[:, -1, :vocab], keys, temperature)
+        nxt = jnp.where(done, tok, nxt)
+        lengths = jnp.where(done, lengths, lengths + 1)
+        remaining = jnp.where(done, remaining, remaining - 1)
+        return (nxt, cache, lengths, remaining, keys), nxt
+
+    (token, cache, lengths, remaining, keys), toks = jax.lax.scan(
+        one, (token, cache, lengths, remaining, keys), None, length=n_steps)
+    return toks, cache, lengths, remaining, keys

@@ -269,6 +269,45 @@ def paged_page_size(pool) -> int:
     return leaf.shape[-3]
 
 
+# pool key -> (contiguous prefill-cache key, element-code policy role)
+PAGED_POOL_KEYS = {
+    "kc_pages": ("k_codes", "kv_key"), "ks_pages": ("k_scales", None),
+    "vc_pages": ("v_codes", "kv_value"), "vs_pages": ("v_scales", None),
+    "k_pages": ("k", None), "v_pages": ("v", None),
+}
+
+
+def paged_cache_scatter(pool, cache, page_ids, cfg: ModelConfig):
+    """Scatter a *batched* contiguous prefill cache into the page pool.
+
+    ``pool``/``cache`` are one layer group's dicts (optionally
+    layer-stacked on a leading axis); cache leaves are (…, G, Lp, n_kv, X)
+    for G prefilled requests padded to the same Lp (a page multiple).
+    ``page_ids`` (G, npr) names the physical page of each (request, logical
+    page); rows are padded with the trash page where a request's padded
+    prompt exceeds its allocation, so bucket padding never touches live
+    pages.  Sub-byte codes are bit-packed per role on the way — once, on
+    device — and all G requests' pages land in a single scatter per leaf.
+    """
+    policy = cfg.mx
+    g, npr = page_ids.shape
+    flat = page_ids.reshape(-1)
+    page = paged_page_size(pool)
+    out = {}
+    for pk, leaf in pool.items():
+        ck, role = PAGED_POOL_KEYS[pk]
+        val = cache[ck]
+        stacked = val.ndim == 5          # (n_scan, G, Lp, n_kv, X)
+        spec = policy.role(role) if role is not None else None
+        if spec is not None and spec.packed:
+            val = pack_codes(val, spec.fmt)
+        lead = val.shape[:-4] if stacked else ()
+        val = val.reshape(lead + (g * npr, page) + val.shape[-2:])
+        out[pk] = leaf.at[:, flat].set(val) if stacked \
+            else leaf.at[flat].set(val)
+    return out
+
+
 def paged_cache_write(pool, k: jax.Array, v: jax.Array, pages: jax.Array,
                       offsets: jax.Array, cfg: ModelConfig):
     """Scatter one token per slot into the page pool.

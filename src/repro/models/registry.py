@@ -114,6 +114,22 @@ class Model:
                                           block_tables, lengths, self.cfg,
                                           fake_quant=fake_quant)
 
+    def paged_decode_multi_step(self, params, token, cache, block_tables,
+                                lengths, remaining, keys, *, n_steps: int,
+                                temperature: float = 0.0,
+                                trash_page: int = 0,
+                                fake_quant: bool = False):
+        """``n_steps`` fused decode steps in one lax.scan (device-resident
+        sampling; see decoder.paged_decode_multi_step)."""
+        return self.mod.paged_decode_multi_step(
+            params, token, cache, block_tables, lengths, remaining, keys,
+            self.cfg, n_steps=n_steps, temperature=temperature,
+            trash_page=trash_page, fake_quant=fake_quant)
+
+    def scatter_prefill(self, pool, cache, page_ids):
+        """Scatter a batched contiguous prefill cache into the page pool."""
+        return self.mod.scatter_prefill(self.cfg, pool, cache, page_ids)
+
 
 # =============================================================================
 # input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run food)

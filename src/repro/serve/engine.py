@@ -6,12 +6,19 @@ Two engines share the model zoo's decode path:
 prefilled once, then stepped greedily (or sampled).
 
 ``ContinuousBatchingEngine`` — slot-based continuous batching over a paged
-MX KV cache: variable-length prompts are admitted into decode slots
-mid-flight, each slot's K/V lives in fixed-size pages of packed codes +
-E8M0 scales referenced through a per-slot block table, and finished
-requests are evicted so their pages recycle immediately.  Prefill runs
-per-request (bucketed to page multiples) into a contiguous cache that is
-scattered into the slot's pages; decode steps the whole slot batch at once.
+MX KV cache with a **device-resident decode hot loop**: variable-length
+prompts are admitted into decode slots mid-flight, each slot's K/V lives in
+fixed-size pages of packed codes + E8M0 scales referenced through a
+per-slot block table, and finished requests are evicted so their pages
+recycle immediately.  Admissions are *bucket-batched*: same-padded-length
+prompts prefill as one batch whose caches scatter (and bit-pack) into their
+pages in a single donated call.  Decode fuses up to ``sync_every`` steps
+into one jitted ``lax.scan`` that samples on device (greedy + temperature,
+per-slot PRNG keys) and keeps tokens, lengths, budgets, and the paged pool
+on device — the host is consulted only at window boundaries, where it
+drains the emitted-token buffer, evicts finished slots, admits waiting
+requests, and pre-grants the pages the next window needs
+(``Scheduler.plan_window``).
 
 Either way the KV quantization policy comes from the model config's
 ``QuantPolicy`` roles (cfg.mx.kv_key / cfg.mx.kv_value) — this is the
@@ -25,16 +32,17 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pack import pack_codes
 from repro.dist.sharding import use_rules
+from repro.models.decoder import sample_tokens
 from repro.models.registry import Model
-from repro.serve.paging import BlockManager, pages_needed
+from repro.serve.paging import TRASH_PAGE, BlockManager, pages_needed
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -103,39 +111,54 @@ class ServeEngine:
 # =============================================================================
 # Continuous batching over the paged MX KV cache
 # =============================================================================
-# pool key -> (contiguous prefill-cache key, element-code policy role)
-_POOL_KEYS = {
-    "kc_pages": ("k_codes", "kv_key"), "ks_pages": ("k_scales", None),
-    "vc_pages": ("v_codes", "kv_value"), "vs_pages": ("v_scales", None),
-    "k_pages": ("k", None), "v_pages": ("v", None),
-}
-
-
 class ContinuousBatchingEngine:
-    """Slot-based continuous batching over a paged (optionally MX) KV cache.
+    """Slot-based continuous batching over a paged (optionally MX) KV cache
+    with a fused, device-resident decode loop.
 
-    ``max_slots``  — decode batch width (requests in flight).
-    ``page_size``  — tokens per KV page.
-    ``max_len``    — per-request cap on prompt + generated tokens; sets the
-                     block-table width.
-    ``num_pages``  — page-pool size; defaults to full occupancy
-                     (max_slots * pages(max_len) + the trash page).
-    ``rules``      — sharding rules (repro.dist.sharding.make_rules, decode
-                     posture); the page pool follows the "kv_pages" rule.
+    ``max_slots``      — decode batch width (requests in flight).
+    ``page_size``      — tokens per KV page.
+    ``max_len``        — per-request cap on prompt + generated tokens; sets
+                         the block-table width.
+    ``num_pages``      — page-pool size; defaults to full occupancy
+                         (max_slots * pages(max_len) + the trash page).
+    ``rules``          — sharding rules (repro.dist.sharding.make_rules,
+                         decode posture); the page pool follows the
+                         "kv_pages" rule.
+    ``sync_every``     — decode steps fused per jitted ``lax.scan`` window;
+                         the host syncs (drains tokens, evicts, admits)
+                         only at window boundaries.  1 reproduces the
+                         per-step engine exactly — higher values are
+                         token-identical (asserted in tests) but amortize
+                         dispatch + host transfers over the window.
+    ``prefill_bucket`` — admission prompts are padded to a multiple of
+                         this (rounded up to a page multiple; default
+                         page_size) and same-bucket admissions prefill as
+                         one batch.  Larger buckets mean fewer distinct
+                         prefill shapes (fewer retraces) at the cost of
+                         padded FLOPs.
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  page_size: int = 16, max_len: int = 256,
                  num_pages: Optional[int] = None,
                  rules: Optional[Dict[str, Any]] = None,
-                 gen: GenerationConfig = GenerationConfig()):
+                 gen: GenerationConfig = GenerationConfig(),
+                 sync_every: int = 8,
+                 prefill_bucket: Optional[int] = None):
         if not model.supports_paged():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching needs a GQA "
                 "decoder (no MLA / modality frontend)")
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.model = model
         self.params = params
         self.page_size = page_size
+        self.sync_every = int(sync_every)
+        pb = page_size if prefill_bucket is None else int(prefill_bucket)
+        if pb < 1:
+            raise ValueError(f"prefill_bucket must be >= 1, got {pb}")
+        self.prefill_bucket = -(-pb // page_size) * page_size
         self.max_pages_per_slot = pages_needed(max_len, page_size)
         if num_pages is None:
             num_pages = 1 + max_slots * self.max_pages_per_slot
@@ -149,36 +172,59 @@ class ContinuousBatchingEngine:
         self._next_rid = 0
         self._cur_tok = np.zeros(max_slots, np.int32)
         self._lengths = np.zeros(max_slots, np.int32)
-        self.n_steps = 0
+        self._remaining = np.zeros(max_slots, np.int32)
+        # per-slot PRNG keys, folded from the engine key at admission and
+        # evolved on device by sample_tokens
+        self._slot_keys = jnp.zeros((max_slots, 2), jnp.uint32)
+        # device-resident block table, re-uploaded only when the host
+        # tables actually changed (admission / page grant / eviction)
+        self._bt_version = -1
+        self._bt_dev = None
+        self.n_steps = 0          # device decode steps (incl. masked tail)
+        self.n_syncs = 0          # host sync points (fused windows run)
         self.n_generated = 0
+        # per-phase wall clock (bench_serve schema v2)
+        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0}
         cfg = model.cfg
         self.vocab = cfg.vocab
+        temperature = float(gen.temperature)
 
         def _ctx():
             return use_rules(rules) if rules is not None \
                 else contextlib.nullcontext()
 
-        def _prefill(params, tokens):
+        def _prefill_scatter(params, tokens, lens, keys, pool, page_ids):
+            """Batched bucket prefill fused with the page scatter: prefill
+            G same-bucket prompts at once, scatter every request's pages
+            (packing sub-byte codes on device) into the donated pool, and
+            sample each request's first token from its own last prompt
+            position — one host round-trip per bucket instead of three per
+            request."""
             with _ctx():
-                return model.prefill(params, {"tokens": tokens},
-                                     max_len=tokens.shape[1])
+                logits, cache, _ = model.prefill(
+                    params, {"tokens": tokens}, max_len=tokens.shape[1])
+                pool = model.scatter_prefill(pool, cache, page_ids)
+                g = tokens.shape[0]
+                last = logits[jnp.arange(g), lens - 1, :self.vocab]
+                keys, first = sample_tokens(last, keys, temperature)
+                return first, keys, pool
 
-        def _step(params, tok, pool, bt, lengths):
+        def _multi(params, tok, pool, bt, lengths, remaining, keys,
+                   n_steps):
             with _ctx():
-                return model.paged_decode_step(params, tok, pool, bt,
-                                               lengths)
+                return model.paged_decode_multi_step(
+                    params, tok, pool, bt, lengths, remaining, keys,
+                    n_steps=n_steps, temperature=temperature,
+                    trash_page=TRASH_PAGE)
 
-        def _scatter(pool, cache, page_ids):
-            with _ctx():
-                return self._scatter_pages(pool, cache, page_ids)
-
-        self._prefill = jax.jit(_prefill)
-        # donate the pool: every decode step / prefill scatter rewrites it
-        # wholesale, and without donation XLA double-buffers the dominant
-        # serving allocation (the CPU backend ignores donation with a
-        # warning; on TPU this halves peak KV memory)
-        self._step = jax.jit(_step, donate_argnums=(2,))
-        self._scatter = jax.jit(_scatter, donate_argnums=(0,))
+        # donate the pool: every decode window / prefill scatter rewrites
+        # it wholesale, and without donation XLA double-buffers the
+        # dominant serving allocation (the CPU backend ignores donation
+        # with a warning; on TPU this halves peak KV memory)
+        self._prefill_scatter = jax.jit(_prefill_scatter,
+                                        donate_argnums=(4,))
+        self._multi = jax.jit(_multi, static_argnums=(7,),
+                              donate_argnums=(2,))
 
     # ------------------------------------------------------------ requests
     def add_request(self, prompt, max_new_tokens: int) -> int:
@@ -198,41 +244,50 @@ class ContinuousBatchingEngine:
 
     # ---------------------------------------------------------- the engine
     def step(self) -> List[Tuple[int, int]]:
-        """Admit what fits, run one batched decode step; returns the
-        (request id, token) pairs emitted this step (admissions emit their
-        prefill token here too)."""
-        emitted = []
-        for req in self.scheduler.admit():
-            emitted.append((req.rid, self._prefill_into_slot(req)))
-            if req.done:
-                self._release(req)
-            else:
-                # the decode write position may sit in a page past the
-                # prompt's allocation (prompt length a page multiple)
-                ok = self.blocks.ensure(req.slot,
-                                        self._lengths[req.slot] + 1)
-                assert ok, "admission reserved full-sequence capacity"
+        """One host sync cycle: admit what fits (bucket-batched prefill),
+        run one fused decode window of up to ``sync_every`` device steps;
+        returns the (request id, token) pairs emitted this cycle in step
+        order (admissions emit their prefill token here too)."""
+        emitted: List[Tuple[int, int]] = []
+        t0 = time.perf_counter()
+        admitted = self.scheduler.admit()
+        self.phase["sync"] += time.perf_counter() - t0
+        if admitted:
+            self._batched_prefill(admitted, emitted)
+        t0 = time.perf_counter()
         if not self.scheduler.running:
+            self.phase["sync"] += time.perf_counter() - t0
             return emitted
-        bt = jnp.asarray(self.blocks.tables)
-        logits, self.pool = self._step(
+        window = self.scheduler.plan_window(self._lengths, self.sync_every)
+        snapshot = sorted(self.scheduler.running.items())
+        rem0 = {slot: req.remaining for slot, req in snapshot}
+        bt = self._device_tables()
+        t1 = time.perf_counter()
+        toks, self.pool, _, _, self._slot_keys = self._multi(
             self.params, jnp.asarray(self._cur_tok), self.pool, bt,
-            jnp.asarray(self._lengths))
-        self.n_steps += 1
-        lg = np.asarray(logits[:, -1, :self.vocab], np.float32)
-        for slot in sorted(self.scheduler.running):
-            req = self.scheduler.running[slot]
-            nxt = self._pick_host(lg[slot])
-            self._lengths[slot] += 1
-            self._cur_tok[slot] = nxt
-            req.out.append(nxt)
-            self.n_generated += 1
-            emitted.append((req.rid, nxt))
+            jnp.asarray(self._lengths), jnp.asarray(self._remaining),
+            self._slot_keys, window)
+        toks = np.asarray(toks)         # the one host transfer per window
+        t2 = time.perf_counter()
+        self.n_steps += window
+        self.n_syncs += 1
+        for t in range(window):
+            for slot, req in snapshot:
+                if t < rem0[slot]:
+                    tok = int(toks[t, slot])
+                    req.out.append(tok)
+                    emitted.append((req.rid, tok))
+                    self.n_generated += 1
+        for slot, req in snapshot:
+            take = min(window, rem0[slot])
+            self._lengths[slot] += take
+            self._remaining[slot] -= take
+            if take:
+                self._cur_tok[slot] = toks[take - 1, slot]
             if req.done:
                 self._release(req)
-            else:
-                ok = self.blocks.ensure(slot, self._lengths[slot] + 1)
-                assert ok, "admission reserved full-sequence capacity"
+        self.phase["decode"] += t2 - t1
+        self.phase["sync"] += (t1 - t0) + (time.perf_counter() - t2)
         return emitted
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -249,65 +304,69 @@ class ContinuousBatchingEngine:
                 for r in self.scheduler.finished[start:]}
 
     # ------------------------------------------------------------ internals
-    def _prefill_into_slot(self, req: Request) -> int:
-        """Prefill one admitted request (prompt padded to a page multiple),
-        scatter its contiguous cache into the slot's pages, emit the first
-        generated token."""
-        slot, n = req.slot, req.prompt_len
-        npr = pages_needed(n, self.page_size)
-        toks = np.zeros((1, npr * self.page_size), np.int32)
-        toks[0, :n] = req.prompt
-        logits, cache, _ = self._prefill(self.params, jnp.asarray(toks))
-        page_ids = jnp.asarray(self.blocks.tables[slot, :npr])
-        self.pool = self._scatter(self.pool, cache, page_ids)
-        first = self._pick_host(
-            np.asarray(logits[0, n - 1, :self.vocab], np.float32))
-        self._cur_tok[slot] = first
-        self._lengths[slot] = n
-        req.out.append(first)
-        self.n_generated += 1
-        return first
+    def _device_tables(self) -> jax.Array:
+        """Device-side block table, refreshed only when the host tables
+        changed (BlockManager.version) — steady-state decode windows skip
+        the upload entirely."""
+        if self._bt_version != self.blocks.version:
+            self._bt_dev = jnp.asarray(self.blocks.tables)
+            self._bt_version = self.blocks.version
+        return self._bt_dev
+
+    def _batched_prefill(self, admitted: List[Request],
+                         emitted: List[Tuple[int, int]]) -> None:
+        """Prefill admissions bucket-by-bucket: same-padded-length prompts
+        run as one batch, and the whole bucket's pages land in a single
+        donated prefill+scatter+sample call."""
+        t0 = time.perf_counter()
+        groups: Dict[int, List[Request]] = {}
+        for req in admitted:
+            lp = -(-req.prompt_len // self.prefill_bucket) \
+                * self.prefill_bucket
+            groups.setdefault(lp, []).append(req)
+        for lp, reqs in sorted(groups.items()):
+            g = len(reqs)
+            toks = np.zeros((g, lp), np.int32)
+            lens = np.zeros(g, np.int32)
+            slots = np.array([r.slot for r in reqs])
+            for i, r in enumerate(reqs):
+                toks[i, :r.prompt_len] = r.prompt
+                lens[i] = r.prompt_len
+            # one vmapped fold per bucket (not one dispatch per request):
+            # each slot's key derives from its request id alone, so key
+            # evolution is independent of admission grouping
+            fresh = jax.vmap(lambda r: jax.random.fold_in(self._key, r))(
+                jnp.asarray([r.rid for r in reqs], jnp.uint32))
+            # rows are trash-padded past each request's allocation, so a
+            # bucket-padded prompt's excess pages scatter harmlessly
+            npr = lp // self.page_size
+            page_ids = self.blocks.tables[slots, :npr]
+            first, keys, self.pool = self._prefill_scatter(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                fresh, self.pool, jnp.asarray(page_ids))
+            self._slot_keys = self._slot_keys.at[slots].set(keys)
+            first = np.asarray(first)
+            for i, r in enumerate(reqs):
+                slot = r.slot
+                tok = int(first[i])
+                self._cur_tok[slot] = tok
+                self._lengths[slot] = r.prompt_len
+                self._remaining[slot] = r.max_new_tokens - 1
+                r.out.append(tok)
+                self.n_generated += 1
+                emitted.append((r.rid, tok))
+                if r.done:
+                    self._release(r)
+                else:
+                    # the decode write position may sit in a page past the
+                    # prompt's allocation (prompt length a page multiple)
+                    ok = self.blocks.ensure(slot, r.prompt_len + 1)
+                    assert ok, "admission reserved full-sequence capacity"
+        self.phase["prefill"] += time.perf_counter() - t0
 
     def _release(self, req: Request) -> None:
         slot = req.slot
         self.scheduler.evict(req)
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0
-
-    def _pick_host(self, logits: np.ndarray) -> int:
-        if self.gen.temperature <= 0.0:
-            return int(np.argmax(logits))
-        self._key, sub = jax.random.split(self._key)
-        return int(jax.random.categorical(
-            sub, jnp.asarray(logits) / self.gen.temperature))
-
-    def _scatter_pages(self, pool, cache, page_ids):
-        """Contiguous prefill cache (B=1, padded to full pages) -> the
-        slot's physical pages (packing sub-byte codes per role on the
-        way)."""
-        policy = self.model.cfg.mx
-
-        def group(pool_g, cache_g):
-            out = {}
-            for pk, leaf in pool_g.items():
-                ck, role = _POOL_KEYS[pk]
-                val = cache_g[ck]
-                stacked = val.ndim == 5          # (n_scan, 1, L, n_kv, X)
-                val = val[:, 0] if stacked else val[0]
-                spec = policy.role(role) if role is not None else None
-                if spec is not None and spec.packed:
-                    val = pack_codes(val, spec.fmt)
-                lead = val.shape[:-3]
-                npr = val.shape[-3] // self.page_size
-                val = val.reshape(lead + (npr, self.page_size)
-                                  + val.shape[-2:])
-                out[pk] = leaf.at[:, page_ids].set(val) if stacked \
-                    else leaf.at[page_ids].set(val)
-            return out
-
-        new = {"layers": group(pool["layers"], cache["layers"])}
-        if "dense_layers" in pool:
-            new["dense_layers"] = [
-                group(pg, cg) for pg, cg in zip(pool["dense_layers"],
-                                                cache["dense_layers"])]
-        return new
+        self._remaining[slot] = 0

@@ -32,6 +32,11 @@ class BlockManager:
     ``tables`` is the host mirror of the device block-table operand: rows
     are zero (the trash page) beyond a slot's allocation, so the kernel's
     out-of-range page lookups always hit valid (masked) memory.
+
+    ``version`` increments on every mutation of ``tables``; the serving
+    engine keys its device-resident copy of the block table on it, so the
+    host->device upload happens only when an admission/grant/eviction
+    actually changed the mapping — not on every decode window.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
@@ -41,6 +46,7 @@ class BlockManager:
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
+        self.version = 0
         # LIFO free list; page 0 reserved as trash
         self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
         self.tables = np.full((max_slots, max_pages_per_slot), TRASH_PAGE,
@@ -58,6 +64,10 @@ class BlockManager:
     def slot_pages(self, slot: int) -> int:
         return len(self._owned[slot])
 
+    def slot_capacity(self, slot: int) -> int:
+        """Token positions the slot's current allocation can hold."""
+        return len(self._owned[slot]) * self.page_size
+
     # ----------------------------------------------------------- mutations
     def allocate(self, slot: int, n: int) -> bool:
         """Append ``n`` pages to ``slot``'s block-table row.  Returns False
@@ -66,6 +76,8 @@ class BlockManager:
         if not self.can_allocate(n) \
                 or len(owned) + n > self.max_pages_per_slot:
             return False
+        if n:
+            self.version += 1
         for _ in range(n):
             pg = self._free.pop()
             self.tables[slot, len(owned)] = pg
@@ -79,6 +91,8 @@ class BlockManager:
 
     def free_slot(self, slot: int) -> None:
         """Return all of ``slot``'s pages and re-point its row at trash."""
+        if self._owned[slot]:
+            self.version += 1
         self._free.extend(reversed(self._owned[slot]))
         self._owned[slot] = []
         self.tables[slot, :] = TRASH_PAGE

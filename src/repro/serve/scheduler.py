@@ -48,6 +48,11 @@ class Request:
     def done(self) -> bool:
         return len(self.out) >= self.max_new_tokens
 
+    @property
+    def remaining(self) -> int:
+        """Tokens the request is still entitled to generate."""
+        return self.max_new_tokens - len(self.out)
+
 
 class Scheduler:
     """FIFO admission into ``max_slots`` decode slots backed by ``blocks``."""
@@ -109,6 +114,41 @@ class Scheduler:
             self.waiting.popleft()
             admitted.append(req)
         return admitted
+
+    # ------------------------------------------------- decode-window planning
+    def grant_horizon(self, req: Request, length: int) -> int:
+        """Decode steps ``req``'s slot can take before its next KV write
+        would land past the pages it currently owns (writes go to positions
+        ``length``, ``length + 1``, ...)."""
+        return self.blocks.slot_capacity(req.slot) - length
+
+    def plan_window(self, lengths, sync_every: int) -> int:
+        """Plan the next device-resident decode window.
+
+        Returns the number of fused decode steps to run — ``sync_every``
+        capped by the longest remaining generation budget (so a window is
+        never all dead steps), rounded up to a power of two so the jitted
+        scan compiles for at most log2(sync_every)+1 distinct lengths —
+        and pre-grants every running slot the pages its window writes
+        need, clamped to the request's reserved full-sequence capacity.
+        Because admission reserved that capacity, the grants cannot fail,
+        and the fused ``lax.scan`` can run to the horizon without exiting
+        to the host for a page grant.  Slots whose budget runs out inside
+        the window are masked on device (their writes land on the trash
+        page) and recycled at the next sync point.
+        """
+        if not self.running:
+            return 0
+        need = max(r.remaining for r in self.running.values())
+        window = min(max(1, int(sync_every)),
+                     1 << (need - 1).bit_length())
+        for slot, req in self.running.items():
+            tgt = min(int(lengths[slot]) + window + 1, req.total_len)
+            ok = self.blocks.ensure(slot, tgt)
+            assert ok, "admission reserved full-sequence capacity"
+            assert self.grant_horizon(req, int(lengths[slot])) \
+                >= min(window, req.remaining), "page grant below horizon"
+        return window
 
     def evict(self, req: Request) -> None:
         """Release a finished request's slot and pages."""

@@ -1,0 +1,163 @@
+"""Token-identity of the fused device-resident decode loop vs per-step.
+
+The load-bearing guarantee of the multi-step restructuring: fusing
+``sync_every`` decode steps into one jitted ``lax.scan`` (device-side
+sampling, per-slot PRNG keys, in-scan paged-cache writes, done-slot
+masking) changes *nothing* about the tokens — ``sync_every=N`` is
+token-for-token identical to the per-step loop (``sync_every=1``) for all
+six MX element formats x both conversion modes, the mixed
+INT8-keys/E2M1-values policy, the unquantized cache, the paged Pallas
+kernel path, and sampled (temperature > 0) decoding.
+
+Requests carry *different* generation budgets, so evictions stagger and
+admissions land while other slots are mid-generation inside a scan window;
+slots also exhaust their budget in the middle of a window (NEW values are
+not multiples of SYNC) — exercising the done-masking + trash-page path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.formats import ALL_FORMATS
+from repro.models import Model, load_reduced
+from repro.models.config import QuantPolicy, QuantSpec
+from repro.serve import ContinuousBatchingEngine, GenerationConfig
+
+MIXED = QuantPolicy.parse("kv_key=int8@32:ocp,kv_value=e2m1@32:ocp")
+
+# >= 8 requests, mixed lengths (3 distinct values to bound jit retraces);
+# per-request budgets differ so slots free at different times and
+# admissions/evictions land inside other slots' scan windows
+LENS = [4, 9, 14, 4, 9, 14, 9, 4]
+NEWS = [3, 7, 5, 6, 4, 7, 3, 5]
+PAGE = 8
+SLOTS = 3          # < len(LENS): admission + eviction + slot reuse on path
+SYNC = 4           # no NEWS value is a multiple: budgets die mid-window
+
+
+def _prompts(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n).astype(np.int32) for n in LENS]
+
+
+def _serve(cfg, sync_every, temperature=0.0, prefill_bucket=None):
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab)
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=SLOTS, page_size=PAGE,
+        max_len=max(LENS) + max(NEWS) + 1,
+        gen=GenerationConfig(max_new_tokens=max(NEWS),
+                             temperature=temperature),
+        sync_every=sync_every, prefill_bucket=prefill_bucket)
+    rids = [eng.add_request(p, n) for p, n in zip(prompts, NEWS)]
+    outs = eng.run()
+    return [outs[r] for r in rids], eng
+
+
+def _assert_identical(a, b):
+    assert len(a) == len(b)
+    for i, (x, y) in enumerate(zip(a, b)):
+        np.testing.assert_array_equal(x, y, err_msg=f"request {i}")
+        assert len(x) == NEWS[i]
+
+
+@pytest.mark.parametrize("mode", ["ocp", "paper"])
+@pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
+def test_fused_matches_per_step_all_formats(fmt, mode):
+    """sync_every=4 == sync_every=1 token-for-token — all six MX formats x
+    both conversion modes (uniform KV policies)."""
+    kv = QuantSpec(fmt, mode)
+    cfg = load_reduced("chatglm3_6b",
+                       mx=QuantPolicy(kv_key=kv, kv_value=kv))
+    fused, _ = _serve(cfg, sync_every=SYNC)
+    stepwise, _ = _serve(cfg, sync_every=1)
+    _assert_identical(fused, stepwise)
+
+
+def test_fused_matches_per_step_mixed_roles():
+    """INT8 keys + E2M1 values through the fused loop (per-role packed
+    pools written inside the scan)."""
+    cfg = load_reduced("chatglm3_6b", mx=MIXED)
+    fused, _ = _serve(cfg, sync_every=SYNC)
+    stepwise, _ = _serve(cfg, sync_every=1)
+    _assert_identical(fused, stepwise)
+
+
+def test_fused_matches_per_step_fp_cache():
+    cfg = load_reduced("chatglm3_6b")
+    fused, _ = _serve(cfg, sync_every=SYNC)
+    stepwise, _ = _serve(cfg, sync_every=1)
+    _assert_identical(fused, stepwise)
+
+
+def test_fused_matches_per_step_flash_kernel():
+    """attn_impl=flash: the paged Pallas kernel runs inside the scan body
+    (scalar-prefetch block-table gather per fused step)."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"),
+                       attn_impl="flash")
+    fused, _ = _serve(cfg, sync_every=SYNC)
+    stepwise, _ = _serve(cfg, sync_every=1)
+    _assert_identical(fused, stepwise)
+
+
+def test_fused_matches_per_step_sampled():
+    """temperature > 0: per-slot PRNG keys are folded from the request id
+    and split once per decode step, so the sample stream is independent of
+    how steps are grouped into windows."""
+    cfg = load_reduced("chatglm3_6b")
+    fused, _ = _serve(cfg, sync_every=SYNC, temperature=0.7)
+    stepwise, _ = _serve(cfg, sync_every=1, temperature=0.7)
+    _assert_identical(fused, stepwise)
+
+
+def test_prefill_bucket_invariant():
+    """A coarser prefill bucket changes batching/padding, not tokens:
+    causal attention makes each request's last-prompt-position logits
+    independent of the bucket padding, and excess bucket pages scatter to
+    the trash page."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    base, _ = _serve(cfg, sync_every=SYNC)
+    coarse, eng = _serve(cfg, sync_every=SYNC, prefill_bucket=16)
+    assert eng.prefill_bucket == 16
+    _assert_identical(base, coarse)
+
+
+# =============================================================================
+# engine accounting (no equivalence partner needed)
+# =============================================================================
+def test_window_amortizes_host_syncs():
+    """Fused windows run >= 1 device step per host sync; at sync_every=4
+    the host syncs strictly fewer times than the per-step engine."""
+    cfg = load_reduced("chatglm3_6b")
+    _, fused = _serve(cfg, sync_every=SYNC)
+    _, stepwise = _serve(cfg, sync_every=1)
+    assert fused.n_syncs < stepwise.n_syncs
+    assert fused.n_syncs <= fused.n_steps
+    assert stepwise.n_syncs == stepwise.n_steps
+    # over-generated (masked) device steps exist but are bounded by one
+    # window per sync point
+    assert fused.n_steps < stepwise.n_steps + SYNC * fused.n_syncs
+
+
+def test_device_block_table_cached():
+    """The device block table re-uploads only when the host tables change:
+    after a run the cached version matches, and an unchanged table returns
+    the same device buffer."""
+    cfg = load_reduced("chatglm3_6b")
+    _, eng = _serve(cfg, sync_every=SYNC)
+    bt1 = eng._device_tables()
+    assert eng._bt_version == eng.blocks.version
+    bt2 = eng._device_tables()
+    assert bt1 is bt2
+    v0 = eng.blocks.version
+    assert eng.blocks.allocate(0, 1)
+    assert eng.blocks.version > v0
+    assert eng._device_tables() is not bt1
+
+def test_phase_accounting_populated():
+    cfg = load_reduced("chatglm3_6b")
+    _, eng = _serve(cfg, sync_every=SYNC)
+    assert eng.phase["prefill"] > 0.0
+    assert eng.phase["decode"] > 0.0
+    assert eng.phase["sync"] > 0.0
