@@ -1,0 +1,148 @@
+"""Quality-per-byte of calibrated per-layer policies vs uniform formats.
+
+Runs the full ``repro.calib`` pipeline — collect activation/KV statistics
+on synthetic batches, sweep the six MX element formats per layer, search
+under byte budgets — and compares the auto-selected per-layer
+``PolicyTable`` against every uniform single-format baseline on the two
+axes that matter for a KV cache: mean round-trip SQNR (dB, over every
+(role, layer) slot) and total KV bytes per token position (codes + E8M0
+scales, bit-packed, summed over layers).
+
+A policy *dominates* a baseline when it is at least as good on both axes
+and strictly better on one.  The committed ``BENCH_calib.json`` asserts
+(via ``validate_bench_calib.py``, run in CI) that each auto row dominates
+at least one uniform baseline — the acceptance bar for the search being
+worth its wall time.
+
+Emits the harness CSV rows (name, calibration+search wall us, derived
+quality@bytes) and the machine-readable ``BENCH_calib.json``
+(schema ``bench_calib/v1``; unknown fields are schema drift and fail the
+validator).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_calib.json"
+
+ARCH = "chatglm3_6b"
+ROLES = ("kv_key", "kv_value")
+
+
+def _dominates(sq, by, base_sq, base_by) -> bool:
+    """At least as good on both axes, strictly better on one."""
+    return (sq >= base_sq and by <= base_by) and (sq > base_sq
+                                                  or by < base_by)
+
+
+def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
+        ) -> List[Tuple[str, float, str]]:
+    import jax
+
+    from repro.calib import (collect_model_stats, search_kv_policy,
+                             sweep_role)
+    from repro.calib.sweep import DEFAULT_CANDIDATES
+    from repro.models import Model, load_reduced
+    from repro.serve.paging import spec_side_nbytes
+
+    n_layers = 4 if smoke else 8
+    n_batches = 2 if smoke else 4
+    batch, seq = (2, 32) if smoke else (4, 64)
+
+    cfg = load_reduced(ARCH, n_layers=n_layers)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, cfg.vocab, size=(batch, seq)
+                            ).astype(np.int32) for _ in range(n_batches)]
+
+    t0 = time.perf_counter()
+    stats = collect_model_stats(model, params, batches, roles=ROLES)
+    calib_s = time.perf_counter() - t0
+
+    cost = lambda spec: float(spec_side_nbytes(spec, cfg.n_kv_heads,
+                                               cfg.hd))
+    sweeps = {role: sweep_role(stats, role, cost) for role in ROLES}
+
+    # ---- uniform single-format baselines (same sweep, same samples) ----
+    baselines = []
+    for spec in DEFAULT_CANDIDATES:
+        picked = [next(s for s in scored if s.spec == spec)
+                  for role in ROLES for scored in sweeps[role].values()]
+        baselines.append({
+            "name": f"uniform-{spec.fmt}",
+            "quant": f"kv_key={spec},kv_value={spec}",
+            "kv_bytes_per_token": float(sum(s.nbytes for s in picked)),
+            "mean_sqnr_db": float(np.mean([s.sqnr_db for s in picked])),
+        })
+
+    # ---- budget-constrained auto selection ----
+    by_fmt = {b["name"].split("-")[1]: b for b in baselines}
+    budgets = {
+        # all the bytes of an 8-bit uniform cache: the search is free to
+        # spend them on whichever 8-bit format measures best per layer
+        "auto-8bit": by_fmt["e4m3"]["kv_bytes_per_token"],
+        # three quarters of that: forces per-layer / per-role mixing
+        "auto-6bit": 0.75 * by_fmt["e4m3"]["kv_bytes_per_token"],
+    }
+    autos = []
+    rows: List[Tuple[str, float, str]] = []
+    for name, budget in budgets.items():
+        t0 = time.perf_counter()
+        res = search_kv_policy(stats, budget, cfg)
+        search_s = time.perf_counter() - t0
+        dom = [b["name"] for b in baselines
+               if _dominates(res.mean_sqnr_db, res.total_nbytes,
+                             b["mean_sqnr_db"], b["kv_bytes_per_token"])]
+        autos.append({
+            "name": name,
+            "budget_bytes_per_token": float(budget),
+            "kv_bytes_per_token": float(res.total_nbytes),
+            "mean_sqnr_db": float(res.mean_sqnr_db),
+            "n_layer_overrides": len(res.table.overrides),
+            "table": res.table.to_json_dict(),
+            "dominates": dom,
+        })
+        rows.append((f"calib_{name}", (calib_s + search_s) * 1e6,
+                     f"{res.mean_sqnr_db:.1f}dB@"
+                     f"{res.total_nbytes:.0f}B/tok"))
+    for b in baselines:
+        rows.append((f"calib_{b['name']}", calib_s * 1e6,
+                     f"{b['mean_sqnr_db']:.1f}dB@"
+                     f"{b['kv_bytes_per_token']:.0f}B/tok"))
+
+    doc = {
+        "schema": "bench_calib/v1",
+        "arch": f"{ARCH}-reduced",
+        "n_layers": int(n_layers),
+        "calib_batches": int(n_batches),
+        "calib_tokens": int(n_batches * batch * seq),
+        "roles": list(ROLES),
+        "calib_wall_s": float(calib_s),
+        "baselines": baselines,
+        "auto": autos,
+    }
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (CI bench-smoke job)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=not args.full, out_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,12 +54,6 @@ CACHE_CONFIGS = (
 MIXES = ("uniform", "mixed")
 
 
-def _pool_bytes(pool) -> int:
-    import jax
-    return int(sum(np.prod(l.shape) * l.dtype.itemsize
-                   for l in jax.tree_util.tree_leaves(pool)))
-
-
 def _prompt_lens(mix: str, n_req: int, base: int,
                  rng: np.random.Generator) -> np.ndarray:
     if mix == "uniform":
@@ -156,7 +150,7 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
                 "sync_s": float(ph["sync"]),
                 "decode_tokens_per_s": float(
                     dec_toks / ph["decode"]) if ph["decode"] > 0 else 0.0,
-                "kv_pool_bytes": _pool_bytes(eng.pool),
+                "kv_pool_bytes": eng.kv_pool_nbytes,
             })
 
     doc = {

@@ -14,8 +14,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_collective, bench_convert, bench_matmul,
-                            bench_quant_error, bench_roofline, bench_serve)
+    from benchmarks import (bench_calib, bench_collective, bench_convert,
+                            bench_matmul, bench_quant_error, bench_roofline,
+                            bench_serve)
     mods = {
         "convert (Table VIII analog)": bench_convert,
         "quant error (Tables III-VII analog)": bench_quant_error,
@@ -23,6 +24,7 @@ def main() -> None:
         "grad collective compression": bench_collective,
         "roofline (dry-run artifacts)": bench_roofline,
         "paged-KV continuous batching": bench_serve,
+        "calibrated auto policies (quality/byte)": bench_calib,
     }
     print("name,us_per_call,derived")
     failures = []

@@ -1,0 +1,137 @@
+"""Validate BENCH_calib.json against the bench_calib/v1 schema (dep-free).
+
+    python benchmarks/validate_bench_calib.py [BENCH_calib.json]
+
+Beyond field typing (unknown fields are schema drift and fail, like the
+bench_serve v2 validator), this re-derives the quality-per-byte dominance
+claims: every auto row must dominate at least one uniform baseline —
+mean SQNR >= the baseline's at <= its KV bytes per token, strictly better
+on one axis — and its claimed ``dominates`` list must match what the
+row's own numbers imply.  Exits nonzero with a per-field report.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "bench_calib/v1"
+TOP_FIELDS = {
+    "schema": str,
+    "arch": str,
+    "n_layers": int,
+    "calib_batches": int,
+    "calib_tokens": int,
+    "roles": list,
+    "calib_wall_s": float,
+    "baselines": list,
+    "auto": list,
+}
+BASELINE_FIELDS = {
+    "name": str,
+    "quant": str,
+    "kv_bytes_per_token": float,
+    "mean_sqnr_db": float,
+}
+AUTO_FIELDS = {
+    "name": str,
+    "budget_bytes_per_token": float,
+    "kv_bytes_per_token": float,
+    "mean_sqnr_db": float,
+    "n_layer_overrides": int,
+    "table": dict,
+    "dominates": list,
+}
+KNOWN_FMTS = ("int8", "e4m3", "e5m2", "e3m2", "e2m3", "e2m1")
+
+
+def _fields(errs, obj, fields, where):
+    for field, ty in fields.items():
+        if field not in obj:
+            errs.append(f"{where}: missing field {field!r}")
+        elif ty is float and isinstance(obj[field], int) \
+                and not isinstance(obj[field], bool):
+            pass                               # ints are acceptable floats
+        elif not isinstance(obj[field], ty) or isinstance(obj[field], bool):
+            errs.append(f"{where}.{field}: expected {ty.__name__}, "
+                        f"got {type(obj[field]).__name__}")
+    for field in sorted(set(obj) - set(fields)):
+        errs.append(f"{where}: unknown field {field!r} (schema drift — "
+                    f"extend the validator in the same PR)")
+
+
+def _dominates(sq, by, base_sq, base_by) -> bool:
+    return (sq >= base_sq and by <= base_by) and (sq > base_sq
+                                                  or by < base_by)
+
+
+def check(doc) -> list:
+    errs = []
+    _fields(errs, doc, TOP_FIELDS, "top-level")
+    if errs:
+        return errs
+    if doc["schema"] != SCHEMA:
+        errs.append(f"schema: expected {SCHEMA!r}, got {doc['schema']!r}")
+    if doc["n_layers"] < 2:
+        errs.append("n_layers: per-layer selection needs >= 2 layers")
+    if len(doc["baselines"]) < 2:
+        errs.append("baselines: need >= 2 uniform-format baselines")
+    if len(doc["auto"]) < 1:
+        errs.append("auto: need >= 1 budget-constrained selection")
+    for i, b in enumerate(doc["baselines"]):
+        _fields(errs, b, BASELINE_FIELDS, f"baselines[{i}]")
+    for i, a in enumerate(doc["auto"]):
+        _fields(errs, a, AUTO_FIELDS, f"auto[{i}]")
+    if errs:
+        return errs
+    for i, b in enumerate(doc["baselines"]):
+        fmt = b["name"].removeprefix("uniform-")
+        if fmt not in KNOWN_FMTS:
+            errs.append(f"baselines[{i}].name: unknown format {fmt!r}")
+        if b["kv_bytes_per_token"] <= 0:
+            errs.append(f"baselines[{i}]: non-positive bytes")
+    for i, a in enumerate(doc["auto"]):
+        where = f"auto[{i}] ({a['name']})"
+        if a["kv_bytes_per_token"] > a["budget_bytes_per_token"] * 1.0001:
+            errs.append(f"{where}: selected bytes "
+                        f"{a['kv_bytes_per_token']:.4g} exceed the budget "
+                        f"{a['budget_bytes_per_token']:.4g}")
+        if a["table"].get("schema") != "policy_table/v1":
+            errs.append(f"{where}: table is not a policy_table/v1 doc")
+        implied = [b["name"] for b in doc["baselines"]
+                   if _dominates(a["mean_sqnr_db"],
+                                 a["kv_bytes_per_token"],
+                                 b["mean_sqnr_db"],
+                                 b["kv_bytes_per_token"])]
+        if sorted(a["dominates"]) != sorted(implied):
+            errs.append(f"{where}: dominates claims {a['dominates']} but "
+                        f"the row's numbers imply {implied}")
+        if not implied:
+            errs.append(
+                f"{where}: dominates no uniform baseline — the "
+                f"auto-selected policy must beat at least one "
+                f"single-format cache on quality-per-byte")
+    return errs
+
+
+def main() -> None:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent / "BENCH_calib.json"
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}", file=sys.stderr)
+        sys.exit(1)
+    errs = check(doc)
+    if errs:
+        print(f"{path}: {len(errs)} schema violation(s):", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    autos = {a["name"]: a["dominates"] for a in doc["auto"]}
+    print(f"{path}: valid {SCHEMA} ({len(doc['baselines'])} baselines; "
+          f"dominance: {autos})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""repro.calib — activation-statistics calibration and budget-constrained
+auto-selection of per-layer quantization policies.
+
+The pipeline has three stages, one module each:
+
+``stats``         — run a handful of calibration batches through the
+                    instrumented model forward and accumulate, per tensor
+                    role and per layer, streaming statistics (absmax,
+                    biased-exponent histogram, moments) plus a bounded
+                    block sample of the raw values.
+``sweep``         — score every candidate ``QuantSpec`` in a search space
+                    against the collected samples using ``core.metrics``
+                    (SQNR, block-relative error) and the spec's storage
+                    cost.
+``policy_search`` — pick, under a byte budget, the per-layer spec
+                    assignment maximizing quality, emitted as a
+                    ``core.spec.PolicyTable`` (JSON-serializable; applied
+                    with ``models.config.apply_policy_table``).
+"""
+from repro.calib.stats import (  # noqa: F401
+    CalibStats, TensorStats, collect_model_stats,
+)
+from repro.calib.sweep import (  # noqa: F401
+    DEFAULT_CANDIDATES, ScoredSpec, score_sample, sweep_role,
+    weight_param_nbytes,
+)
+from repro.calib.policy_search import (  # noqa: F401
+    SearchResult, parse_auto_budget, search_kv_policy,
+    search_weights_policy,
+)

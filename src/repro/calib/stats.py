@@ -1,0 +1,278 @@
+"""Streaming per-(role, layer) tensor statistics for calibration.
+
+``collect_model_stats`` runs a handful of calibration batches through the
+instrumented model forward (``Model.forward_calib`` taps the clean,
+pre-quantization tensors of the ``activations``/``kv_key``/``kv_value``
+roles per layer), reads the ``weights`` role straight off the params, and
+optionally runs an LM-loss backward pass for the ``grads`` role.  Each
+batch's reduction — absmax, sum, sum of squares, biased-FP32-exponent
+histogram — happens **in-jit** on device; the host only merges the
+per-batch scalar/histogram results and keeps a bounded row sample of each
+tensor reshaped to ``(rows, block)`` blocks, which is what
+``repro.calib.sweep`` scores candidate specs against.
+
+Samples are block-rows along each role's quantization axis (head_dim for
+KV, the feature dim for activations, the input dim for weights), so
+quantizing a sample with ``axis=-1`` reproduces the exact block
+decomposition the real consumer uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import DEFAULT_BLOCK
+
+ROLES_FORWARD = ("activations", "kv_key", "kv_value")
+ALL_ROLES = ("weights", "activations", "kv_key", "kv_value", "grads")
+
+# params leaves excluded from the weights role: not consumed by dense()/
+# the expert einsums (router runs in f32 outside the quantized matmuls;
+# norm gains and biases are 1-D)
+_WEIGHT_EXCLUDE = ("router",)
+
+
+# =============================================================================
+# TensorStats — one (role, layer)'s streaming accumulator
+# =============================================================================
+@dataclasses.dataclass
+class TensorStats:
+    """Streaming statistics plus a bounded block sample of one tensor
+    stream.  ``exp_hist[e]`` counts finite non-zero elements with biased
+    FP32 exponent ``e`` (the quantity the converter's comparator tree and
+    shared-scale selection consume)."""
+
+    count: int = 0
+    n_zero: int = 0
+    absmax: float = 0.0
+    total: float = 0.0
+    sumsq: float = 0.0
+    exp_hist: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(256, np.int64))
+    sample: Optional[np.ndarray] = None       # (rows, block) f32
+
+    # ------------------------------------------------------------- derived
+    @property
+    def mean(self) -> float:
+        return self.total / max(1, self.count)
+
+    @property
+    def rms(self) -> float:
+        return float(np.sqrt(self.sumsq / max(1, self.count)))
+
+    @property
+    def zero_frac(self) -> float:
+        return self.n_zero / max(1, self.count)
+
+    def exp_percentile(self, q: float) -> int:
+        """Biased-exponent value at quantile ``q`` of the histogram (the
+        dynamic-range signal format selection keys on)."""
+        c = np.cumsum(self.exp_hist)
+        if c[-1] == 0:
+            return 0
+        return int(np.searchsorted(c, q * c[-1], side="left"))
+
+    # ------------------------------------------------------------ mutation
+    def merge(self, other: "TensorStats",
+              sample_rows: int = 4096) -> "TensorStats":
+        """Fold ``other`` into this accumulator (streaming merge)."""
+        self.count += other.count
+        self.n_zero += other.n_zero
+        self.absmax = max(self.absmax, other.absmax)
+        self.total += other.total
+        self.sumsq += other.sumsq
+        self.exp_hist = self.exp_hist + other.exp_hist
+        if other.sample is not None:
+            if self.sample is None:
+                self.sample = other.sample[:sample_rows]
+            elif self.sample.shape[0] < sample_rows:
+                room = sample_rows - self.sample.shape[0]
+                self.sample = np.concatenate(
+                    [self.sample, other.sample[:room]], axis=0)
+        return self
+
+
+# =============================================================================
+# in-jit per-tensor reduction
+# =============================================================================
+def _block_rows(x: jax.Array, block: int) -> jax.Array:
+    """Reshape to (rows, block) f32 along the trailing (quantization)
+    axis, zero-padding the trailing dim to a block multiple."""
+    x = x.astype(jnp.float32)
+    d = x.shape[-1]
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(-1, block)
+
+def tensor_reduction(x: jax.Array, block: int = DEFAULT_BLOCK,
+                     sample_rows: int = 4096) -> Dict[str, jax.Array]:
+    """The jit-friendly reduction: scalar moments + exponent histogram +
+    a deterministic leading-rows sample (all device arrays)."""
+    rows = _block_rows(x, block)
+    flat = rows.reshape(-1)
+    bits = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    finite_nz = (exp != 0xFF) & (flat != 0.0)
+    hist = jnp.zeros((256,), jnp.int32).at[
+        jnp.where(finite_nz, exp, 0)].add(finite_nz.astype(jnp.int32))
+    return {
+        "count": jnp.asarray(flat.size, jnp.int32),
+        "n_zero": jnp.sum(flat == 0.0).astype(jnp.int32),
+        "absmax": jnp.max(jnp.abs(flat)),
+        "total": jnp.sum(flat),
+        "sumsq": jnp.sum(flat * flat),
+        "exp_hist": hist,
+        "sample": rows[:sample_rows],
+    }
+
+
+def _to_stats(red) -> TensorStats:
+    return TensorStats(
+        count=int(red["count"]), n_zero=int(red["n_zero"]),
+        absmax=float(red["absmax"]), total=float(red["total"]),
+        sumsq=float(red["sumsq"]),
+        exp_hist=np.asarray(red["exp_hist"], np.int64),
+        sample=np.asarray(red["sample"], np.float32))
+
+
+# =============================================================================
+# CalibStats — the full collection result
+# =============================================================================
+@dataclasses.dataclass
+class CalibStats:
+    """``stats[role][layer]`` for every collected role; ``n_layers`` uses
+    absolute indices (leading dense layers first, then the scanned
+    stack), matching ``PolicyTable`` layer numbering."""
+
+    arch: str
+    n_layers: int
+    n_batches: int
+    stats: Dict[str, Dict[int, TensorStats]]
+
+    def role_layers(self, role: str) -> Dict[int, TensorStats]:
+        if role not in self.stats:
+            raise KeyError(
+                f"role {role!r} was not collected; have "
+                f"{sorted(self.stats)} (pass it in roles= to "
+                f"collect_model_stats)")
+        return self.stats[role]
+
+
+def _layer_weight_leaves(params) -> List[List[Tuple[str, jax.Array]]]:
+    """Per absolute layer: the (name, array) matmul weight leaves the
+    ``weights`` role quantizes."""
+    def leaves(tree):
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        out = []
+        for path, leaf in flat:
+            name = jax.tree_util.keystr(path)
+            if leaf.ndim >= 2 and not any(x in name
+                                          for x in _WEIGHT_EXCLUDE):
+                out.append((name, leaf))
+        return out
+
+    per_layer = []
+    for dl in params.get("dense_layers", []):
+        per_layer.append(leaves(dl))
+    n_scan = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    for i in range(n_scan):
+        sl = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+        per_layer.append(leaves(sl))
+    return per_layer
+
+
+def _lm_loss(model, params, tokens):
+    """Next-token cross-entropy (the grads-role calibration signal)."""
+    logits, aux = model.forward(params, {"tokens": tokens})
+    vocab = model.cfg.vocab
+    lp = jax.nn.log_softmax(logits[:, :-1, :vocab].astype(jnp.float32))
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)
+    return jnp.mean(nll) + 0.01 * aux
+
+
+def collect_model_stats(model, params,
+                        batches: Iterable[np.ndarray], *,
+                        roles: Sequence[str] = ROLES_FORWARD + ("weights",),
+                        block: int = DEFAULT_BLOCK,
+                        sample_rows: int = 4096) -> CalibStats:
+    """Collect per-(role, layer) statistics from calibration batches.
+
+    ``model`` is a ``models.registry.Model`` (GQA decoder family for the
+    forward-tapped roles); ``batches`` yields ``(B, S)`` int32 token
+    arrays.  Weight-role statistics come straight from ``params`` (no
+    forward needed); the ``grads`` role, when requested, runs one LM-loss
+    backward per batch.  Per-batch reductions run in one jitted call;
+    the host merges them streamingly."""
+    roles = tuple(roles)
+    for r in roles:
+        if r not in ALL_ROLES:
+            raise ValueError(f"unknown tensor role {r!r}; choose from "
+                             f"{list(ALL_ROLES)}")
+    cfg = model.cfg
+    acc: Dict[str, Dict[int, TensorStats]] = {r: {} for r in roles}
+
+    fwd_roles = tuple(r for r in roles if r in ROLES_FORWARD)
+    red = functools.partial(tensor_reduction, block=block,
+                            sample_rows=sample_rows)
+
+    @jax.jit
+    def _forward_stats(params, tokens):
+        _, _, taps = model.forward_calib(params, {"tokens": tokens})
+        return {r: [red(t) for t in taps[r]] for r in fwd_roles}
+
+    @jax.jit
+    def _grad_stats(params, tokens):
+        grads = jax.grad(lambda p: _lm_loss(model, p, tokens))(params)
+        out = []
+        for lvs in _layer_weight_leaves(grads):
+            cat = jnp.concatenate(
+                [_block_rows(g.swapaxes(-1, -2), block) for _, g in lvs],
+                axis=0)
+            out.append(red(cat))
+        return out
+
+    n_batches = 0
+    for tokens in batches:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        n_batches += 1
+        if fwd_roles:
+            per_role = jax.device_get(_forward_stats(params, tokens))
+            for role, reds in per_role.items():
+                for layer, r in enumerate(reds):
+                    acc[role].setdefault(layer, TensorStats()).merge(
+                        _to_stats(r), sample_rows)
+        if "grads" in roles:
+            for layer, r in enumerate(
+                    jax.device_get(_grad_stats(params, tokens))):
+                acc["grads"].setdefault(layer, TensorStats()).merge(
+                    _to_stats(r), sample_rows)
+
+    if "weights" in roles:
+        @jax.jit
+        def _weight_stats(params):
+            out = []
+            for lvs in _layer_weight_leaves(params):
+                # dense() quantizes 2-D weights along axis 0 and the MoE
+                # expert einsums their (e, d_in, d_out) stacks along axis
+                # 1 — in both cases the second-to-last axis, so swap it
+                # last before cutting block rows
+                cat = jnp.concatenate(
+                    [_block_rows(w.swapaxes(-1, -2), block)
+                     for _, w in lvs], axis=0)
+                out.append(red(cat))
+            return out
+
+        for layer, r in enumerate(jax.device_get(_weight_stats(params))):
+            acc["weights"].setdefault(layer, TensorStats()).merge(
+                _to_stats(r), sample_rows)
+
+    n_layers = max((max(d) + 1 for d in acc.values() if d), default=0)
+    return CalibStats(arch=cfg.name, n_layers=n_layers,
+                      n_batches=n_batches, stats=acc)

@@ -4,7 +4,8 @@ from repro.core.formats import (  # noqa: F401
     MXFormat, SCALE_BIAS, SCALE_INF, SCALE_NAN, get_format,
 )
 from repro.core.spec import (  # noqa: F401
-    MODES, QuantPolicy, QuantSpec, ROLES, as_spec, resolve_spec,
+    MODES, PolicyTable, QuantPolicy, QuantSpec, ROLES, as_spec,
+    resolve_spec,
 )
 from repro.core.convert import (  # noqa: F401
     MXArray, block_max_exponent, decode_elements, max_exponent_tree,

@@ -17,8 +17,15 @@ def sqnr_db(x: jax.Array, xq: jax.Array) -> jax.Array:
 def max_rel_err_vs_blockmax(x: jax.Array, xq: jax.Array,
                             block: int = 32) -> jax.Array:
     """max |x - xq| / max|block| — the natural error scale for a shared-scale
-    format (each element's ulp is set by the block maximum)."""
-    n = x.shape[-1] // block * block
+    format (each element's ulp is set by the block maximum).
+
+    When the trailing dim is shorter than ``block`` the whole row is one
+    (short) block: the error is scaled by the full-row max instead of
+    reducing over zero blocks (which used to yield ``-inf``)."""
+    d = x.shape[-1]
+    if d < block:
+        block = d                     # fall back to the full-row max
+    n = d // block * block
     xb = x[..., :n].reshape(x.shape[:-1] + (-1, block)).astype(jnp.float32)
     qb = xq[..., :n].reshape(x.shape[:-1] + (-1, block)).astype(jnp.float32)
     bmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) + 1e-30

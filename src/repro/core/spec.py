@@ -32,9 +32,10 @@ warns exactly once per process).
 from __future__ import annotations
 
 import dataclasses
+import json
 import re
 import warnings
-from typing import Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.formats import DEFAULT_BLOCK, MXFormat, get_format
 
@@ -371,6 +372,43 @@ class QuantPolicy:
     def replace(self, **kw) -> "QuantPolicy":
         return dataclasses.replace(self, **kw)
 
+    # ----------------------------------------------------------------- JSON
+    def to_json_dict(self) -> Dict[str, str]:
+        """Role -> spec-string mapping of the set roles (the JSON form)."""
+        return {r: str(getattr(self, r)) for r in ROLES
+                if getattr(self, r) is not None}
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping, *,
+                       where: str = "policy") -> "QuantPolicy":
+        """Build a policy from a ``{role: spec-string}`` mapping, raising
+        precise errors that name ``where`` plus the offending role/spec
+        (mirrors ``QuantSpec.parse`` error style)."""
+        if not isinstance(d, Mapping):
+            raise ValueError(f"{where}: expected an object mapping roles "
+                             f"to spec strings, got "
+                             f"{type(d).__name__}")
+        kw: dict = {}
+        for role, spec_s in d.items():
+            if role not in ROLES:
+                raise ValueError(
+                    f"{where}: unknown tensor role {role!r}; choose from "
+                    f"{list(ROLES)}")
+            if not isinstance(spec_s, str):
+                raise ValueError(
+                    f"{where}: role {role!r} must map to a spec string, "
+                    f"got {type(spec_s).__name__}")
+            try:
+                kw[role] = QuantSpec.parse(spec_s)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"{where}: role {role!r}: bad spec {spec_s!r}: "
+                    f"{e}") from e
+        try:
+            return cls(**kw)
+        except ValueError as e:       # kv_key/kv_value pairing violation
+            raise ValueError(f"{where}: {e}") from e
+
     # ------------------------------------------- legacy MXPolicy read shims
     @property
     def kv_cache(self) -> bool:
@@ -381,6 +419,158 @@ class QuantPolicy:
     def kv_fmt(self) -> Optional[str]:
         """Legacy read shim: the key-role element format name."""
         return self.kv_key.fmt if self.kv_key is not None else None
+
+
+# =============================================================================
+# PolicyTable — per-layer QuantPolicy (role + layer -> spec)
+# =============================================================================
+POLICY_TABLE_SCHEMA = "policy_table/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyTable:
+    """A per-layer quantization policy: ``default`` applies to every layer
+    not named in ``overrides`` (a sorted ``(layer, QuantPolicy)`` tuple).
+
+    Layers are indexed absolutely (leading dense layers first, then the
+    scanned stack, matching ``ModelConfig`` layer order).  The table is
+    frozen and hashable, so — like ``QuantSpec``/``QuantPolicy`` — it can
+    ride through ``jax.jit`` static arguments and config dataclasses.
+
+    An all-layers-identical table carries no information beyond its
+    default; ``collapse()`` returns the plain ``QuantPolicy`` in that case
+    so consumers keep the uniform (scanned, bit-identical) code path.
+    """
+
+    default: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
+    overrides: Tuple[Tuple[int, QuantPolicy], ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.default, str):
+            object.__setattr__(self, "default",
+                               QuantPolicy.parse(self.default))
+        if not isinstance(self.default, QuantPolicy):
+            raise TypeError(
+                f"PolicyTable default must be a QuantPolicy or policy "
+                f"string, got {type(self.default).__name__}")
+        ov = self.overrides
+        if isinstance(ov, Mapping):
+            ov = tuple(sorted(ov.items()))
+        items = []
+        seen = set()
+        for entry in ov:
+            try:
+                layer, pol = entry
+            except (TypeError, ValueError):
+                raise TypeError(
+                    f"PolicyTable overrides entries must be (layer, "
+                    f"policy) pairs, got {entry!r}") from None
+            if not isinstance(layer, int) or isinstance(layer, bool) \
+                    or layer < 0:
+                raise ValueError(
+                    f"PolicyTable layer index must be a non-negative "
+                    f"int, got {layer!r}")
+            if layer in seen:
+                raise ValueError(f"layer {layer} given twice in "
+                                 f"PolicyTable overrides")
+            seen.add(layer)
+            if isinstance(pol, str):
+                pol = QuantPolicy.parse(pol)
+            if not isinstance(pol, QuantPolicy):
+                raise TypeError(
+                    f"PolicyTable layer {layer} policy must be a "
+                    f"QuantPolicy or policy string, got "
+                    f"{type(pol).__name__}")
+            items.append((layer, pol))
+        object.__setattr__(self, "overrides", tuple(sorted(items)))
+
+    # ----------------------------------------------------------- accessors
+    def layer(self, i: int) -> QuantPolicy:
+        """The effective policy of absolute layer ``i``."""
+        for layer, pol in self.overrides:
+            if layer == i:
+                return pol
+        return self.default
+
+    def spec(self, role: str, layer: int) -> Optional[QuantSpec]:
+        """Resolve role + layer -> optional QuantSpec."""
+        return self.layer(layer).role(role)
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(pol == self.default for _, pol in self.overrides)
+
+    def collapse(self) -> Union[QuantPolicy, "PolicyTable"]:
+        """The plain ``QuantPolicy`` when every layer agrees, else self."""
+        return self.default if self.is_uniform else self
+
+    def replace(self, **kw) -> "PolicyTable":
+        return dataclasses.replace(self, **kw)
+
+    def __str__(self) -> str:
+        ov = ",".join(f"{i}:[{p}]" for i, p in self.overrides)
+        return f"table(default=[{self.default}]" + \
+            (f",{ov})" if ov else ")")
+
+    # ----------------------------------------------------------------- JSON
+    def to_json_dict(self) -> dict:
+        return {
+            "schema": POLICY_TABLE_SCHEMA,
+            "default": self.default.to_json_dict(),
+            "layers": {str(i): p.to_json_dict()
+                       for i, p in self.overrides},
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_json_dict(), indent=2) + "\n"
+
+    @classmethod
+    def from_json_dict(cls, doc) -> "PolicyTable":
+        """Parse the ``policy_table/v1`` JSON document form.  Errors are
+        precise: they name the offending layer, role, and spec string."""
+        if not isinstance(doc, Mapping):
+            raise ValueError(
+                f"policy table: expected a JSON object, got "
+                f"{type(doc).__name__}")
+        unknown = sorted(set(doc) - {"schema", "default", "layers"})
+        if unknown:
+            raise ValueError(
+                f"policy table: unknown field(s) {unknown}; expected "
+                f"'schema', 'default', 'layers'")
+        schema = doc.get("schema")
+        if schema != POLICY_TABLE_SCHEMA:
+            raise ValueError(
+                f"policy table: schema {schema!r} is not "
+                f"{POLICY_TABLE_SCHEMA!r}")
+        default = QuantPolicy.from_json_dict(doc.get("default", {}),
+                                             where="policy table default")
+        layers = doc.get("layers", {})
+        if not isinstance(layers, Mapping):
+            raise ValueError(
+                f"policy table: 'layers' must be an object mapping layer "
+                f"indices to policies, got {type(layers).__name__}")
+        overrides = []
+        for key, pol_d in layers.items():
+            try:
+                layer = int(key)
+                if layer < 0:
+                    raise ValueError
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"policy table: bad layer index {key!r}; keys must be "
+                    f"non-negative integers") from None
+            pol = QuantPolicy.from_json_dict(
+                pol_d, where=f"policy table layer {layer}")
+            overrides.append((layer, pol))
+        return cls(default=default, overrides=tuple(overrides))
+
+    @classmethod
+    def from_json(cls, text: str) -> "PolicyTable":
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"policy table: invalid JSON: {e}") from e
+        return cls.from_json_dict(doc)
 
 
 def mx_policy(fmt: str = "e4m3", mode: str = "ocp",

@@ -15,6 +15,19 @@ mixed-format pages:
         --paged --page-size 16 --batch 8 --requests 24 --mixed \
         --quant kv_key=int8@32:ocp,kv_value=e2m1@32:ocp
 
+``--quant auto:<budget>`` runs calibrate -> search -> serve in one
+command: a few synthetic batches are pushed through the instrumented
+forward (``--calib-batches``), every candidate format is scored per
+layer, and the budget-constrained search (``repro.calib``) emits a
+per-layer ``PolicyTable`` — the budget is total KV bytes per token
+summed over all layers (codes + scales, bit-packed).  ``--save-policy``
+writes the table as JSON; ``--policy-json`` serves a previously saved
+table directly:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch chatglm3_6b \
+        --reduced --paged --quant auto:96 --calib-batches 4 \
+        --save-policy /tmp/policy.json
+
 ``--mx-kv``/``--mx-mode`` are deprecated aliases for uniform KV policies.
 """
 from __future__ import annotations
@@ -36,7 +49,18 @@ def main() -> None:
                     help="quantization policy, e.g. "
                          "'kv_key=int8@32:ocp,kv_value=e2m1@32:ocp' "
                          "(roles: weights, activations, kv_key, kv_value, "
-                         "grads; 'kv=' sets both KV roles)")
+                         "grads; 'kv=' sets both KV roles), or "
+                         "'auto:<bytes>' to calibrate and search a "
+                         "per-layer policy under a total KV "
+                         "bytes-per-token budget")
+    ap.add_argument("--calib-batches", type=int, default=4,
+                    help="calibration batches for --quant auto "
+                         "(each --batch x --prompt-len synthetic tokens)")
+    ap.add_argument("--save-policy", default=None,
+                    help="write the auto-selected PolicyTable JSON here")
+    ap.add_argument("--policy-json", default=None,
+                    help="serve a previously saved PolicyTable JSON "
+                         "(skips calibration)")
     ap.add_argument("--mx-kv", choices=["off", "int8", "e4m3", "e5m2",
                                         "e3m2", "e2m3", "e2m1"],
                     default="off",
@@ -73,6 +97,7 @@ def main() -> None:
     args = ap.parse_args()
 
     import contextlib
+    from pathlib import Path
 
     import numpy as np
     import jax
@@ -82,12 +107,24 @@ def main() -> None:
     from repro.launch.mesh import make_test_mesh
     from repro.models import Model, load_config, load_reduced, \
         make_concrete_batch
-    from repro.models.config import QuantPolicy, QuantSpec
+    from repro.models.config import (PolicyTable, QuantPolicy, QuantSpec,
+                                     apply_policy_table)
     from repro.serve import (ContinuousBatchingEngine, GenerationConfig,
                              ServeEngine)
+    from repro.serve.paging import kv_cache_token_nbytes
 
     over = {}
-    if args.quant:
+    auto_budget = None
+    if args.policy_json and (args.quant or args.mx_kv != "off"):
+        ap.error("--policy-json and --quant/--mx-kv are mutually "
+                 "exclusive: the saved table already fixes the policy "
+                 "(re-run calibration with --quant auto:<budget> to "
+                 "replace it)")
+    if args.quant and (args.quant == "auto"
+                       or args.quant.startswith("auto:")):
+        from repro.calib import parse_auto_budget
+        auto_budget = parse_auto_budget(args.quant)
+    elif args.quant:
         over["mx"] = QuantPolicy.parse(args.quant)
     elif args.mx_kv != "off":
         print(f"[serve] --mx-kv/--mx-mode are deprecated; use "
@@ -95,8 +132,40 @@ def main() -> None:
         kv = QuantSpec(args.mx_kv, args.mx_mode)
         over["mx"] = QuantPolicy(kv_key=kv, kv_value=kv)
     cfg = (load_reduced if args.reduced else load_config)(args.arch, **over)
+    if args.policy_json:
+        cfg = apply_policy_table(
+            cfg, PolicyTable.from_json(Path(args.policy_json).read_text()))
+        print(f"[serve] policy table from {args.policy_json}: {cfg.mx}"
+              + (f" + {len(cfg.mx_table.overrides)} layer overrides"
+                 if cfg.mx_table is not None else ""))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    if auto_budget is not None:
+        # calibrate -> search -> apply (params are policy-independent,
+        # so the freshly initialized weights serve the selected table)
+        from repro.calib import collect_model_stats, search_kv_policy
+        rng = np.random.default_rng(1)
+        batches = [rng.integers(0, cfg.vocab,
+                                size=(args.batch, args.prompt_len)
+                                ).astype(np.int32)
+                   for _ in range(max(1, args.calib_batches))]
+        t0 = time.perf_counter()
+        stats = collect_model_stats(model, params, batches,
+                                    roles=("kv_key", "kv_value"))
+        res = search_kv_policy(stats, auto_budget, cfg)
+        dt = time.perf_counter() - t0
+        print(f"[serve] calibrated {len(batches)} batches + searched "
+              f"in {dt:.2f}s")
+        print("[serve] " + res.describe().replace("\n", "\n[serve] "))
+        if args.save_policy:
+            Path(args.save_policy).write_text(res.table.to_json())
+            print(f"[serve] wrote policy table -> {args.save_policy}")
+        cfg = apply_policy_table(cfg, res.table)
+        model = Model(cfg)
+        print(f"[serve] KV cache: {kv_cache_token_nbytes(cfg)} B/token "
+              f"across {cfg.n_layers} layers "
+              f"(budget {auto_budget:.4g} B/token)")
     rules = None
     mesh_ctx = contextlib.nullcontext()
     if args.shard:

@@ -19,6 +19,16 @@ MX levers: --quant takes the unified per-role policy (e.g.
 the deprecated uniform alias, and --compressed-dp switches the gradient
 exchange to the MX-compressed collective (ZeRO-1 explicit-DP path; the
 exchange format follows the policy's ``grads`` role).
+
+``--quant auto:<bytes-per-param>`` calibrates instead of hand-picking:
+weight statistics come straight off the initialized params, gradient
+statistics from ``--calib-batches`` LM-loss backward passes, and the
+budget-constrained search (``repro.calib``) assigns each layer its own
+``weights`` spec under the average bytes-per-parameter budget (element
+code bits + amortized E8M0 scale, over 8 — e.g. int8@32 costs 1.031,
+e2m1@32 costs 0.531), plus one uniform ``grads`` spec for the compressed
+collective.  The result is a per-layer ``PolicyTable`` trained with QAT
+fake-quantization.
 """
 from __future__ import annotations
 
@@ -39,7 +49,13 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--quant", default=None,
                     help="quantization policy, e.g. "
-                         "'weights=e4m3@32:ocp,grads=e4m3@32:ocp'")
+                         "'weights=e4m3@32:ocp,grads=e4m3@32:ocp', or "
+                         "'auto:<bytes-per-param>' to calibrate and "
+                         "search a per-layer weights policy")
+    ap.add_argument("--calib-batches", type=int, default=2,
+                    help="gradient-statistics batches for --quant auto")
+    ap.add_argument("--save-policy", default=None,
+                    help="write the auto-selected PolicyTable JSON here")
     ap.add_argument("--mx", choices=["off", "paper", "ocp"], default="off",
                     help="deprecated: use --quant (applies e4m3 to "
                          "weights+grads in the given mode)")
@@ -65,7 +81,12 @@ def main() -> None:
                              init_train_state, train_loop)
 
     over = {}
-    if args.quant:
+    auto_budget = None
+    if args.quant and (args.quant == "auto"
+                       or args.quant.startswith("auto:")):
+        from repro.calib import parse_auto_budget
+        auto_budget = parse_auto_budget(args.quant)
+    elif args.quant:
         over["mx"] = QuantPolicy.parse(args.quant)
     elif args.mx != "off":
         print(f"[train] --mx is deprecated; use --quant "
@@ -75,6 +96,49 @@ def main() -> None:
     cfg = (load_reduced if args.reduced else load_config)(args.arch, **over)
     model = Model(cfg)
     params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+
+    if auto_budget is not None:
+        import numpy as np
+
+        from repro.calib import (collect_model_stats, search_weights_policy,
+                                 sweep_role, weight_param_nbytes)
+        from repro.models.config import apply_policy_table
+
+        rng = np.random.default_rng(1)
+        batches = [rng.integers(0, cfg.vocab, size=(args.batch, args.seq)
+                                ).astype(np.int32)
+                   for _ in range(max(1, args.calib_batches))]
+        stats = collect_model_stats(model, params, batches,
+                                    roles=("weights", "grads"))
+        res = search_weights_policy(stats, auto_budget, cfg)
+        # one uniform grads spec for the compressed collective: the best
+        # aggregate-gradient SQNR among candidates inside the same
+        # bytes-per-param budget
+        gsweep = sweep_role(stats, "grads", weight_param_nbytes)
+        agg = {}
+        for scored in gsweep.values():
+            for s in scored:
+                a = agg.setdefault(s.spec, [0.0, 0])
+                a[0] += s.sqnr_db
+                a[1] += 1
+        in_budget = {sp: v[0] / v[1] for sp, v in agg.items()
+                     if weight_param_nbytes(sp) <= auto_budget}
+        table = res.table
+        if in_budget:
+            gspec = max(in_budget, key=in_budget.get)
+            table = table.replace(
+                default=table.default.replace(grads=gspec),
+                overrides=tuple((i, p.replace(grads=gspec))
+                                for i, p in table.overrides))
+            print(f"[train] grads role -> {gspec} "
+                  f"({in_budget[gspec]:.1f}dB aggregate SQNR)")
+        print("[train] " + res.describe().replace("\n", "\n[train] "))
+        if args.save_policy:
+            from pathlib import Path
+            Path(args.save_policy).write_text(table.to_json())
+            print(f"[train] wrote policy table -> {args.save_policy}")
+        cfg = apply_policy_table(cfg, table)
+        model = Model(cfg)
     n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
     print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
           f"quant={cfg.mx}, devices={jax.device_count()}")

@@ -1,7 +1,7 @@
 """repro.models — the assigned architecture zoo."""
 from repro.models.config import (  # noqa: F401
-    ALL_SHAPES, ModelConfig, MXPolicy, QuantPolicy, QuantSpec, SHAPES,
-    ShapeSpec, applicable_shapes,
+    ALL_SHAPES, ModelConfig, MXPolicy, PolicyTable, QuantPolicy, QuantSpec,
+    SHAPES, ShapeSpec, applicable_shapes, apply_policy_table,
 )
 from repro.models.registry import (  # noqa: F401
     ARCH_IDS, Model, batch_specs, decode_specs, load_config, load_reduced,

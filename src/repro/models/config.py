@@ -12,7 +12,7 @@ import dataclasses
 from typing import Optional, Tuple
 
 from repro.core.spec import (  # noqa: F401  (re-exported for callers)
-    QuantPolicy, QuantSpec, mx_policy as MXPolicy,
+    PolicyTable, QuantPolicy, QuantSpec, mx_policy as MXPolicy,
 )
 
 
@@ -59,6 +59,12 @@ class ModelConfig:
     frontend: str = "none"         # none | patch | frames
     # --- numerics / the paper's technique ---
     mx: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
+    # per-layer policy table (role + layer -> spec).  Never set directly:
+    # go through ``apply_policy_table`` so an all-layers-identical table
+    # collapses to the uniform ``mx`` (keeping the scanned, bit-identical
+    # layer stack).  When set, ``mx`` mirrors the table's default and the
+    # decoder unrolls its layer loop with per-layer configs.
+    mx_table: Optional[PolicyTable] = None
     dtype: str = "bfloat16"        # compute dtype
     param_dtype: str = "bfloat16"  # stored parameter dtype (master is f32)
     remat: bool = True             # activation checkpointing per layer
@@ -74,6 +80,27 @@ class ModelConfig:
         if self.head_dim is not None:
             return self.head_dim
         return self.d_model // self.n_heads
+
+    # ---------------------------------------------- per-layer quantization
+    @property
+    def per_layer_mx(self) -> bool:
+        """True when a (non-uniform) per-layer policy table is installed."""
+        return self.mx_table is not None
+
+    def layer_policy(self, i: int) -> QuantPolicy:
+        """The quantization policy of absolute layer ``i`` (leading dense
+        layers first, then the scanned stack)."""
+        if self.mx_table is None:
+            return self.mx
+        return self.mx_table.layer(i)
+
+    def layer_cfg(self, i: int) -> "ModelConfig":
+        """A uniform-policy view of this config for layer ``i`` — what the
+        decoder's unrolled per-layer loop passes to the layer kernels."""
+        if self.mx_table is None:
+            return self
+        return dataclasses.replace(self, mx=self.mx_table.layer(i),
+                                   mx_table=None)
 
     @property
     def sub_quadratic(self) -> bool:
@@ -136,6 +163,37 @@ class ModelConfig:
         n_moe = self.n_layers - self.n_dense_layers
         inactive = n_moe * (self.n_experts - self.moe_topk) * expert
         return full - inactive
+
+
+def apply_policy_table(cfg: ModelConfig,
+                       table: PolicyTable) -> ModelConfig:
+    """Install a per-layer ``PolicyTable`` on a config.
+
+    An all-layers-identical table collapses to its default ``QuantPolicy``
+    (``mx_table`` stays ``None``), so the model keeps the scanned layer
+    stack and is bit-identical to the uniform policy it names.  Non-uniform
+    tables are decoder-family only (the other families have no per-layer
+    cache plumbing) and must not name layers past ``n_layers``.
+    """
+    if isinstance(table, QuantPolicy):
+        return dataclasses.replace(cfg, mx=table, mx_table=None)
+    if not isinstance(table, PolicyTable):
+        raise TypeError(f"expected a PolicyTable or QuantPolicy, got "
+                        f"{type(table).__name__}")
+    collapsed = table.collapse()
+    if isinstance(collapsed, QuantPolicy):
+        return dataclasses.replace(cfg, mx=collapsed, mx_table=None)
+    if cfg.family != "decoder":
+        raise NotImplementedError(
+            f"{cfg.name}: per-layer policy tables cover the decoder "
+            f"family; {cfg.family!r} models take a uniform QuantPolicy")
+    bad = [i for i, _ in table.overrides if i >= cfg.n_layers]
+    if bad:
+        raise ValueError(
+            f"{cfg.name}: policy table names layer(s) {bad} but the "
+            f"model has {cfg.n_layers} layers (indices 0.."
+            f"{cfg.n_layers - 1})")
+    return dataclasses.replace(cfg, mx=table.default, mx_table=table)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,6 +3,14 @@
 Layers are stacked and driven by ``lax.scan`` (compile-time discipline: one
 layer's HLO regardless of depth).  Caches are layer-stacked pytrees carried
 through the same scan.
+
+Per-layer quantization (``cfg.mx_table``, a ``PolicyTable``): the scan
+body is traced once, so layer-varying *static* specs — and the per-layer
+KV cache shapes they imply — cannot ride through it.  When a non-uniform
+table is installed (``apply_policy_table`` collapses uniform ones), every
+layer walk in this module unrolls into a Python loop over per-layer
+configs (``cfg.layer_cfg(i)``) and caches become per-layer lists, each
+sized by its own layer's ``kv_key``/``kv_value`` specs.
 """
 from __future__ import annotations
 
@@ -63,7 +71,7 @@ def init(key, cfg: ModelConfig) -> Dict[str, Any]:
 
 def _block(lp, x, cfg: ModelConfig, *, positions, cache=None, cache_pos=None,
            moe_layer: bool, fake_quant: bool,
-           paged=None) -> Tuple[jax.Array, Any, jax.Array]:
+           paged=None, tap=None) -> Tuple[jax.Array, Any, jax.Array]:
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     s = x.shape[1]
     if paged is not None:
@@ -84,14 +92,18 @@ def _block(lp, x, cfg: ModelConfig, *, positions, cache=None, cache_pos=None,
     else:
         a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
                                    cache=cache, cache_pos=cache_pos,
-                                   fake_quant=fake_quant)
+                                   fake_quant=fake_quant, tap=tap)
     x = x + a
-    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if tap is not None:
+        # the activations role quantizes matmul inputs; the two post-norm
+        # hidden states are the layer's representative matmul inputs
+        tap["activations"] = jnp.concatenate([h, h2], axis=1)
     aux = jnp.zeros((), jnp.float32)
     if moe_layer:
-        m, aux = L.moe(lp["moe"], h, cfg, fake_quant)
+        m, aux = L.moe(lp["moe"], h2, cfg, fake_quant)
     else:
-        m = L.mlp(lp["mlp"], h, cfg, fake_quant)
+        m = L.mlp(lp["mlp"], h2, cfg, fake_quant)
     return x + m, new_cache, aux
 
 
@@ -112,6 +124,18 @@ def _head(params, cfg, x):
     return logical(logits, "batch", None, "model")
 
 
+def _scan_layer_params(params, i: int):
+    """Layer ``i``'s slice of the stacked scanned-layer params."""
+    return jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+
+
+def _scan_cfgs(cfg: ModelConfig):
+    """Per-layer configs of the scanned stack (absolute layer indices
+    continue after the leading dense layers)."""
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    return [cfg.layer_cfg(cfg.n_dense_layers + i) for i in range(n_scan)]
+
+
 def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
             fake_quant: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Training forward: (B,S)->(B,S,Vp) logits + MoE aux loss."""
@@ -119,9 +143,25 @@ def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     moe_layer = cfg.n_experts > 0
-    for dl in params.get("dense_layers", []):
-        x, _, _ = _block(dl, x, cfg, positions=positions, moe_layer=False,
-                         fake_quant=fake_quant)
+    for i, dl in enumerate(params.get("dense_layers", [])):
+        x, _, _ = _block(dl, x, cfg.layer_cfg(i), positions=positions,
+                         moe_layer=False, fake_quant=fake_quant)
+    if cfg.mx_table is not None:
+        # non-uniform per-layer policy: specs are jit-static, so the
+        # layer walk unrolls — each layer checkpointed like the scanned
+        # stack (auto-policy QAT training runs through this path)
+        auxs = []
+        for i, cfg_i in enumerate(_scan_cfgs(cfg)):
+            def one(lp, x, cfg_i=cfg_i):
+                y, _, aux = _block(lp, x, cfg_i, positions=positions,
+                                   moe_layer=moe_layer,
+                                   fake_quant=fake_quant)
+                return y, aux
+
+            fn = jax.checkpoint(one) if cfg.remat else one
+            x, aux = fn(_scan_layer_params(params, i), x)
+            auxs.append(aux)
+        return _head(params, cfg, x), jnp.mean(jnp.stack(auxs))
 
     def step(carry, lp):
         y, new_cache, aux = _block(lp, carry, cfg, positions=positions,
@@ -137,30 +177,42 @@ def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     n_scan = cfg.n_layers - cfg.n_dense_layers
     if cfg.mla:
-        mk = lambda ld: L.init_mla_cache(cfg, batch, max_len, layers_dim=ld)
+        mk = lambda c, ld: L.init_mla_cache(c, batch, max_len, layers_dim=ld)
     else:
-        mk = lambda ld: L.init_kv_cache(cfg, batch, max_len, cfg.n_kv_heads,
-                                        cfg.hd, layers_dim=ld)
-    cache = {"layers": mk((n_scan,))}
+        mk = lambda c, ld: L.init_kv_cache(c, batch, max_len, c.n_kv_heads,
+                                           c.hd, layers_dim=ld)
+    if cfg.mx_table is not None:
+        # per-layer specs => per-layer cache shapes: a list, not a stack
+        cache = {"layers": [mk(c, ()) for c in _scan_cfgs(cfg)]}
+    else:
+        cache = {"layers": mk(cfg, (n_scan,))}
     if cfg.n_dense_layers:
-        cache["dense_layers"] = [mk(()) for _ in range(cfg.n_dense_layers)]
+        cache["dense_layers"] = [mk(cfg.layer_cfg(i), ())
+                                 for i in range(cfg.n_dense_layers)]
     return cache
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
     """Paged page-pool analogue of ``init_cache``: pages are shared across
-    requests via per-slot block tables (see repro.serve)."""
+    requests via per-slot block tables (see repro.serve).  Under a
+    per-layer policy table each layer's pool is sized by its own
+    ``kv_key``/``kv_value`` specs (e.g. INT8 pages on sensitive layers,
+    half-size packed E2M1 pages elsewhere)."""
     if cfg.mla:
         raise NotImplementedError(
             "paged KV serving covers the GQA decoder family; the MLA "
             "compressed cache keeps the contiguous layout")
     n_scan = cfg.n_layers - cfg.n_dense_layers
-    mk = lambda ld: L.init_paged_kv_cache(cfg, num_pages, page_size,
-                                          cfg.n_kv_heads, cfg.hd,
-                                          layers_dim=ld)
-    cache = {"layers": mk((n_scan,))}
+    mk = lambda c, ld: L.init_paged_kv_cache(c, num_pages, page_size,
+                                             c.n_kv_heads, c.hd,
+                                             layers_dim=ld)
+    if cfg.mx_table is not None:
+        cache = {"layers": [mk(c, ()) for c in _scan_cfgs(cfg)]}
+    else:
+        cache = {"layers": mk(cfg, (n_scan,))}
     if cfg.n_dense_layers:
-        cache["dense_layers"] = [mk(()) for _ in range(cfg.n_dense_layers)]
+        cache["dense_layers"] = [mk(cfg.layer_cfg(i), ())
+                                 for i in range(cfg.n_dense_layers)]
     return cache
 
 
@@ -168,21 +220,29 @@ def _run_layers(params, cache, x, cfg, positions, cache_pos, fake_quant):
     moe_layer = cfg.n_experts > 0
     new_dense = []
     for i, dl in enumerate(params.get("dense_layers", [])):
-        x, nc, _ = _block(dl, x, cfg, positions=positions,
+        x, nc, _ = _block(dl, x, cfg.layer_cfg(i), positions=positions,
                           cache=cache["dense_layers"][i],
                           cache_pos=cache_pos, moe_layer=False,
                           fake_quant=fake_quant)
         new_dense.append(nc)
+    if cfg.mx_table is not None:
+        new_layer_cache = []
+        for i, cfg_i in enumerate(_scan_cfgs(cfg)):
+            x, nc, _ = _block(_scan_layer_params(params, i), x, cfg_i,
+                              positions=positions, cache=cache["layers"][i],
+                              cache_pos=cache_pos, moe_layer=moe_layer,
+                              fake_quant=fake_quant)
+            new_layer_cache.append(nc)
+    else:
+        def step(carry, xs):
+            lp, cache_l = xs
+            y, nc, _ = _block(lp, carry, cfg, positions=positions,
+                              cache=cache_l, cache_pos=cache_pos,
+                              moe_layer=moe_layer, fake_quant=fake_quant)
+            return y, nc
 
-    def step(carry, xs):
-        lp, cache_l = xs
-        y, nc, _ = _block(lp, carry, cfg, positions=positions, cache=cache_l,
-                          cache_pos=cache_pos, moe_layer=moe_layer,
-                          fake_quant=fake_quant)
-        return y, nc
-
-    x, new_layer_cache = L.layer_scan(
-        step, x, (params["layers"], cache["layers"]), cfg)
+        x, new_layer_cache = L.layer_scan(
+            step, x, (params["layers"], cache["layers"]), cfg)
     new_cache = {"layers": new_layer_cache}
     if new_dense:
         new_cache["dense_layers"] = new_dense
@@ -212,6 +272,49 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig, *,
     return _head(params, cfg, x), cache
 
 
+def forward_calib(params, tokens, cfg: ModelConfig, *, prefix_embeds=None):
+    """Instrumented forward for activation-statistics calibration.
+
+    Runs the layer walk *unrolled* (the same per-layer path a non-uniform
+    policy table uses) and taps, per absolute layer, the tensors each
+    quantizable role would see: ``activations`` (the two post-norm matmul
+    inputs, concatenated along the sequence axis), and the post-RoPE,
+    pre-quantization ``kv_key``/``kv_value`` projections.  Nothing is
+    quantized on this path, so the taps are clean regardless of ``cfg.mx``.
+
+    Returns ``(logits, aux, taps)`` with ``taps[role][layer]`` a float
+    tensor.  MLA configs are not supported (calibration targets the GQA
+    paged-serving family, the same constraint as ``init_paged_cache``).
+    """
+    if cfg.mla:
+        raise NotImplementedError(
+            "forward_calib covers the GQA decoder family; the MLA "
+            "compressed cache has no per-head K/V tensors to calibrate")
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    moe_layer = cfg.n_experts > 0
+    taps = {"activations": [], "kv_key": [], "kv_value": []}
+
+    def run(lp, x, cfg_i, moe):
+        tap = {}
+        x, _, aux = _block(lp, x, cfg_i, positions=positions, moe_layer=moe,
+                           fake_quant=False, tap=tap)
+        taps["activations"].append(tap["activations"])
+        taps["kv_key"].append(tap["k"])
+        taps["kv_value"].append(tap["v"])
+        return x, aux
+
+    auxs = []
+    for i, dl in enumerate(params.get("dense_layers", [])):
+        x, aux = run(dl, x, cfg.layer_cfg(i), False)
+        auxs.append(aux)
+    for i, cfg_i in enumerate(_scan_cfgs(cfg)):
+        x, aux = run(_scan_layer_params(params, i), x, cfg_i, moe_layer)
+        auxs.append(aux)
+    return _head(params, cfg, x), jnp.mean(jnp.stack(auxs)), taps
+
+
 def sample_tokens(logits, keys, temperature: float):
     """Sample one token per slot inside the jitted decode path.
 
@@ -237,12 +340,19 @@ def scatter_prefill(cfg: ModelConfig, pool, cache, page_ids):
     same page-multiple length) into the paged pools; one donated scatter
     per leaf, sub-byte codes packed on the way (see
     layers.paged_cache_scatter)."""
-    new = {"layers": L.paged_cache_scatter(pool["layers"], cache["layers"],
-                                           page_ids, cfg)}
+    if cfg.mx_table is not None:
+        new = {"layers": [
+            L.paged_cache_scatter(pg, cg, page_ids, cfg_i)
+            for pg, cg, cfg_i in zip(pool["layers"], cache["layers"],
+                                     _scan_cfgs(cfg))]}
+    else:
+        new = {"layers": L.paged_cache_scatter(
+            pool["layers"], cache["layers"], page_ids, cfg)}
     if "dense_layers" in pool:
         new["dense_layers"] = [
-            L.paged_cache_scatter(pg, cg, page_ids, cfg)
-            for pg, cg in zip(pool["dense_layers"], cache["dense_layers"])]
+            L.paged_cache_scatter(pg, cg, page_ids, cfg.layer_cfg(i))
+            for i, (pg, cg) in enumerate(zip(pool["dense_layers"],
+                                             cache["dense_layers"]))]
     return new
 
 
@@ -259,20 +369,28 @@ def paged_decode_step(params, token, cache, block_tables, lengths,
     moe_layer = cfg.n_experts > 0
     new_dense = []
     for i, dl in enumerate(params.get("dense_layers", [])):
-        x, nc, _ = _block(dl, x, cfg, positions=None,
+        x, nc, _ = _block(dl, x, cfg.layer_cfg(i), positions=None,
                           cache=cache["dense_layers"][i], moe_layer=False,
                           fake_quant=fake_quant, paged=paged)
         new_dense.append(nc)
+    if cfg.mx_table is not None:
+        new_layer_cache = []
+        for i, cfg_i in enumerate(_scan_cfgs(cfg)):
+            x, nc, _ = _block(_scan_layer_params(params, i), x, cfg_i,
+                              positions=None, cache=cache["layers"][i],
+                              moe_layer=moe_layer, fake_quant=fake_quant,
+                              paged=paged)
+            new_layer_cache.append(nc)
+    else:
+        def step(carry, xs):
+            lp, cache_l = xs
+            y, nc, _ = _block(lp, carry, cfg, positions=None, cache=cache_l,
+                              moe_layer=moe_layer, fake_quant=fake_quant,
+                              paged=paged)
+            return y, nc
 
-    def step(carry, xs):
-        lp, cache_l = xs
-        y, nc, _ = _block(lp, carry, cfg, positions=None, cache=cache_l,
-                          moe_layer=moe_layer, fake_quant=fake_quant,
-                          paged=paged)
-        return y, nc
-
-    x, new_layer_cache = L.layer_scan(
-        step, x, (params["layers"], cache["layers"]), cfg)
+        x, new_layer_cache = L.layer_scan(
+            step, x, (params["layers"], cache["layers"]), cfg)
     new_cache = {"layers": new_layer_cache}
     if new_dense:
         new_cache["dense_layers"] = new_dense

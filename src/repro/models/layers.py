@@ -445,10 +445,13 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array, causal: bool = True,
               cache=None, cache_pos=None, fake_quant: bool = False,
               kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
-              ) -> Tuple[jax.Array, Any]:
+              tap: Optional[dict] = None) -> Tuple[jax.Array, Any]:
     """GQA attention.  Full mode (cache=None): self-attention over x.
     Decode mode: x is (B,1,d), cache holds S_max past k/v, cache_pos scalar.
-    ``kv_override`` serves cross-attention (k/v from the encoder)."""
+    ``kv_override`` serves cross-attention (k/v from the encoder).
+    ``tap`` (calibration hook): a dict the post-RoPE, pre-quantization
+    k/v land in — exactly the tensors the ``kv_key``/``kv_value`` policy
+    roles will quantize (see repro.calib.stats)."""
     b, s, d = x.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     mx = cfg.mx
@@ -461,6 +464,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         cos, sin = rope_tables(positions, hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin, cfg.rope_frac)
         k = apply_rope(k, cos, sin, cfg.rope_frac)
+        if tap is not None:
+            tap["k"], tap["v"] = k, v
     else:
         k, v = kv_override
     new_cache = cache

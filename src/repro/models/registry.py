@@ -90,6 +90,18 @@ class Model:
         return self.mod.decode_step(params, token, cache, pos, self.cfg,
                                     fake_quant=fake_quant)
 
+    def forward_calib(self, params, batch: Dict[str, jax.Array]):
+        """Instrumented forward for repro.calib: (logits, aux, taps) with
+        per-layer activation / kv_key / kv_value tensors (GQA decoder
+        family only — see decoder.forward_calib)."""
+        cfg = self.cfg
+        if cfg.family != "decoder":
+            raise NotImplementedError(
+                f"{cfg.name}: calibration taps cover the decoder family")
+        return self.mod.forward_calib(
+            params, batch["tokens"], cfg,
+            prefix_embeds=batch.get("prefix_embeds"))
+
     def init_cache(self, batch: int, max_len: int, s_enc: int = 0):
         cfg = self.cfg
         if cfg.family == "encdec":

@@ -26,7 +26,11 @@ serving-side consumer of the paper's converter: INT8/E4M3 KV cuts decode
 HBM traffic ~2x vs bf16 (see the decode_32k roofline cells), K and V may
 carry *different* element formats (e.g. INT8 keys + E2M1 values, each
 pool sized per-role), and with ``attn_impl="flash"`` the paged Pallas
-kernel keeps HBM reads at the quantized bytes end-to-end.
+kernel keeps HBM reads at the quantized bytes end-to-end.  A per-layer
+``PolicyTable`` (``models.config.apply_policy_table``; usually emitted by
+``repro.calib``'s budget-constrained search) additionally varies the
+specs *by layer* — the page pools become per-layer lists, each sized by
+its own layer's formats.
 """
 from __future__ import annotations
 
@@ -225,6 +229,14 @@ class ContinuousBatchingEngine:
                                         donate_argnums=(4,))
         self._multi = jax.jit(_multi, static_argnums=(7,),
                               donate_argnums=(2,))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def kv_pool_nbytes(self) -> int:
+        """Allocated page-pool bytes (summed over layers; under a per-layer
+        ``PolicyTable`` each layer's pool is sized by its own specs)."""
+        return int(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                       for leaf in jax.tree_util.tree_leaves(self.pool)))
 
     # ------------------------------------------------------------ requests
     def add_request(self, prompt, max_new_tokens: int) -> int:

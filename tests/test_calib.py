@@ -1,0 +1,189 @@
+"""repro.calib unit tests: streaming stats, candidate sweep, and the
+budget-constrained policy search."""
+import jax
+import numpy as np
+import pytest
+
+from repro.calib import (collect_model_stats, parse_auto_budget,
+                         score_sample, search_kv_policy,
+                         search_weights_policy, sweep_role,
+                         weight_param_nbytes)
+from repro.calib.stats import TensorStats, tensor_reduction, _to_stats
+from repro.core import QuantPolicy, QuantSpec
+from repro.models import Model, load_reduced
+from repro.serve.paging import (kv_cache_token_nbytes, kv_token_nbytes,
+                                spec_side_nbytes)
+
+N_LAYERS = 3
+
+
+@pytest.fixture(scope="module")
+def calib_setup():
+    cfg = load_reduced("chatglm3_6b", n_layers=N_LAYERS)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, cfg.vocab, size=(2, 32)).astype(np.int32)
+               for _ in range(2)]
+    stats = collect_model_stats(
+        model, params, batches,
+        roles=("kv_key", "kv_value", "activations", "weights", "grads"))
+    return cfg, model, params, stats
+
+
+# =============================================================================
+# TensorStats streaming semantics
+# =============================================================================
+def test_streaming_merge_equals_one_shot():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(64, 32)).astype(np.float32)
+    b = rng.normal(size=(48, 32)).astype(np.float32) * 3.0
+    one = _to_stats(jax.device_get(
+        tensor_reduction(np.concatenate([a, b]), sample_rows=1 << 20)))
+    strm = TensorStats()
+    strm.merge(_to_stats(jax.device_get(
+        tensor_reduction(a, sample_rows=1 << 20))), sample_rows=1 << 20)
+    strm.merge(_to_stats(jax.device_get(
+        tensor_reduction(b, sample_rows=1 << 20))), sample_rows=1 << 20)
+    assert strm.count == one.count == a.size + b.size
+    np.testing.assert_allclose(strm.absmax, one.absmax)
+    np.testing.assert_allclose(strm.total, one.total, rtol=1e-5)
+    np.testing.assert_allclose(strm.sumsq, one.sumsq, rtol=1e-5)
+    np.testing.assert_array_equal(strm.exp_hist, one.exp_hist)
+    np.testing.assert_array_equal(strm.sample, one.sample)
+
+
+def test_reduction_counts_zeros_and_exponents():
+    x = np.array([[0.0, 1.0, 2.0, -2.0]], np.float32)
+    ts = _to_stats(jax.device_get(tensor_reduction(x, block=4)))
+    assert ts.count == 4 and ts.n_zero == 1
+    assert ts.absmax == 2.0
+    assert ts.exp_hist[127] == 1           # 1.0
+    assert ts.exp_hist[128] == 2           # +/-2.0
+    assert ts.exp_hist.sum() == 3          # zeros excluded
+    assert ts.exp_percentile(1.0) == 128
+
+
+def test_sample_rows_capped():
+    x = np.ones((100, 32), np.float32)
+    ts = _to_stats(jax.device_get(tensor_reduction(x, sample_rows=8)))
+    assert ts.sample.shape == (8, 32)
+    assert ts.count == 100 * 32            # moments still see everything
+
+
+# =============================================================================
+# collection over the model
+# =============================================================================
+def test_collect_covers_all_roles_and_layers(calib_setup):
+    cfg, _, _, stats = calib_setup
+    assert stats.n_layers == N_LAYERS
+    for role in ("kv_key", "kv_value", "activations", "weights", "grads"):
+        layers = stats.role_layers(role)
+        assert sorted(layers) == list(range(N_LAYERS)), role
+        for ts in layers.values():
+            assert ts.count > 0 and ts.sample is not None
+            assert ts.sample.shape[1] == 32          # block rows
+            assert np.isfinite(ts.rms) and ts.absmax > 0
+
+
+def test_collect_unknown_role_rejected(calib_setup):
+    cfg, model, params, _ = calib_setup
+    with pytest.raises(ValueError, match="unknown tensor role"):
+        collect_model_stats(model, params, [], roles=("bogus",))
+    weights_only = collect_model_stats(model, params, [],
+                                       roles=("weights",))
+    with pytest.raises(KeyError, match="not collected"):
+        weights_only.role_layers("kv_key")
+
+
+# =============================================================================
+# sweep
+# =============================================================================
+def test_sweep_orders_by_quality_and_prices_by_spec(calib_setup):
+    cfg, _, _, stats = calib_setup
+    cost = lambda s: float(spec_side_nbytes(s, cfg.n_kv_heads, cfg.hd))
+    sw = sweep_role(stats, "kv_key", cost)
+    for layer, scored in sw.items():
+        sq = [s.sqnr_db for s in scored]
+        assert sq == sorted(sq, reverse=True)
+        by_fmt = {s.spec.fmt: s for s in scored}
+        # on gaussian-ish data INT8 beats E4M3 at the same byte cost,
+        # and both beat the 4-bit format
+        assert by_fmt["int8"].sqnr_db > by_fmt["e4m3"].sqnr_db
+        assert by_fmt["e4m3"].sqnr_db > by_fmt["e2m1"].sqnr_db
+        assert by_fmt["int8"].nbytes == by_fmt["e4m3"].nbytes
+        assert by_fmt["e2m1"].nbytes < by_fmt["int8"].nbytes
+
+
+def test_score_sample_exact_signal():
+    x = np.tile([1.0, 0.5, 2.0, 4.0], 8).astype(np.float32)[None, :]
+    q = score_sample(x, QuantSpec("e4m3", "ocp", 32))
+    assert q["sqnr_db"] > 100 and q["max_rel_err"] == 0.0
+
+
+# =============================================================================
+# budget-constrained search
+# =============================================================================
+def test_search_respects_budget_and_improves_with_bytes(calib_setup):
+    cfg, _, _, stats = calib_setup
+    full = kv_token_nbytes(QuantPolicy.parse("kv=int8@32:ocp"),
+                           cfg.n_kv_heads, cfg.hd) * N_LAYERS
+    rich = search_kv_policy(stats, full, cfg)
+    tight = search_kv_policy(stats, full * 0.7, cfg)
+    assert rich.total_nbytes <= full
+    assert tight.total_nbytes <= full * 0.7
+    assert rich.mean_sqnr_db >= tight.mean_sqnr_db
+    # generous budget -> the best (8-bit) spec everywhere
+    assert all(s.spec.fmt == "int8" for s in rich.chosen.values())
+
+
+def test_search_applied_cost_matches_accounting(calib_setup):
+    """The table the search emits really allocates what it charged for:
+    apply it and re-derive bytes/token from the config."""
+    from repro.models import apply_policy_table
+    cfg, _, _, stats = calib_setup
+    budget = 0.7 * kv_token_nbytes(QuantPolicy.parse("kv=int8@32:ocp"),
+                                   cfg.n_kv_heads, cfg.hd) * N_LAYERS
+    res = search_kv_policy(stats, budget, cfg)
+    cfg2 = apply_policy_table(cfg, res.table)
+    assert kv_cache_token_nbytes(cfg2) == int(res.total_nbytes)
+    assert kv_cache_token_nbytes(cfg2) <= budget
+
+
+def test_search_infeasible_budget_raises(calib_setup):
+    cfg, _, _, stats = calib_setup
+    with pytest.raises(ValueError, match="infeasible"):
+        search_kv_policy(stats, 1.0, cfg)
+
+
+def test_search_weights_budget(calib_setup):
+    """The weights budget is parameter-weighted: total bytes over total
+    params never exceeds the advertised bytes-per-param ceiling."""
+    cfg, _, _, stats = calib_setup
+    res = search_weights_policy(stats, 0.75, cfg)
+    assert res.total_params > 0
+    assert res.total_nbytes / res.total_params <= 0.75
+    for (role, layer), s in res.chosen.items():
+        assert role == "weights"
+        # each slot is charged bytes/param x that layer's param count
+        np.testing.assert_allclose(
+            s.nbytes, weight_param_nbytes(s.spec)
+            * stats.role_layers("weights")[layer].count)
+        # int8 (1.031 B/param) alone cannot fit a 0.75 B/param average
+        assert s.spec.fmt != "int8" \
+            or res.total_nbytes < 1.031 * res.total_params
+
+
+# =============================================================================
+# budget grammar
+# =============================================================================
+def test_parse_auto_budget():
+    assert parse_auto_budget("auto:96") == 96.0
+    assert parse_auto_budget("auto:1.5") == 1.5
+    for bad in ("auto", "auto:", "auto:x", "auto:-3", "auto:0"):
+        with pytest.raises(ValueError):
+            parse_auto_budget(bad)
+    # only the literal 'auto[:...]' form is auto — not any 'auto*' prefix
+    for not_auto in ("kv=int8", "autos:12", "automatic:5"):
+        with pytest.raises(ValueError, match="not an auto"):
+            parse_auto_budget(not_auto)

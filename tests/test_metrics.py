@@ -1,0 +1,120 @@
+"""Golden-value tests for core/metrics (previously untested).
+
+SQNR goldens use signals whose quantization is exactly predictable:
+exactly-representable blocks (zero noise), a constant block whose INT8
+rounding is computable by hand, and additive noise of known power.  Also
+pins the short-trailing-dim fix of ``max_rel_err_vs_blockmax`` (inputs
+narrower than one block used to reduce over zero blocks -> ``-inf``).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantSpec, metrics, quantize_dequantize
+
+
+def _g(shape=(8, 64), seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(scale=scale, size=shape
+                                  ).astype(np.float32))
+
+
+# =============================================================================
+# sqnr_db
+# =============================================================================
+def test_sqnr_exact_representation_is_huge():
+    """Powers of two are exact in every MX float format: zero noise."""
+    x = jnp.asarray(np.tile([1.0, 0.5, 2.0, 4.0], 8).astype(np.float32))
+    for fmt in ("e4m3", "e2m1", "int8"):
+        xq = quantize_dequantize(x, QuantSpec(fmt, "ocp", 32))
+        assert float(metrics.sqnr_db(x, xq)) > 100.0, fmt
+
+
+def test_sqnr_known_noise_power():
+    """Additive noise of amplitude a on a signal of RMS r gives exactly
+    20*log10(r/a)."""
+    x = _g((4, 128), seed=1)
+    a = 1e-3
+    xq = x + a
+    rms = float(jnp.sqrt(jnp.mean(x * x)))
+    want = 20.0 * np.log10(rms / a)
+    got = float(metrics.sqnr_db(x, xq))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_sqnr_int8_constant_block_golden():
+    """A constant block quantizes to one hand-computable INT8 code.
+
+    x = f32(1/3) repeated: EV_max is the exponent of 1/3 (biased 125), so
+    the OCP shared scale is 2^-2 and the element magnitude is
+    RNE(x / 2^-2 * 64) = 85 -> xq = 85/256.  SQNR follows analytically.
+    """
+    v = np.float32(1.0 / 3.0)
+    x = jnp.full((32,), v)
+    xq = quantize_dequantize(x, QuantSpec("int8", "ocp", 32))
+    want_q = 85.0 / 256.0
+    np.testing.assert_allclose(np.asarray(xq), want_q, rtol=0, atol=0)
+    want_sqnr = 10.0 * np.log10(float(v) ** 2 / (float(v) - want_q) ** 2)
+    np.testing.assert_allclose(float(metrics.sqnr_db(x, xq)), want_sqnr,
+                               rtol=1e-5)
+
+
+def test_mse_golden():
+    x = jnp.zeros((10,))
+    xq = jnp.full((10,), 2.0)
+    np.testing.assert_allclose(float(metrics.mse(x, xq)), 4.0)
+
+
+# =============================================================================
+# max_rel_err_vs_blockmax
+# =============================================================================
+def test_max_rel_err_golden():
+    """One element off by delta in a block whose max is m: err delta/m."""
+    x = np.zeros((2, 32), np.float32)
+    x[:, 0] = 8.0                      # block max
+    xq = x.copy()
+    xq[1, 5] = 0.5                     # |err| = 0.5 against max 8
+    got = float(metrics.max_rel_err_vs_blockmax(jnp.asarray(x),
+                                                jnp.asarray(xq), block=32))
+    np.testing.assert_allclose(got, 0.5 / 8.0, rtol=1e-6)
+
+
+def test_max_rel_err_short_trailing_dim():
+    """Trailing dim shorter than the block: full-row max fallback instead
+    of reducing over zero blocks (which used to return -inf)."""
+    x = jnp.asarray(np.array([4.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0],
+                             np.float32))
+    xq = x.at[1].set(0.0)              # err 1.0 against row max 4.0
+    got = float(metrics.max_rel_err_vs_blockmax(x, xq, block=32))
+    assert np.isfinite(got)
+    np.testing.assert_allclose(got, 0.25, rtol=1e-6)
+
+
+def test_max_rel_err_short_dim_matches_explicit_block():
+    """The fallback equals passing block=trailing-dim explicitly."""
+    x = _g((4, 8), seed=3)
+    xq = quantize_dequantize(x, QuantSpec("e4m3", "ocp", 8))
+    a = float(metrics.max_rel_err_vs_blockmax(x, xq, block=32))
+    b = float(metrics.max_rel_err_vs_blockmax(x, xq, block=8))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_max_rel_err_zero_when_exact():
+    x = jnp.asarray(np.tile([2.0, -1.0], 16).astype(np.float32))
+    assert float(metrics.max_rel_err_vs_blockmax(x, x)) == 0.0
+
+
+# =============================================================================
+# format-refinement invariant (fixed seeds; the hypothesis variant lives
+# in test_metrics_properties.py and runs where hypothesis is installed)
+# =============================================================================
+def test_wider_mantissa_never_scores_lower_sqnr_fixed_seeds():
+    """E2M3's code grid is a superset of E2M1's at the same shared scale
+    (same exponent bits), so its round-trip SQNR can never be lower."""
+    narrow = QuantSpec("e2m1", "ocp", 32)
+    wide = QuantSpec("e2m3", "ocp", 32)
+    for seed in range(5):
+        for scale in (1e-3, 1.0, 1e3):
+            x = _g((16, 64), seed=seed, scale=scale)
+            sn = float(metrics.sqnr_db(x, quantize_dequantize(x, narrow)))
+            sw = float(metrics.sqnr_db(x, quantize_dequantize(x, wide)))
+            assert sw >= sn - 1e-6, (seed, scale, sn, sw)

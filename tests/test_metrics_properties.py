@@ -1,0 +1,47 @@
+"""Property-based tests (hypothesis) for core/metrics invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantSpec, metrics, quantize_dequantize
+
+# bounded away from the marker-reserved top binade and from subnormals
+finite_f32 = st.floats(
+    min_value=-1e30, max_value=1e30, allow_nan=False, allow_infinity=False,
+    width=32).filter(lambda v: v == 0 or abs(v) >= 1e-30)
+
+blocks = st.lists(finite_f32, min_size=32, max_size=64).filter(
+    lambda vs: any(v != 0 for v in vs))
+
+
+@settings(max_examples=50, deadline=None)
+@given(blocks)
+def test_wider_mantissa_never_scores_lower_sqnr(vs):
+    """Quantize-dequantize at a wider format (E2M3: same exponent bits,
+    superset code grid) never scores lower SQNR than the narrower E2M1 on
+    the same block."""
+    x = jnp.asarray(np.asarray(vs, np.float32))
+    sn = float(metrics.sqnr_db(
+        x, quantize_dequantize(x, QuantSpec("e2m1", "ocp", 32))))
+    sw = float(metrics.sqnr_db(
+        x, quantize_dequantize(x, QuantSpec("e2m3", "ocp", 32))))
+    assert sw >= sn - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(blocks)
+def test_block_rel_err_bounded_and_nonneg(vs):
+    """Block-relative max error is finite, non-negative, and zero for the
+    identity round trip — including rows shorter than one block."""
+    x = jnp.asarray(np.asarray(vs, np.float32))
+    assert float(metrics.max_rel_err_vs_blockmax(x, x)) == 0.0
+    short = x[:8]
+    if np.any(np.asarray(short) != 0):
+        xq = quantize_dequantize(short, QuantSpec("e4m3", "ocp", 8))
+        e = float(metrics.max_rel_err_vs_blockmax(short, xq, block=32))
+        assert np.isfinite(e) and e >= 0.0

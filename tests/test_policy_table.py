@@ -1,0 +1,134 @@
+"""PolicyTable / QuantPolicy JSON round-trips, precise parse errors, and
+the config-side plumbing (`apply_policy_table`, uniform collapse)."""
+import pytest
+
+from repro.core import PolicyTable, QuantPolicy, QuantSpec
+from repro.models import apply_policy_table, load_reduced
+
+KV8 = "kv=int8@32:ocp"
+KV4 = "kv=e2m1@32:ocp"
+
+
+# =============================================================================
+# construction + accessors
+# =============================================================================
+def test_table_construction_and_lookup():
+    t = PolicyTable(KV8, {1: KV4})
+    assert t.layer(0) == QuantPolicy.parse(KV8)
+    assert t.layer(1) == QuantPolicy.parse(KV4)
+    assert t.layer(7) == t.default
+    assert t.spec("kv_key", 1) == QuantSpec("e2m1", "ocp", 32)
+    assert t.spec("kv_key", 0).fmt == "int8"
+    assert not t.is_uniform
+    assert t.collapse() is t
+
+
+def test_table_uniform_collapse():
+    t = PolicyTable(KV8, {0: KV8, 3: KV8})
+    assert t.is_uniform
+    assert t.collapse() == QuantPolicy.parse(KV8)
+    assert PolicyTable(KV8).collapse() == QuantPolicy.parse(KV8)
+
+
+def test_table_is_hashable_and_ordered():
+    a = PolicyTable(KV8, {2: KV4, 1: KV4})
+    b = PolicyTable(KV8, ((1, QuantPolicy.parse(KV4)),
+                          (2, QuantPolicy.parse(KV4))))
+    assert a == b and hash(a) == hash(b)
+    assert [i for i, _ in a.overrides] == [1, 2]
+
+
+def test_table_construction_errors():
+    with pytest.raises(ValueError, match="non-negative"):
+        PolicyTable(KV8, {-1: KV4})
+    with pytest.raises(ValueError, match="twice"):
+        PolicyTable(KV8, ((1, QuantPolicy.parse(KV4)),
+                          (1, QuantPolicy.parse(KV8))))
+    with pytest.raises(TypeError, match="QuantPolicy"):
+        PolicyTable(KV8, {0: 42})
+    with pytest.raises(TypeError, match="QuantPolicy"):
+        PolicyTable(default=3.14)
+
+
+# =============================================================================
+# JSON round-trip + precise errors
+# =============================================================================
+def test_policy_json_roundtrip():
+    p = QuantPolicy.parse("kv_key=int8@32:ocp,kv_value=e2m1@32:ocp,"
+                          "weights=e4m3@16:paper+unpacked")
+    assert QuantPolicy.from_json_dict(p.to_json_dict()) == p
+    assert QuantPolicy.from_json_dict({}) == QuantPolicy()
+
+
+def test_policy_json_errors_name_role_and_spec():
+    with pytest.raises(ValueError, match=r"role 'kv_key'.*'e9m9@32'"):
+        QuantPolicy.from_json_dict({"kv_key": "e9m9@32",
+                                    "kv_value": "int8"})
+    with pytest.raises(ValueError, match="unknown tensor role 'zz'"):
+        QuantPolicy.from_json_dict({"zz": "int8"})
+    with pytest.raises(ValueError, match="spec string"):
+        QuantPolicy.from_json_dict({"kv_key": 8, "kv_value": "int8"})
+    with pytest.raises(ValueError, match="kv_key and kv_value"):
+        QuantPolicy.from_json_dict({"kv_key": "int8"})
+
+
+def test_table_json_roundtrip():
+    t = PolicyTable(KV8, {1: KV4, 3: "kv_key=e4m3@32:ocp,"
+                                     "kv_value=e2m1@32:ocp"})
+    assert PolicyTable.from_json(t.to_json()) == t
+    # dict form round-trips too
+    assert PolicyTable.from_json_dict(t.to_json_dict()) == t
+
+
+def test_table_json_errors_name_layer_role_spec():
+    doc = ('{"schema": "policy_table/v1", "default": {"kv_key": "int8", '
+           '"kv_value": "int8"}, "layers": {"2": {"kv_key": "e9m9", '
+           '"kv_value": "int8"}}}')
+    with pytest.raises(ValueError,
+                       match=r"layer 2.*role 'kv_key'.*'e9m9'"):
+        PolicyTable.from_json(doc)
+    with pytest.raises(ValueError, match="bad layer index 'x'"):
+        PolicyTable.from_json_dict(
+            {"schema": "policy_table/v1", "layers": {"x": {}}})
+    with pytest.raises(ValueError, match="schema"):
+        PolicyTable.from_json_dict({"schema": "policy_table/v9"})
+    with pytest.raises(ValueError, match="unknown field"):
+        PolicyTable.from_json_dict(
+            {"schema": "policy_table/v1", "extra": 1})
+    with pytest.raises(ValueError, match="invalid JSON"):
+        PolicyTable.from_json("{nope")
+
+
+# =============================================================================
+# apply_policy_table
+# =============================================================================
+def test_apply_collapses_uniform_to_plain_policy():
+    cfg = load_reduced("chatglm3_6b")
+    t = PolicyTable(KV8, {0: KV8, 1: KV8})
+    out = apply_policy_table(cfg, t)
+    assert out.mx_table is None
+    # bit-identical config to the uniform QuantPolicy it collapses to
+    assert out == load_reduced("chatglm3_6b",
+                               mx=QuantPolicy.parse(KV8))
+
+
+def test_apply_non_uniform_sets_table_and_layer_policies():
+    cfg = load_reduced("chatglm3_6b")
+    out = apply_policy_table(cfg, PolicyTable(KV8, {1: KV4}))
+    assert out.per_layer_mx
+    assert out.mx == QuantPolicy.parse(KV8)        # mirrors the default
+    assert out.layer_policy(0).kv_key.fmt == "int8"
+    assert out.layer_policy(1).kv_key.fmt == "e2m1"
+    assert out.layer_cfg(1).mx_table is None
+    assert out.layer_cfg(1).mx == QuantPolicy.parse(KV4)
+
+
+def test_apply_rejects_out_of_range_layers_and_non_decoder():
+    cfg = load_reduced("chatglm3_6b")
+    with pytest.raises(ValueError, match=r"layer\(s\) \[9\]"):
+        apply_policy_table(cfg, PolicyTable(KV8, {9: KV4}))
+    rwkv = load_reduced("rwkv6_7b")
+    with pytest.raises(NotImplementedError, match="decoder"):
+        apply_policy_table(rwkv, PolicyTable(KV8, {1: KV4}))
+    # uniform tables are fine on any family (they collapse)
+    assert apply_policy_table(rwkv, PolicyTable(KV8)).mx_table is None

@@ -1,0 +1,133 @@
+"""End-to-end per-layer policy serving (`PolicyTable` through the zoo).
+
+The load-bearing guarantees:
+
+* a table assigning *different* KV specs to different layers serves
+  token-identically between the dense-attention fallback and the paged
+  Pallas kernel path — and both match solo contiguous-cache serving;
+* each layer's page pool is sized by its own specs (half-size packed
+  E2M1 pages next to INT8 pages in one engine);
+* an all-layers-identical table collapses to the uniform ``QuantPolicy``
+  it names, taking the identical (scanned) code path bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PolicyTable, QuantPolicy
+from repro.models import Model, apply_policy_table, load_reduced
+from repro.serve import (ContinuousBatchingEngine, GenerationConfig,
+                         ServeEngine)
+
+TABLE = PolicyTable("kv=int8@32:ocp", {1: "kv_key=e2m1@32:ocp,"
+                                          "kv_value=e4m3@32:ocp"})
+LENS = [4, 9, 14, 9, 4]
+NEW = 4
+PAGE = 8
+SLOTS = 2          # < len(LENS): admission + eviction on the path
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = apply_policy_table(load_reduced("chatglm3_6b"), TABLE)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in LENS]
+    return cfg, params, prompts
+
+
+def _serve_paged(cfg, params, prompts):
+    eng = ContinuousBatchingEngine(Model(cfg), params, max_slots=SLOTS,
+                                   page_size=PAGE,
+                                   max_len=max(LENS) + NEW + 1,
+                                   gen=GenerationConfig(max_new_tokens=NEW))
+    rids = [eng.add_request(p, NEW) for p in prompts]
+    out = eng.run()
+    return eng, [out[r] for r in rids]
+
+
+def test_per_layer_table_dense_matches_flash_kernel(setup):
+    """Different KV specs per layer: paged dense fallback == paged Pallas
+    kernel path, token for token."""
+    cfg, params, prompts = setup
+    _, dense = _serve_paged(cfg, params, prompts)
+    _, flash = _serve_paged(dataclasses.replace(cfg, attn_impl="flash"),
+                            params, prompts)
+    for d, f in zip(dense, flash):
+        np.testing.assert_array_equal(d, f)
+
+
+def test_per_layer_table_matches_solo_contiguous(setup):
+    """Paged continuous serving under the table == each request served
+    alone through the contiguous per-layer cache."""
+    cfg, params, prompts = setup
+    _, paged = _serve_paged(cfg, params, prompts)
+    model = Model(cfg)
+    solos = {}
+    for p, got in zip(prompts, paged):
+        n = p.shape[0]
+        if n not in solos:
+            solos[n] = ServeEngine(model, params, max_len=n + NEW + 2)
+        ref = solos[n].generate({"tokens": np.asarray(p)[None, :]},
+                                GenerationConfig(max_new_tokens=NEW))[0]
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_per_layer_pool_sized_per_layer(setup):
+    """Layer 0 (INT8) pages are twice the bytes of layer 1's packed E2M1
+    key pages; value pools differ per their own specs too."""
+    cfg, params, prompts = setup
+    model = Model(cfg)
+    pool = jax.eval_shape(lambda: model.init_paged_cache(8, PAGE))
+    layers = pool["layers"]
+    assert isinstance(layers, list) and len(layers) == 2
+    assert layers[0]["kc_pages"].shape[-1] == 32        # int8: 1B/elem
+    assert layers[1]["kc_pages"].shape[-1] == 16        # e2m1 packed
+    assert layers[1]["vc_pages"].shape[-1] == 32        # e4m3: 1B/elem
+    assert layers[0]["ks_pages"].shape == layers[1]["ks_pages"].shape
+
+
+def test_engine_reports_per_layer_pool_bytes(setup):
+    cfg, params, prompts = setup
+    eng, _ = _serve_paged(cfg, params, prompts)
+    uni = apply_policy_table(cfg, PolicyTable("kv=int8@32:ocp"))
+    eng_uni, _ = _serve_paged(uni, params, prompts)
+    # the mixed table stores strictly fewer pool bytes than uniform INT8
+    assert 0 < eng.kv_pool_nbytes < eng_uni.kv_pool_nbytes
+
+
+def test_identical_table_collapses_bit_identical(setup):
+    """An all-layers-identical PolicyTable == the uniform QuantPolicy:
+    same config object, same (scanned) code path, same tokens."""
+    cfg, params, prompts = setup
+    uniform_pol = QuantPolicy.parse("kv=int8@32:ocp")
+    collapsed = apply_policy_table(
+        load_reduced("chatglm3_6b"),
+        PolicyTable(uniform_pol, {0: uniform_pol, 1: uniform_pol}))
+    direct = load_reduced("chatglm3_6b", mx=uniform_pol)
+    assert collapsed == direct and collapsed.mx_table is None
+    _, a = _serve_paged(collapsed, params, prompts)
+    _, b = _serve_paged(direct, params, prompts)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_mixed_quantized_and_fp_layers_serve(setup):
+    """A table may leave some layers' caches unquantized: fp pages on
+    layer 0 next to packed E2M1 pages on layer 1."""
+    cfg, params, prompts = setup
+    t = PolicyTable(QuantPolicy(), {1: "kv=e2m1@32:ocp"})
+    mixed = apply_policy_table(load_reduced("chatglm3_6b"), t)
+    model = Model(mixed)
+    pool = jax.eval_shape(lambda: model.init_paged_cache(8, PAGE))
+    assert "k_pages" in pool["layers"][0]          # fp pages
+    assert "kc_pages" in pool["layers"][1]         # packed codes
+    _, out = _serve_paged(mixed, params, prompts)
+    _, flash = _serve_paged(dataclasses.replace(mixed, attn_impl="flash"),
+                            params, prompts)
+    for d, f in zip(out, flash):
+        np.testing.assert_array_equal(d, f)
