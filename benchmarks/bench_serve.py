@@ -6,7 +6,7 @@ mixed per-role INT8-keys/E2M1-values policy) and batch mixes (uniform vs
 mixed prompt lengths), and emits both the harness CSV rows and a
 machine-readable ``BENCH_serve.json``:
 
-    {"schema": "bench_serve/v2", "arch": ..., "page_size": ...,
+    {"schema": "bench_serve/v3", "arch": ..., "page_size": ...,
      "max_slots": ..., "new_tokens": ..., "sync_every": ...,
      "configs": [{"cache": "mx-int8", "kv_fmt": "int8", "mode": "ocp",
                   "kv_key_fmt": "int8", "kv_value_fmt": "int8",
@@ -16,19 +16,30 @@ machine-readable ``BENCH_serve.json``:
                   "wall_s": ..., "tokens_per_s": ...,
                   "prefill_s": ..., "decode_s": ..., "sync_s": ...,
                   "decode_tokens_per_s": ..., "sync_points": ...,
-                  "kv_pool_bytes": ...}, ...]}
+                  "kv_pool_bytes": ...,
+                  "prefix_cache": false, "shared_prefix_tokens": 0,
+                  "prefix_hit_rate": 0.0, "prefill_tokens_computed": ...,
+                  "kv_pages_shared": 0, "kv_pages_mapped_peak": ...,
+                  "kv_pool_bytes_effective": ...}, ...]}
 
-Schema v2 (this PR) adds the per-phase wall-time split — prefill (bucket-
-batched prompt processing + page scatter) vs decode (the fused
-device-resident ``lax.scan`` windows) vs host-sync (scheduling, token
-drains, page grants) — plus ``sync_every``/``sync_points`` so the fused
-loop's dispatch amortization is visible in the artifact.
+Schema v3 (this PR) adds prefix-sharing accounting to every row plus a
+``mix="prefix"`` sweep (mx-int8 cache): uniform-length prompts whose first
+``shared_prefix_tokens`` tokens repeat a warmed system prompt, swept over
+both the shared-prefix length and the request count.  On those rows the
+engine serves one warmup request (populating the prefix trie), resets its
+counters, then serves the trace — so ``prefill_tokens_computed`` is the
+exact steady-state suffix work ``N * (L - c)`` and
+``kv_pool_bytes_effective`` (peak *distinct* pages mapped by slot block
+tables, times page bytes) shows the working-set dedupe.  The savings on
+both metrics scale with the product of traffic and shared fraction —
+superlinear in either axis alone — which
+``validate_bench_serve.py`` re-derives and asserts from the committed
+artifact.
 
 Wall times are CPU-container numbers (correctness path — Pallas interpret
 mode when attn_impl=flash); the relative fp32-vs-MX pool bytes, the phase
-split, and the schedule shape (decode steps vs request count) are the
-portable signals.  Validate with
-``python benchmarks/validate_bench_serve.py``.
+split, and the prefix-sharing deltas are the portable signals.  Validate
+with ``python benchmarks/validate_bench_serve.py``.
 """
 from __future__ import annotations
 
@@ -52,6 +63,7 @@ CACHE_CONFIGS = (
     ("mx-mixed", "kv_key=int8@32:ocp,kv_value=e2m1@32:ocp"),
 )
 MIXES = ("uniform", "mixed")
+PREFIX_CACHE_NAME = "mx-int8"   # the prefix sweep rides this cache config
 
 
 def _prompt_lens(mix: str, n_req: int, base: int,
@@ -59,6 +71,87 @@ def _prompt_lens(mix: str, n_req: int, base: int,
     if mix == "uniform":
         return np.full(n_req, base)
     return rng.integers(max(2, base // 3), 2 * base, size=n_req)
+
+
+def _policy_fields(policy) -> dict:
+    kk = policy.kv_key if policy else None
+    kv = policy.kv_value if policy else None
+    return {
+        "kv_fmt": None if kk is None else (
+            kk.fmt if kk.fmt == kv.fmt else f"{kk.fmt}+{kv.fmt}"),
+        "mode": kk.mode if kk else None,
+        "kv_key_fmt": kk.fmt if kk else None,
+        "kv_value_fmt": kv.fmt if kv else None,
+        "quant": str(policy) if policy else None,
+    }
+
+
+def _prefix_sweep(model, params, cfg, policy, *, max_slots, page_size,
+                  new_tokens, sync_every, rows, configs):
+    """mix="prefix" rows: uniform-length prompts sharing a warmed
+    ``c``-token system prompt, swept over (c, N).  Single measured pass
+    after warmup+reset: the counters are exact, not averaged."""
+    import jax                                          # noqa: F401
+    from repro.serve import ContinuousBatchingEngine, GenerationConfig
+
+    L = 3 * page_size                                   # uniform prompt len
+    n_base = 2 * max_slots
+    sweep = [(0, n_base), (page_size, n_base), (2 * page_size, n_base),
+             (page_size, 2 * n_base), (2 * page_size, 2 * n_base)]
+    bucket = -(-L // page_size) * page_size
+    for c, n_req in sweep:
+        rng = np.random.default_rng(7)
+        prefix = rng.integers(0, cfg.vocab, size=c).astype(np.int32)
+        prompts = [np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab, size=L - c)
+             .astype(np.int32)]) for _ in range(n_req)]
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=max_slots,
+            page_size=page_size, max_len=L + new_tokens + 1,
+            gen=GenerationConfig(max_new_tokens=new_tokens),
+            sync_every=sync_every, prefill_bucket=bucket,
+            prefix_cache=True)
+        if c:
+            eng.add_request(prefix, 1)                  # warm the trie
+            eng.run()
+            eng.reset_metrics()
+        t0 = time.perf_counter()
+        for p in prompts:
+            eng.add_request(p, new_tokens)
+        out = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in out.values())
+        tps = toks / dt
+        dec_toks = toks - len(out)
+        name = f"serve_{PREFIX_CACHE_NAME}_prefix_c{c}_n{n_req}"
+        rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
+        configs.append({
+            "cache": PREFIX_CACHE_NAME,
+            **_policy_fields(policy),
+            "mix": "prefix",
+            "prefill_bucket": int(bucket),
+            "requests": int(n_req),
+            "prompt_tokens": int(n_req * L),
+            "generated_tokens": int(toks),
+            "decode_steps": int(eng.n_steps),
+            "sync_points": int(eng.n_syncs),
+            "wall_s": float(dt),
+            "tokens_per_s": float(tps),
+            "prefill_s": float(eng.phase["prefill"]),
+            "decode_s": float(eng.phase["decode"]),
+            "sync_s": float(eng.phase["sync"]),
+            "decode_tokens_per_s": float(
+                dec_toks / eng.phase["decode"])
+            if eng.phase["decode"] > 0 else 0.0,
+            "kv_pool_bytes": eng.kv_pool_nbytes,
+            "prefix_cache": True,
+            "shared_prefix_tokens": int(c),
+            "prefix_hit_rate": float(eng.prefix_hit_rate),
+            "prefill_tokens_computed": int(eng.prefill_tokens_computed),
+            "kv_pages_shared": int(eng.peak_shared_pages),
+            "kv_pages_mapped_peak": int(eng.peak_mapped_pages),
+            "kv_pool_bytes_effective": int(eng.kv_pool_bytes_effective),
+        })
 
 
 def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
@@ -108,34 +201,29 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
                 for p in prompts:
                     eng.add_request(p, new_tokens)
                 steps0, syncs0 = eng.n_steps, eng.n_syncs
+                pt0 = eng.prefill_tokens_computed
                 ph0 = dict(eng.phase)
                 t0 = time.perf_counter()
                 out = eng.run()
                 dt = time.perf_counter() - t0
                 ph = {k: eng.phase[k] - ph0[k] for k in ph0}
                 return out, dt, eng.n_steps - steps0, \
-                    eng.n_syncs - syncs0, ph
+                    eng.n_syncs - syncs0, ph, \
+                    eng.prefill_tokens_computed - pt0
 
             serve()       # reusing the engine keeps its jitted closures
             # warm -> best of 5 steady-state repetitions (the container's
             # CPU wall clock is noisy at these ~10ms scales)
-            out, dt, steps, syncs, ph = min(
+            out, dt, steps, syncs, ph, ptoks = min(
                 (serve() for _ in range(5)), key=lambda r: r[1])
             toks = sum(len(v) for v in out.values())
             tps = toks / dt
             dec_toks = toks - len(out)      # prefill emits one per request
             name = f"serve_{cache_name}_{mix}"
             rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
-            kk = policy.kv_key if policy else None
-            kv = policy.kv_value if policy else None
             configs.append({
                 "cache": cache_name,
-                "kv_fmt": None if kk is None else (
-                    kk.fmt if kk.fmt == kv.fmt else f"{kk.fmt}+{kv.fmt}"),
-                "mode": kk.mode if kk else None,
-                "kv_key_fmt": kk.fmt if kk else None,
-                "kv_value_fmt": kv.fmt if kv else None,
-                "quant": str(policy) if policy else None,
+                **_policy_fields(policy),
                 "mix": mix,
                 "prefill_bucket": int(bucket),
                 "requests": int(n_req),
@@ -151,10 +239,23 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
                 "decode_tokens_per_s": float(
                     dec_toks / ph["decode"]) if ph["decode"] > 0 else 0.0,
                 "kv_pool_bytes": eng.kv_pool_nbytes,
+                "prefix_cache": False,
+                "shared_prefix_tokens": 0,
+                "prefix_hit_rate": 0.0,
+                "prefill_tokens_computed": int(ptoks),
+                "kv_pages_shared": int(eng.peak_shared_pages),
+                "kv_pages_mapped_peak": int(eng.peak_mapped_pages),
+                "kv_pool_bytes_effective": int(
+                    eng.kv_pool_bytes_effective),
             })
+        if cache_name == PREFIX_CACHE_NAME:
+            _prefix_sweep(model, params, cfg, policy,
+                          max_slots=max_slots, page_size=page_size,
+                          new_tokens=new_tokens, sync_every=sync_every,
+                          rows=rows, configs=configs)
 
     doc = {
-        "schema": "bench_serve/v2",
+        "schema": "bench_serve/v3",
         "arch": f"{ARCH}-reduced",
         "page_size": int(page_size),
         "max_slots": int(max_slots),

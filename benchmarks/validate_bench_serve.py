@@ -1,13 +1,27 @@
-"""Validate BENCH_serve.json against the bench_serve/v2 schema (dep-free).
+"""Validate BENCH_serve.json against the bench_serve/v3 schema (dep-free).
 
     python benchmarks/validate_bench_serve.py [BENCH_serve.json]
 
-Schema v2 adds the per-phase wall-time split (prefill vs decode vs
-host-sync) and the fused-window accounting (``sync_every`` /
-``sync_points``) of the device-resident decode loop.  Exits nonzero with a
-per-field report on mismatch — including *unknown* fields, so the emitted
-artifact can't silently drift from the schema documented in README
-§Continuous batching & paged KV.
+Schema v3 adds prefix-sharing accounting (``prefix_cache``,
+``shared_prefix_tokens``, ``prefix_hit_rate``, ``prefill_tokens_computed``,
+``kv_pages_shared``, ``kv_pages_mapped_peak``,
+``kv_pool_bytes_effective``) and the ``mix="prefix"`` sweep rows.  Beyond
+field/type checks the validator *re-derives* the sweep's counters from
+first principles and asserts the artifact's two claims:
+
+* exactness — on a warmed trie every admission matches the full shared
+  prefix, so ``prefill_tokens_computed == N * (L - c)`` and the peak
+  working set is ``c/ps`` shared pages (counted once) plus
+  ``max_slots * (P - c/ps)`` private pages;
+* superlinearity — the prefill-token savings ``N*L - computed == N*c``
+  scale with the *product* of traffic and shared-prefix length, so along
+  the sweep's (c, N) diagonal they grow strictly faster than along either
+  axis alone (superadditivity), and effective pool bytes per prompt token
+  drop on the diagonal below both single-axis rows.
+
+Exits nonzero with a per-field report on mismatch — including *unknown*
+fields, so the emitted artifact can't silently drift from the schema
+documented in README §Prefix caching & copy-on-write.
 """
 from __future__ import annotations
 
@@ -15,7 +29,7 @@ import json
 import sys
 from pathlib import Path
 
-SCHEMA = "bench_serve/v2"
+SCHEMA = "bench_serve/v3"
 TOP_FIELDS = {
     "schema": str,
     "arch": str,
@@ -46,11 +60,135 @@ CONFIG_FIELDS = {
     "sync_s": float,
     "decode_tokens_per_s": float,
     "kv_pool_bytes": int,
+    "prefix_cache": bool,
+    "shared_prefix_tokens": int,
+    "prefix_hit_rate": (float, int),
+    "prefill_tokens_computed": int,
+    "kv_pages_shared": int,
+    "kv_pages_mapped_peak": int,
+    "kv_pool_bytes_effective": int,
 }
 KNOWN_CACHES = {"fp32", "mx-int8", "mx-e4m3", "mx-e5m2", "mx-e3m2",
                 "mx-e2m3", "mx-e2m1", "mx-mixed"}
-KNOWN_MIXES = {"uniform", "mixed"}
+KNOWN_MIXES = {"uniform", "mixed", "prefix"}
 KNOWN_FMTS = {"int8", "e4m3", "e5m2", "e3m2", "e2m3", "e2m1", None}
+
+
+def _pages(tokens: int, page_size: int) -> int:
+    return max(1, -(-tokens // page_size))
+
+
+def _check_prefix_row(i, c, doc, errs) -> None:
+    """Re-derive the mix="prefix" counters from first principles."""
+    ps = doc["page_size"]
+    slots = doc["max_slots"]
+    new = doc["new_tokens"]
+    n = c["requests"]
+    cpfx = c["shared_prefix_tokens"]
+    if not c["prefix_cache"]:
+        errs.append(f"configs[{i}]: prefix row without prefix_cache")
+        return
+    if c["prompt_tokens"] % n:
+        errs.append(f"configs[{i}]: prefix rows are uniform-length "
+                    f"(prompt_tokens % requests != 0)")
+        return
+    length = c["prompt_tokens"] // n
+    if cpfx % ps or cpfx >= length:
+        errs.append(f"configs[{i}]: shared_prefix_tokens must be a "
+                    f"page multiple below the prompt length")
+        return
+    # exactness: warmed trie -> every admission matches the full shared
+    # prefix and computes only the suffix
+    want = n * (length - cpfx)
+    if c["prefill_tokens_computed"] != want:
+        errs.append(f"configs[{i}]: prefill_tokens_computed "
+                    f"{c['prefill_tokens_computed']} != N*(L-c) = {want}")
+    want_rate = 1.0 if cpfx else 0.0
+    if abs(c["prefix_hit_rate"] - want_rate) > 1e-9:
+        errs.append(f"configs[{i}]: prefix_hit_rate "
+                    f"{c['prefix_hit_rate']} != {want_rate}")
+    if c["kv_pages_shared"] != cpfx // ps:
+        errs.append(f"configs[{i}]: kv_pages_shared "
+                    f"{c['kv_pages_shared']} != c/ps = {cpfx // ps}")
+    # peak working set: the shared chain counts once, each of the
+    # max_slots concurrent slots adds only its private pages
+    total_pages = _pages(length + new, ps)
+    conc = min(n, slots)
+    want_peak = cpfx // ps + conc * (total_pages - cpfx // ps) if cpfx \
+        else conc * total_pages
+    if c["kv_pages_mapped_peak"] != want_peak:
+        errs.append(f"configs[{i}]: kv_pages_mapped_peak "
+                    f"{c['kv_pages_mapped_peak']} != {want_peak}")
+    num_pages = 1 + slots * _pages(length + new + 1, ps)
+    want_eff = want_peak * (c["kv_pool_bytes"] // num_pages)
+    if c["kv_pool_bytes_effective"] != want_eff:
+        errs.append(f"configs[{i}]: kv_pool_bytes_effective "
+                    f"{c['kv_pool_bytes_effective']} != peak * page "
+                    f"bytes = {want_eff}")
+
+
+def _check_prefix_claims(prows, errs) -> None:
+    """The committed sweep must witness both headline claims."""
+    if not prows:
+        errs.append("configs: no mix='prefix' rows (schema v3 requires "
+                    "the prefix-sharing sweep)")
+        return
+    key = {}
+    for c in prows:
+        if c["prompt_tokens"] % c["requests"] == 0:
+            key[(c["shared_prefix_tokens"], c["requests"])] = c
+    ns = sorted({n for _, n in key})
+    cs = sorted({cc for cc, _ in key})
+    if 0 not in cs or len([c for c in cs if c > 0]) < 2 or len(ns) < 2:
+        errs.append("prefix sweep: need a c=0 baseline, >= 2 shared "
+                    "lengths, and >= 2 request counts")
+        return
+    c1, c2 = [c for c in cs if c > 0][:2]
+    n1, n2 = ns[0], ns[-1]
+    # monotone drop in the shared length at fixed N
+    for n in ns:
+        col = [key[(cc, n)] for cc in cs if (cc, n) in key]
+        for a, b in zip(col, col[1:]):
+            if not (b["prefill_tokens_computed"]
+                    < a["prefill_tokens_computed"]):
+                errs.append(f"prefix sweep: prefill_tokens_computed not "
+                            f"strictly decreasing in c at N={n}")
+            if not (b["kv_pool_bytes_effective"]
+                    < a["kv_pool_bytes_effective"]):
+                errs.append(f"prefix sweep: kv_pool_bytes_effective not "
+                            f"strictly decreasing in c at N={n}")
+
+    def savings(cc, n):
+        row = key[(cc, n)]
+        return row["prompt_tokens"] - row["prefill_tokens_computed"]
+
+    def eff_per_tok(cc, n):
+        row = key[(cc, n)]
+        return row["kv_pool_bytes_effective"] / row["prompt_tokens"]
+
+    quad = [(cc, n) for cc in (c1, c2) for n in (n1, n2)]
+    if all(q in key for q in quad):
+        # prefill savings compound: the (c2, n2) diagonal beats the sum
+        # of its single-axis neighbours (strict superadditivity), i.e.
+        # savings scale with traffic x shared fraction
+        lhs = savings(c2, n2) + savings(c1, n1)
+        rhs = savings(c2, n1) + savings(c1, n2)
+        if not lhs > rhs:
+            errs.append(f"prefix sweep: prefill-token savings not "
+                        f"superadditive over (c, N): {lhs} <= {rhs}")
+        if not (savings(c2, n2) >= 2 * savings(c2, n1)
+                and savings(c2, n2) >= 2 * savings(c1, n2)):
+            errs.append("prefix sweep: diagonal savings fail to double "
+                        "both single-axis rows")
+        # effective pool bytes per prompt token drop superlinearly too:
+        # the diagonal undercuts both single-axis neighbours
+        if not (eff_per_tok(c2, n2) < eff_per_tok(c2, n1)
+                and eff_per_tok(c2, n2) < eff_per_tok(c1, n2)):
+            errs.append("prefix sweep: effective bytes per prompt token "
+                        "on the diagonal fail to undercut both axes")
+    else:
+        errs.append("prefix sweep: incomplete (c, N) grid — need rows at "
+                    f"({c1}|{c2}) x ({n1}|{n2})")
 
 
 def check(doc) -> list:
@@ -77,7 +215,8 @@ def check(doc) -> list:
         for field, ty in CONFIG_FIELDS.items():
             if field not in c:
                 errs.append(f"configs[{i}]: missing field {field!r}")
-            elif not isinstance(c[field], ty):
+            elif not isinstance(c[field], ty) \
+                    or (ty is int and isinstance(c[field], bool)):
                 tn = ty.__name__ if isinstance(ty, type) else \
                     "/".join(t.__name__ for t in ty)
                 errs.append(f"configs[{i}].{field}: expected {tn}, "
@@ -119,12 +258,40 @@ def check(doc) -> list:
                             f"wall_s (phase accounting broken)")
             if c["decode_tokens_per_s"] < 0:
                 errs.append(f"configs[{i}]: negative decode throughput")
+            if not 0.0 <= c["prefix_hit_rate"] <= 1.0:
+                errs.append(f"configs[{i}]: prefix_hit_rate outside "
+                            f"[0, 1]")
+            if c["prefill_tokens_computed"] <= 0:
+                errs.append(f"configs[{i}]: non-positive "
+                            f"prefill_tokens_computed")
+            if not 0 < c["kv_pool_bytes_effective"] <= c["kv_pool_bytes"]:
+                errs.append(f"configs[{i}]: kv_pool_bytes_effective "
+                            f"outside (0, kv_pool_bytes]")
+            if c["kv_pages_mapped_peak"] <= 0:
+                errs.append(f"configs[{i}]: non-positive "
+                            f"kv_pages_mapped_peak")
+            if c["mix"] == "prefix":
+                if len(errs) == before:
+                    _check_prefix_row(i, c, doc, errs)
+            else:
+                # no sharing on these rows: every prompt position is
+                # computed, nothing is mapped twice
+                if c["prefix_cache"] or c["shared_prefix_tokens"] \
+                        or c["prefix_hit_rate"] or c["kv_pages_shared"]:
+                    errs.append(f"configs[{i}]: non-prefix row carries "
+                                f"prefix-sharing state")
+                if c["prefill_tokens_computed"] != c["prompt_tokens"]:
+                    errs.append(f"configs[{i}]: prefill_tokens_computed "
+                                f"!= prompt_tokens on a non-prefix row")
     caches = {c.get("cache") for c in doc["configs"]}
     if len(caches) < 2:
         errs.append(f"configs: need >= 2 distinct cache types, got {caches}")
     if "mx-mixed" not in caches:
         errs.append("configs: missing the mixed-policy row (mx-mixed: "
                     "INT8 keys / E2M1 values)")
+    if not errs:
+        _check_prefix_claims(
+            [c for c in doc["configs"] if c["mix"] == "prefix"], errs)
     return errs
 
 
@@ -143,8 +310,10 @@ def main() -> None:
             print(f"  - {e}", file=sys.stderr)
         sys.exit(1)
     caches = sorted({c["cache"] for c in doc["configs"]})
+    npfx = sum(c["mix"] == "prefix" for c in doc["configs"])
     print(f"{path}: valid {SCHEMA} ({len(doc['configs'])} configs, "
-          f"caches={caches}, sync_every={doc['sync_every']})")
+          f"caches={caches}, sync_every={doc['sync_every']}, "
+          f"prefix_rows={npfx})")
 
 
 if __name__ == "__main__":

@@ -85,6 +85,15 @@ def main() -> None:
                          "of this (rounded up to a page multiple; default "
                          "--page-size) and prefill same-bucket admissions "
                          "as one batch")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged mode: share full KV pages across requests "
+                         "with a common prompt prefix (refcounted, "
+                         "copy-on-write); only the uncached suffix is "
+                         "prefilled — outputs stay token-identical")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="paged mode: give every synthetic prompt this "
+                         "many common leading tokens (a system prompt) "
+                         "so --prefix-cache has something to share")
     ap.add_argument("--requests", type=int, default=0,
                     help="paged mode: total requests to serve "
                          "(default 2x --batch)")
@@ -187,14 +196,22 @@ def main() -> None:
                                 2 * args.prompt_len, size=n_req)
         else:
             lens = np.full(n_req, args.prompt_len)
-        max_len = int(lens.max()) + args.new_tokens + 1
+        max_len = int(lens.max()) + args.shared_prefix \
+            + args.new_tokens + 1
         eng = ContinuousBatchingEngine(
             model, params, max_slots=args.batch,
             page_size=args.page_size, max_len=max_len, rules=rules,
             gen=gen, sync_every=args.sync_every,
-            prefill_bucket=args.prefill_bucket or None)
-        prompts = [rng.integers(0, cfg.vocab, size=int(n)).astype(np.int32)
-                   for n in lens]
+            prefill_bucket=args.prefill_bucket or None,
+            prefix_cache=args.prefix_cache)
+        shared = rng.integers(0, cfg.vocab, size=args.shared_prefix
+                              ).astype(np.int32)
+        prompts = []
+        for n in lens:
+            tail = rng.integers(0, cfg.vocab,
+                                size=max(1, int(n))).astype(np.int32)
+            prompts.append(np.concatenate([shared, tail])
+                           if args.shared_prefix else tail)
         with mesh_ctx:
             t0 = time.perf_counter()
             for p in prompts:
@@ -213,6 +230,17 @@ def main() -> None:
               f"{eng.blocks.free_pages}/{eng.blocks.num_pages} pages free")
         print(f"[serve] phase wall: prefill {ph['prefill']:.2f}s, "
               f"decode {ph['decode']:.2f}s, host-sync {ph['sync']:.2f}s")
+        if args.prefix_cache:
+            px = eng.prefix
+            print(f"[serve] prefix cache: hit rate "
+                  f"{eng.prefix_hit_rate:.2f} ({px.hits}/{px.lookups} "
+                  f"admissions), {px.tokens_matched} tokens reused, "
+                  f"{eng.prefill_tokens_computed} prefill tokens "
+                  f"computed, {eng.n_cow_forks} COW forks, "
+                  f"peak shared pages {eng.peak_shared_pages}, "
+                  f"effective pool "
+                  f"{eng.kv_pool_bytes_effective / 1024:.1f} KiB "
+                  f"(allocated {eng.kv_pool_nbytes / 1024:.1f} KiB)")
         first = out[min(out)]
         print("[serve] sample output tokens:", first[:12].tolist())
         return

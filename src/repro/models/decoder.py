@@ -71,10 +71,16 @@ def init(key, cfg: ModelConfig) -> Dict[str, Any]:
 
 def _block(lp, x, cfg: ModelConfig, *, positions, cache=None, cache_pos=None,
            moe_layer: bool, fake_quant: bool,
-           paged=None, tap=None) -> Tuple[jax.Array, Any, jax.Array]:
+           paged=None, paged_prefill=None,
+           tap=None) -> Tuple[jax.Array, Any, jax.Array]:
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     s = x.shape[1]
-    if paged is not None:
+    if paged_prefill is not None:
+        block_tables, starts, prompt_lens = paged_prefill
+        a, new_cache = L.attention_paged_prefill(
+            lp["attn"], h, cfg, pool=cache, block_tables=block_tables,
+            starts=starts, prompt_lens=prompt_lens, fake_quant=fake_quant)
+    elif paged is not None:
         block_tables, lengths = paged
         a, new_cache = L.attention_paged_decode(
             lp["attn"], h, cfg, pool=cache, block_tables=block_tables,
@@ -354,6 +360,66 @@ def scatter_prefill(cfg: ModelConfig, pool, cache, page_ids):
             for i, (pg, cg) in enumerate(zip(pool["dense_layers"],
                                              cache["dense_layers"]))]
     return new
+
+
+def copy_pool_pages(pool, src, dst):
+    """Copy page contents src[i] -> dst[i] in every pool leaf (COW fork
+    under prefix sharing).  src/dst (M,) i32 physical page ids; leaves are
+    (P, page, n_kv, X) or layer-stacked (n_scan, P, page, n_kv, X) — the
+    bytes copy verbatim whatever the layer's spec, so one call covers
+    uniform policies, per-layer tables, and fp pools alike."""
+    def leaf(x):
+        return x.at[:, dst].set(x[:, src]) if x.ndim == 5 \
+            else x.at[dst].set(x[src])
+    return jax.tree_util.tree_map(leaf, pool)
+
+
+def paged_prefill_suffix(params, tokens, starts, prompt_lens, cache,
+                         block_tables, cfg: ModelConfig, *,
+                         fake_quant: bool = False):
+    """Prefill only the *uncached suffix* of G prompts over the paged KV
+    cache (prefix sharing): request g's tokens cover prompt positions
+    [starts[g], prompt_lens[g]), padded on the right; earlier positions
+    are already resident in the slot's (shared, read-only) prefix pages.
+
+    tokens (G, S) int32; starts/prompt_lens (G,) int32; block_tables
+    (G, max_pages) int32 — the slots' full rows, with any copy-on-write
+    fork already applied.  Returns (logits (G, S, Vp), new page pools);
+    logits row i of request g corresponds to prompt position
+    ``starts[g] + i`` (the engine samples at ``prompt_lens - starts - 1``).
+    """
+    x = _embed(params, cfg, tokens, None)
+    paged_prefill = (block_tables, starts, prompt_lens)
+    moe_layer = cfg.n_experts > 0
+    new_dense = []
+    for i, dl in enumerate(params.get("dense_layers", [])):
+        x, nc, _ = _block(dl, x, cfg.layer_cfg(i), positions=None,
+                          cache=cache["dense_layers"][i], moe_layer=False,
+                          fake_quant=fake_quant,
+                          paged_prefill=paged_prefill)
+        new_dense.append(nc)
+    if cfg.mx_table is not None:
+        new_layer_cache = []
+        for i, cfg_i in enumerate(_scan_cfgs(cfg)):
+            x, nc, _ = _block(_scan_layer_params(params, i), x, cfg_i,
+                              positions=None, cache=cache["layers"][i],
+                              moe_layer=moe_layer, fake_quant=fake_quant,
+                              paged_prefill=paged_prefill)
+            new_layer_cache.append(nc)
+    else:
+        def step(carry, xs):
+            lp, cache_l = xs
+            y, nc, _ = _block(lp, carry, cfg, positions=None, cache=cache_l,
+                              moe_layer=moe_layer, fake_quant=fake_quant,
+                              paged_prefill=paged_prefill)
+            return y, nc
+
+        x, new_layer_cache = L.layer_scan(
+            step, x, (params["layers"], cache["layers"]), cfg)
+    new_cache = {"layers": new_layer_cache}
+    if new_dense:
+        new_cache["dense_layers"] = new_dense
+    return _head(params, cfg, x), new_cache
 
 
 def paged_decode_step(params, token, cache, block_tables, lengths,

@@ -334,6 +334,36 @@ def paged_cache_write(pool, k: jax.Array, v: jax.Array, pages: jax.Array,
                 v[:, 0].astype(dt)), "kv_pages", None, None, None)}
 
 
+def paged_cache_write_tokens(pool, k: jax.Array, v: jax.Array,
+                             pages: jax.Array, offsets: jax.Array,
+                             cfg: ModelConfig):
+    """Scatter a multi-token span per slot into the page pool (suffix
+    prefill under prefix caching).
+
+    k/v (G, S, n_kv, hd); pages/offsets (G, S) i32 — request g's token i
+    lands at pool[pages[g, i], offsets[g, i]].  Padded positions must be
+    routed to the trash page by the caller; live (page, offset) pairs
+    never collide across requests because every written page is private
+    to its slot (shared pages were copy-on-write forked first)."""
+    kk, kv = cfg.mx.kv_key, cfg.mx.kv_value
+    if kk is not None:
+        kc, ks = _kv_quant(k, kk)
+        vc, vs = _kv_quant(v, kv)
+        if kk.packed:
+            kc = pack_codes(kc, kk.fmt)
+        if kv.packed:
+            vc = pack_codes(vc, kv.fmt)
+        upd = dict(kc_pages=kc, ks_pages=ks, vc_pages=vc, vs_pages=vs)
+        return {name: logical(pool[name].at[pages, offsets].set(val),
+                              "kv_pages", None, None, None)
+                for name, val in upd.items()}
+    dt = pool["k_pages"].dtype
+    return {"k_pages": logical(pool["k_pages"].at[pages, offsets].set(
+                k.astype(dt)), "kv_pages", None, None, None),
+            "v_pages": logical(pool["v_pages"].at[pages, offsets].set(
+                v.astype(dt)), "kv_pages", None, None, None)}
+
+
 def paged_cache_gather(pool, block_tables: jax.Array, cfg: ModelConfig,
                        dtype, hd: int) -> Tuple[jax.Array, jax.Array]:
     """Gather a slot-major contiguous (B, max_pages*page, n_kv, hd) K/V view
@@ -404,6 +434,61 @@ def attention_paged_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
     return logical(out, "batch", None, None), pool
 
 
+def attention_paged_prefill(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                            pool, block_tables: jax.Array,
+                            starts: jax.Array, prompt_lens: jax.Array,
+                            trash_page: int = 0,
+                            fake_quant: bool = False
+                            ) -> Tuple[jax.Array, Any]:
+    """GQA prefill of an uncached prompt *suffix* over the paged KV cache
+    (prefix sharing): x (G, S, d) holds request g's prompt tokens from
+    position ``starts[g]`` (padded past ``prompt_lens[g] - starts[g]``).
+
+    The suffix k/v are written into the slot's private pages first, then
+    every query attends the *gathered dequantized* page view — prefix
+    positions come from the shared (read-only) pages, suffix positions
+    from the bytes just written.  The contiguous prefill attends the same
+    dequantized values under an MX policy (see ``attention``), so a
+    shared-prefix suffix prefill is bit-identical to the full one.  This
+    path is dense on purpose: the flash prefill kernel's online softmax is
+    only allclose-level vs ``_sdpa_gqa``, and prefix caching promises
+    token identity, not tolerance.
+
+    Padded positions write to ``trash_page`` and their logits are garbage
+    the engine never reads."""
+    g, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    mx = cfg.mx
+    q = dense(x, p["wq"], mx, fake_quant)
+    q = logical(q, "batch", None, "model").reshape(g, s, nh, hd)
+    k = dense(x, p["wk"], mx, fake_quant).reshape(g, s, nkv, hd)
+    v = dense(x, p["wv"], mx, fake_quant).reshape(g, s, nkv, hd)
+    positions = starts[:, None] + jnp.arange(s)[None, :]        # (G, S)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin, cfg.rope_frac)
+    k = apply_rope(k, cos, sin, cfg.rope_frac)
+    page = paged_page_size(pool)
+    np_max = block_tables.shape[1]
+    valid = positions < prompt_lens[:, None]
+    page_idx = jnp.clip(positions // page, 0, np_max - 1)
+    pages = jnp.where(valid,
+                      jnp.take_along_axis(block_tables, page_idx, axis=1),
+                      trash_page)
+    pool = paged_cache_write_tokens(pool, k, v, pages, positions % page,
+                                    cfg)
+    q = logical(q, "kv_batch", None, None, None)
+    ka, va = paged_cache_gather(pool, block_tables, cfg, x.dtype, hd)
+    ka = logical(ka, "kv_batch", None, None, None)
+    va = logical(va, "kv_batch", None, None, None)
+    sk = ka.shape[1]
+    mask = jnp.arange(sk)[None, None, None, None, :] \
+        <= positions[:, None, None, :, None]
+    out = _sdpa_gqa(q, ka, va, mask)
+    out = out.reshape(g, s, nh * hd)
+    out = dense(out, p["wo"], mx, fake_quant, tp="row")
+    return logical(out, "batch", None, None), pool
+
+
 # =============================================================================
 # GQA attention
 # =============================================================================
@@ -455,6 +540,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     b, s, d = x.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     mx = cfg.mx
+    quant_prefill = False
     q = dense(x, p["wq"], mx, fake_quant)
     q = logical(q, "batch", None, "model")
     q = q.reshape(b, s, nh, hd)
@@ -496,8 +582,17 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
             kpos = jnp.arange(sk)
             mask = (kpos[None, None, None, None, :] <= cache_pos)
         else:
-            # prefill: attend over the fresh k/v causally; the cache keeps
-            # the quantized copy for subsequent decode steps
+            # prefill: the cache keeps the quantized copy for subsequent
+            # decode steps.  Under an MX policy, attend the *dequantized*
+            # cache view rather than the fresh k/v: suffix-only prefill
+            # over shared prefix pages (repro.serve prefix caching) can
+            # only read quantized bytes, so attending them here too keeps
+            # full and suffix prefill bit-identical.  An fp cache
+            # round-trips exactly — the fresh path stands.
+            if cfg.mx.kv_key is not None:
+                kq, vq = cache_read(new_cache, cfg, x.dtype, hd)
+                k, v = kq[:, :s], vq[:, :s]
+                quant_prefill = True
             sk = k.shape[1]
             qpos = jnp.arange(s)
             kpos = jnp.arange(sk)
@@ -513,7 +608,11 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         else:
             mask = jnp.ones((1, 1, 1, s, sk), bool)
     out = None
-    if cfg.attn_impl == "flash" and causal and s > 1 and s == k.shape[1]:
+    # quantize-aware prefill stays dense: the paged suffix-prefill path it
+    # must match bit-for-bit is dense, and the flash kernel's online
+    # softmax is only allclose-level against _sdpa_gqa
+    if cfg.attn_impl == "flash" and causal and s > 1 \
+            and s == k.shape[1] and not quant_prefill:
         from repro.kernels.ops import flash_attention_ctx
         out = flash_attention_ctx(q, k, v, causal=True)
     if out is None:

@@ -142,6 +142,19 @@ class Model:
         """Scatter a batched contiguous prefill cache into the page pool."""
         return self.mod.scatter_prefill(self.cfg, pool, cache, page_ids)
 
+    def paged_prefill_suffix(self, params, tokens, starts, prompt_lens,
+                             pool, block_tables, *,
+                             fake_quant: bool = False):
+        """Prefill only the uncached suffix of G prompts over the paged
+        pool (prefix sharing; see decoder.paged_prefill_suffix)."""
+        return self.mod.paged_prefill_suffix(
+            params, tokens, starts, prompt_lens, pool, block_tables,
+            self.cfg, fake_quant=fake_quant)
+
+    def copy_pool_pages(self, pool, src, dst):
+        """Copy page contents src[i] -> dst[i] in every pool leaf (COW)."""
+        return self.mod.copy_pool_pages(pool, src, dst)
+
 
 # =============================================================================
 # input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run food)

@@ -1,5 +1,6 @@
 from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
                                 GenerationConfig, ServeEngine)
 from repro.serve.paging import BlockManager, pages_needed  # noqa: F401
+from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.scheduler import (Request, RequestState,  # noqa: F401
                                    Scheduler)

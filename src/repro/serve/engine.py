@@ -47,6 +47,7 @@ from repro.dist.sharding import use_rules
 from repro.models.decoder import sample_tokens
 from repro.models.registry import Model
 from repro.serve.paging import TRASH_PAGE, BlockManager, pages_needed
+from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -140,6 +141,17 @@ class ContinuousBatchingEngine:
                          one batch.  Larger buckets mean fewer distinct
                          prefill shapes (fewer retraces) at the cost of
                          padded FLOPs.
+    ``prefix_cache``   — enable prefix sharing: finished prefills publish
+                         their full KV pages into a trie keyed by page
+                         token content (``repro.serve.prefix``); later
+                         admissions map the longest cached prefix
+                         read-only into their block table and prefill
+                         only the uncached suffix, copy-on-write forking
+                         any shared page they must write.  Outputs are
+                         token-identical to ``prefix_cache=False`` (under
+                         MX policies and fp-dense; asserted in tests) —
+                         only the prefill compute and fresh-page demand
+                         shrink.
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8,
@@ -148,7 +160,8 @@ class ContinuousBatchingEngine:
                  rules: Optional[Dict[str, Any]] = None,
                  gen: GenerationConfig = GenerationConfig(),
                  sync_every: int = 8,
-                 prefill_bucket: Optional[int] = None):
+                 prefill_bucket: Optional[int] = None,
+                 prefix_cache: bool = False):
         if not model.supports_paged():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching needs a GQA "
@@ -168,7 +181,9 @@ class ContinuousBatchingEngine:
             num_pages = 1 + max_slots * self.max_pages_per_slot
         self.blocks = BlockManager(num_pages, page_size, max_slots,
                                    self.max_pages_per_slot)
-        self.scheduler = Scheduler(max_slots, self.blocks)
+        self.prefix = PrefixCache(self.blocks) if prefix_cache else None
+        self.scheduler = Scheduler(max_slots, self.blocks,
+                                   prefix=self.prefix)
         self.pool = model.init_paged_cache(num_pages, page_size)
         self.gen = gen
         self.rules = rules
@@ -187,6 +202,12 @@ class ContinuousBatchingEngine:
         self.n_steps = 0          # device decode steps (incl. masked tail)
         self.n_syncs = 0          # host sync points (fused windows run)
         self.n_generated = 0
+        # prefix-sharing accounting (bench_serve schema v3; live whether
+        # or not sharing is on, so the f=0 row is directly comparable)
+        self.prefill_tokens_computed = 0   # unpadded positions prefilled
+        self.n_cow_forks = 0
+        self.peak_mapped_pages = 0         # distinct pages in slot tables
+        self.peak_shared_pages = 0         # mapped by >= 2 table entries
         # per-phase wall clock (bench_serve schema v2)
         self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0}
         cfg = model.cfg
@@ -213,6 +234,26 @@ class ContinuousBatchingEngine:
                 keys, first = sample_tokens(last, keys, temperature)
                 return first, keys, pool
 
+        def _suffix_prefill(params, tokens, starts, lens, keys, pool, bt):
+            """Paged suffix prefill for G prefix-cache hits: compute only
+            prompt positions [starts, lens) (the shared prefix pages are
+            already resident), write their KV into the slots' private
+            pages, and sample each request's first token from its last
+            prompt position — the hit-path twin of _prefill_scatter."""
+            with _ctx():
+                logits, pool = model.paged_prefill_suffix(
+                    params, tokens, starts, lens, pool, bt)
+                g = tokens.shape[0]
+                last = logits[jnp.arange(g), lens - starts - 1,
+                              :self.vocab]
+                keys, first = sample_tokens(last, keys, temperature)
+                return first, keys, pool
+
+        def _copy_pages(pool, src, dst):
+            """Batched COW: duplicate shared pages src -> dst before a
+            writer touches them."""
+            return model.copy_pool_pages(pool, src, dst)
+
         def _multi(params, tok, pool, bt, lengths, remaining, keys,
                    n_steps):
             with _ctx():
@@ -227,6 +268,9 @@ class ContinuousBatchingEngine:
         # with a warning; on TPU this halves peak KV memory)
         self._prefill_scatter = jax.jit(_prefill_scatter,
                                         donate_argnums=(4,))
+        self._suffix_prefill = jax.jit(_suffix_prefill,
+                                       donate_argnums=(5,))
+        self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
         self._multi = jax.jit(_multi, static_argnums=(7,),
                               donate_argnums=(2,))
 
@@ -237,6 +281,45 @@ class ContinuousBatchingEngine:
         ``PolicyTable`` each layer's pool is sized by its own specs)."""
         return int(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
                        for leaf in jax.tree_util.tree_leaves(self.pool)))
+
+    @property
+    def kv_pool_bytes_effective(self) -> int:
+        """Bytes of *distinct* pages the serving working set peaked at —
+        peak pages mapped by any slot's block table, times the summed
+        per-page bytes across layer pools.  Shared prefix pages count
+        once however many slots map them (trie-only pins don't count:
+        retention is a cache policy, not working-set demand)."""
+        return self.peak_mapped_pages \
+            * (self.kv_pool_nbytes // self.blocks.num_pages)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admissions that matched a non-empty cached prefix
+        (0.0 with prefix caching off or before any admission)."""
+        if self.prefix is None or self.prefix.lookups == 0:
+            return 0.0
+        return self.prefix.hits / self.prefix.lookups
+
+    def _note_page_stats(self) -> None:
+        self.peak_mapped_pages = max(self.peak_mapped_pages,
+                                     self.blocks.mapped_pages)
+        self.peak_shared_pages = max(self.peak_shared_pages,
+                                     self.blocks.shared_pages)
+
+    def reset_metrics(self) -> None:
+        """Zero the serving counters and peaks for a steady-state
+        measurement window (e.g. after a warmup request has populated the
+        prefix trie).  The trie, page pool, and jitted closures stay warm;
+        only the accounting restarts."""
+        self.n_steps = self.n_syncs = self.n_generated = 0
+        self.prefill_tokens_computed = 0
+        self.n_cow_forks = 0
+        self.peak_mapped_pages = 0
+        self.peak_shared_pages = 0
+        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0}
+        if self.prefix is not None:
+            self.prefix.lookups = self.prefix.hits = 0
+            self.prefix.tokens_matched = 0
 
     # ------------------------------------------------------------ requests
     def add_request(self, prompt, max_new_tokens: int) -> int:
@@ -271,6 +354,7 @@ class ContinuousBatchingEngine:
             self.phase["sync"] += time.perf_counter() - t0
             return emitted
         window = self.scheduler.plan_window(self._lengths, self.sync_every)
+        self._note_page_stats()             # post-grant working set
         snapshot = sorted(self.scheduler.running.items())
         rem0 = {slot: req.remaining for slot, req in snapshot}
         bt = self._device_tables()
@@ -329,10 +413,18 @@ class ContinuousBatchingEngine:
                          emitted: List[Tuple[int, int]]) -> None:
         """Prefill admissions bucket-by-bucket: same-padded-length prompts
         run as one batch, and the whole bucket's pages land in a single
-        donated prefill+scatter+sample call."""
+        donated prefill+scatter+sample call.
+
+        Prefix-cache hits take the suffix path instead: any owed COW fork
+        runs first (one batched device page copy for all hits), then each
+        bucket of same-padded *suffix* lengths prefills only its uncached
+        positions through the paged pool.  Cold admissions keep the exact
+        contiguous prefill+scatter path of ``prefix_cache=False``."""
         t0 = time.perf_counter()
+        cold = [r for r in admitted if r.matched_tokens == 0]
+        hits = [r for r in admitted if r.matched_tokens > 0]
         groups: Dict[int, List[Request]] = {}
-        for req in admitted:
+        for req in cold:
             lp = -(-req.prompt_len // self.prefill_bucket) \
                 * self.prefill_bucket
             groups.setdefault(lp, []).append(req)
@@ -356,28 +448,107 @@ class ContinuousBatchingEngine:
             first, keys, self.pool = self._prefill_scatter(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 fresh, self.pool, jnp.asarray(page_ids))
-            self._slot_keys = self._slot_keys.at[slots].set(keys)
-            first = np.asarray(first)
-            for i, r in enumerate(reqs):
-                slot = r.slot
-                tok = int(first[i])
-                self._cur_tok[slot] = tok
-                self._lengths[slot] = r.prompt_len
-                self._remaining[slot] = r.max_new_tokens - 1
-                r.out.append(tok)
-                self.n_generated += 1
-                emitted.append((r.rid, tok))
-                if r.done:
-                    self._release(r)
-                else:
-                    # the decode write position may sit in a page past the
-                    # prompt's allocation (prompt length a page multiple)
-                    ok = self.blocks.ensure(slot, r.prompt_len + 1)
-                    assert ok, "admission reserved full-sequence capacity"
+            self._finish_prefill(reqs, slots, keys, first, emitted)
+        if hits:
+            self._cow_forks(hits)
+            self._hit_prefill(hits, emitted)
+        self._note_page_stats()
         self.phase["prefill"] += time.perf_counter() - t0
+
+    def _cow_forks(self, hits: List[Request]) -> None:
+        """Fork every shared page a hit's suffix prefill will write (only
+        a fully-cached prompt has one: its last page is recomputed at
+        position L-1 to seed the first token) and batch-copy the page
+        contents on device before any write lands."""
+        src, dst = [], []
+        for r in hits:
+            for idx in self.blocks.cow_targets(r.slot, r.prefill_start,
+                                               r.prompt_len):
+                pair = self.blocks.fork_page(r.slot, idx)
+                assert pair is not None, \
+                    "admission reserved the copy-on-write page"
+                src.append(pair[0])
+                dst.append(pair[1])
+            r.cow_pending = 0
+        if src:
+            self.n_cow_forks += len(src)
+            self.pool = self._copy_pages(
+                self.pool, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32))
+
+    def _hit_prefill(self, hits: List[Request],
+                     emitted: List[Tuple[int, int]]) -> None:
+        """Suffix-only prefill for prefix-cache hits, bucketed by padded
+        suffix length."""
+        groups: Dict[int, List[Request]] = {}
+        for req in hits:
+            ls = -(-(req.prompt_len - req.prefill_start)
+                   // self.prefill_bucket) * self.prefill_bucket
+            groups.setdefault(ls, []).append(req)
+        bt = self._device_tables()      # post-COW tables
+        for ls, reqs in sorted(groups.items()):
+            g = len(reqs)
+            toks = np.zeros((g, ls), np.int32)
+            starts = np.zeros(g, np.int32)
+            lens = np.zeros(g, np.int32)
+            slots = np.array([r.slot for r in reqs])
+            for i, r in enumerate(reqs):
+                s0 = r.prefill_start
+                toks[i, :r.prompt_len - s0] = r.prompt[s0:]
+                starts[i] = s0
+                lens[i] = r.prompt_len
+            fresh = jax.vmap(lambda r: jax.random.fold_in(self._key, r))(
+                jnp.asarray([r.rid for r in reqs], jnp.uint32))
+            first, keys, self.pool = self._suffix_prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(starts),
+                jnp.asarray(lens), fresh, self.pool,
+                bt[jnp.asarray(slots)])
+            self._finish_prefill(reqs, slots, keys, first, emitted)
+
+    def _finish_prefill(self, reqs: List[Request], slots, keys, first,
+                        emitted: List[Tuple[int, int]]) -> None:
+        """Common admission epilogue: install per-slot keys, emit each
+        request's first token, account computed prefill positions, and
+        grant the first decode write's page."""
+        self._slot_keys = self._slot_keys.at[slots].set(keys)
+        first = np.asarray(first)
+        for i, r in enumerate(reqs):
+            slot = r.slot
+            tok = int(first[i])
+            self._cur_tok[slot] = tok
+            self._lengths[slot] = r.prompt_len
+            self._remaining[slot] = r.max_new_tokens - 1
+            self.prefill_tokens_computed += r.prompt_len - r.prefill_start
+            if self.prefix is not None:
+                # publish the prompt's full pages (an existing trie chain
+                # dedupes; new nodes pin this slot's private pages)
+                n_full = r.prompt_len // self.page_size
+                self.prefix.insert(
+                    r.prompt, self.blocks.slot_page_ids(slot)[:n_full])
+            r.out.append(tok)
+            self.n_generated += 1
+            emitted.append((r.rid, tok))
+            if r.done:
+                self._release(r)
+            else:
+                # the decode write position may sit in a page past the
+                # prompt's allocation (prompt length a page multiple)
+                ok = self.blocks.ensure(slot, r.prompt_len + 1)
+                assert ok, "admission reserved full-sequence capacity"
 
     def _release(self, req: Request) -> None:
         slot = req.slot
+        if self.prefix is not None:
+            # publish the finished sequence's full pages before the decref:
+            # positions [0, L + gen - 1) hold KV for prompt + out[:-1]
+            # (the last sampled token is never fed back), and those pages
+            # are stable now — a later prompt extending this conversation
+            # prefix-matches them
+            seq = np.concatenate(
+                [req.prompt, np.asarray(req.out[:-1], np.int32)])
+            n_full = len(seq) // self.page_size
+            self.prefix.insert(
+                seq, self.blocks.slot_page_ids(slot)[:n_full])
         self.scheduler.evict(req)
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0

@@ -12,11 +12,12 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.serve.paging import BlockManager, pages_needed
+from repro.serve.prefix import PrefixCache
 
 
 class RequestState(enum.Enum):
@@ -34,10 +35,23 @@ class Request:
     state: RequestState = RequestState.WAITING
     slot: int = -1
     out: List[int] = dataclasses.field(default_factory=list)
+    # prefix-cache admission outcome (0 / cold when sharing is off):
+    # tokens covered by pages mapped read-only from the prefix trie, and
+    # the copy-on-write forks the engine still owes before prefill (a
+    # fully-cached prompt forks its last page to rewrite position L-1)
+    matched_tokens: int = 0
+    cow_pending: int = 0
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def prefill_start(self) -> int:
+        """First prompt position the engine must actually compute: the
+        matched prefix is skipped, but the last prompt position is always
+        recomputed — its logits seed the first generated token."""
+        return min(self.matched_tokens, self.prompt_len - 1)
 
     @property
     def total_len(self) -> int:
@@ -57,9 +71,11 @@ class Request:
 class Scheduler:
     """FIFO admission into ``max_slots`` decode slots backed by ``blocks``."""
 
-    def __init__(self, max_slots: int, blocks: BlockManager):
+    def __init__(self, max_slots: int, blocks: BlockManager,
+                 prefix: Optional[PrefixCache] = None):
         self.max_slots = max_slots
         self.blocks = blocks
+        self.prefix = prefix
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: List[Request] = []
@@ -86,33 +102,74 @@ class Scheduler:
         self.waiting.append(req)
 
     def _outstanding_pages(self) -> int:
-        """Pages the running set is still entitled to grow into.  Admission
-        must leave these uncommitted or a running slot could stall on page
-        exhaustion mid-generation."""
+        """*Fresh* pages the running set is still entitled to consume.
+        Admission must leave these uncommitted or a running slot could
+        stall on page exhaustion mid-generation.
+
+        Counting ``pages_needed(total_len)`` per request would double-count
+        under prefix sharing: pages mapped read-only into a slot cost the
+        pool nothing, yet sole-ownership accounting reserves fresh pages
+        for them and starves admission.  ``slot_pages`` already includes
+        the shared mappings, so the difference is exactly the private
+        growth — plus any copy-on-write fork the engine still owes (a
+        fork consumes one fresh page while the shared original lives on).
+        """
         return sum(
             pages_needed(r.total_len, self.blocks.page_size)
-            - self.blocks.slot_pages(r.slot)
+            - self.blocks.slot_pages(r.slot) + r.cow_pending
             for r in self.running.values())
 
     def admit(self) -> List[Request]:
         """Admit waiting requests (FIFO, no head-of-line bypass) while a
         slot is free and the pool can hold their full sequence on top of
-        what the running set is already entitled to."""
+        what the running set is already entitled to.
+
+        With a :class:`PrefixCache` installed, the longest cached full-page
+        prefix of each prompt is mapped read-only into the new slot
+        (refcount++, no fresh pages) and only the *private* remainder —
+        uncached prompt pages, decode growth, and the COW fork of a
+        fully-cached prompt's last page — is charged against the free
+        pool.  When pinned-but-unmapped trie pages are all that stand
+        between a request and admission, the trie reclaims them LRU-first.
+        """
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            need = pages_needed(req.total_len, self.blocks.page_size)
-            if self.blocks.free_pages - self._outstanding_pages() < need:
+            need_total = pages_needed(req.total_len, self.blocks.page_size)
+            pages: List[int] = []
+            matched = 0
+            if self.prefix is not None:
+                pages, matched = self.prefix.lookup(req.prompt)
+            cow = 1 if matched and matched >= req.prompt_len else 0
+            need_private = need_total - len(pages) + cow
+            # map the match before any reclaim: table refs protect the
+            # matched chain from being recycled by its own unpinning
+            slot = self._free_slots[-1]
+            if pages:
+                ok = self.blocks.map_shared(slot, pages)
+                assert ok, "submit() bounded the row; a full-page match "\
+                    "of the prompt always fits it"
+            avail = self.blocks.free_pages - self._outstanding_pages()
+            if need_private > avail and self.prefix is not None:
+                avail += self.prefix.reclaim(need_private - avail)
+            if need_private > avail:
+                self.blocks.release(slot)   # undo the tentative mapping
                 break                       # FIFO: wait for evictions
-            slot = self._free_slots.pop()
-            ok = self.blocks.allocate(
-                slot, pages_needed(req.prompt_len, self.blocks.page_size))
-            assert ok
+            self._free_slots.pop()
+            priv = pages_needed(req.prompt_len, self.blocks.page_size) \
+                - len(pages)
+            if priv > 0:
+                ok = self.blocks.allocate(slot, priv)
+                assert ok
             req.slot = slot
+            req.matched_tokens = matched
+            req.cow_pending = cow
             req.state = RequestState.RUNNING
             self.running[slot] = req
             self.waiting.popleft()
             admitted.append(req)
+            if self.prefix is not None:
+                self.prefix.record(matched)
         return admitted
 
     # ------------------------------------------------- decode-window planning
@@ -151,9 +208,11 @@ class Scheduler:
         return window
 
     def evict(self, req: Request) -> None:
-        """Release a finished request's slot and pages."""
+        """Release a finished request's slot: every page is decref'd —
+        pages still shared with other slots or pinned by the prefix cache
+        stay live, the rest return to the free list."""
         req.state = RequestState.FINISHED
-        self.blocks.free_slot(req.slot)
+        self.blocks.release(req.slot)
         del self.running[req.slot]
         self._free_slots.append(req.slot)
         req.slot = -1

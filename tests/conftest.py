@@ -6,3 +6,7 @@ def pytest_configure(config):
         "markers",
         "slow: multi-minute subprocess compile tests (deselect with "
         "-m 'not slow')")
+    config.addinivalue_line(
+        "markers",
+        "property: hypothesis state-machine suites (CI re-runs them with "
+        "a fixed seed and a higher example count)")

@@ -6,6 +6,8 @@ import pytest
 pytest.importorskip(
     "hypothesis",
     reason="hypothesis not installed (pip install -e '.[test]')")
+
+pytestmark = pytest.mark.property
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ALL_FORMATS, get_format, mx_dequantize, mx_quantize,

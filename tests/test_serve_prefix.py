@@ -1,0 +1,286 @@
+"""Prefix sharing + copy-on-write: token identity and page safety.
+
+The load-bearing guarantee: turning the prefix cache on changes *which*
+pages are computed and stored, never the tokens served.  Requests sharing
+a common system prompt must produce bit-identical greedy outputs with the
+prefix cache on, off, and solo through the contiguous-cache engine — for
+every MX element format x both conversion modes, mixed per-role policies,
+per-layer policy tables, and the unquantized cache (dense attention).
+
+Under MX this works because a page's quantized KV bytes are a
+deterministic function of the token prefix (the trie's dedupe is exact),
+and both the suffix prefill and the quantize-aware contiguous prefill
+attend the dequantized cache through the same dense kernel.
+
+Also locked down here: the copy-on-write path (fully-cached page-aligned
+prompts fork the canonical page instead of writing through it), eviction
+safety (reclaiming trie pins never recycles a page another slot still
+maps), and the scheduler capacity win (shared prefixes admit more
+concurrent requests from the same pool).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.formats import ALL_FORMATS
+from repro.models import Model, load_reduced
+from repro.models.config import (PolicyTable, QuantPolicy, QuantSpec,
+                                 apply_policy_table)
+from repro.serve import (BlockManager, ContinuousBatchingEngine,
+                         GenerationConfig, PrefixCache, Request, Scheduler,
+                         ServeEngine)
+
+MIXED = QuantPolicy.parse("kv_key=int8@32:ocp,kv_value=e2m1@32:ocp")
+
+NEW = 4
+PAGE = 8
+SLOTS = 3          # < number of requests: waves + slot reuse on path
+PREFIX_LEN = 19    # shared system prompt: 2 full pages + a partial
+TAILS = [3, 7, 3, 7, 7, 3, 7, 3]   # 2 distinct lengths bounds solo cost
+
+
+def _prompts(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=PREFIX_LEN).astype(np.int32)
+    return [np.concatenate([prefix, rng.integers(0, vocab, size=t)
+                            .astype(np.int32)]) for t in TAILS]
+
+
+def _serve(cfg, params, prompts, prefix_cache):
+    model = Model(cfg)
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=SLOTS, page_size=PAGE,
+        max_len=max(len(p) for p in prompts) + NEW + 1,
+        prefix_cache=prefix_cache)
+    rids = [eng.add_request(p, NEW) for p in prompts]
+    outs = eng.run()
+    return eng, [outs[r] for r in rids]
+
+
+def _assert_identity(cfg, *, solo=False):
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg.vocab)
+    eng_off, off = _serve(cfg, params, prompts, False)
+    eng_on, on = _serve(cfg, params, prompts, True)
+    for got, ref in zip(on, off):
+        np.testing.assert_array_equal(got, ref)
+    # sharing actually happened: later waves matched the cached prefix
+    # and skipped its full pages
+    assert eng_on.prefix.hits > 0
+    assert eng_on.prefill_tokens_computed < eng_off.prefill_tokens_computed
+    if solo:
+        solos = {}
+        for p, got in zip(prompts, on):
+            n = p.shape[0]
+            if n not in solos:
+                solos[n] = ServeEngine(model, params, max_len=n + NEW + 2)
+            ref = solos[n].generate({"tokens": np.asarray(p)[None, :]},
+                                    GenerationConfig(max_new_tokens=NEW))[0]
+            np.testing.assert_array_equal(got, ref)
+    return eng_on
+
+
+@pytest.mark.parametrize("mode", ["ocp", "paper"])
+@pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
+def test_prefix_matches_off_all_formats(fmt, mode):
+    """Prefix-on == prefix-off, all six MX formats x both modes."""
+    kv = QuantSpec(fmt, mode)
+    cfg = load_reduced("chatglm3_6b",
+                       mx=QuantPolicy(kv_key=kv, kv_value=kv))
+    _assert_identity(cfg)
+
+
+def test_prefix_matches_solo_anchor():
+    """One cell anchored against solo contiguous serving (the off-engine
+    legs of the other cells are tied to solo by test_serve_continuous)."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    _assert_identity(cfg, solo=True)
+
+
+def test_prefix_matches_off_mixed_roles():
+    """INT8 keys + E2M1 bit-packed values share pages exactly."""
+    _assert_identity(load_reduced("chatglm3_6b", mx=MIXED))
+
+
+def test_prefix_matches_off_policy_table():
+    """Non-uniform per-layer policies: every layer's pool dedupes on the
+    same trie chain."""
+    table = PolicyTable("kv=int8@32:ocp",
+                        {1: "kv_key=e2m1@32:ocp,kv_value=e4m3@32:ocp"})
+    _assert_identity(apply_policy_table(load_reduced("chatglm3_6b"), table))
+
+
+def test_prefix_matches_off_fp_cache():
+    """Unquantized pages (dense attention): fp cache round-trips exactly,
+    so prefix sharing is bit-safe there too."""
+    _assert_identity(load_reduced("chatglm3_6b"), solo=True)
+
+
+# =============================================================================
+# copy-on-write
+# =============================================================================
+def test_cow_forks_fire_and_stay_identical():
+    """Fully-cached page-aligned prompts take the COW path: the engine
+    forks the last shared page before recomputing the final position into
+    it, and the served tokens still match the prefix-off engine."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab, size=2 * PAGE).astype(np.int32)
+    # 6 identical page-aligned prompts + 1 longer: dedupe, COW, suffix
+    prompts = [base.copy() for _ in range(6)] + \
+        [np.concatenate([base,
+                         rng.integers(0, cfg.vocab, size=3).astype(np.int32)])]
+    eng_off, off = _serve(cfg, params, prompts, False)
+    eng_on, on = _serve(cfg, params, prompts, True)
+    for got, ref in zip(on, off):
+        np.testing.assert_array_equal(got, ref)
+    assert eng_on.n_cow_forks > 0
+    assert eng_on.prefix.hits > 0
+    # every fully-cached admission recomputed exactly one position
+    assert eng_on.prefill_tokens_computed < eng_off.prefill_tokens_computed
+    assert eng_off.n_cow_forks == 0
+
+
+# =============================================================================
+# eviction safety: decref'd shared pages never recycle under a reader
+# =============================================================================
+def test_reclaim_never_recycles_mapped_pages():
+    """Dropping a trie pin while another slot still maps the page must not
+    return it to the free list; allocation can never hand it out again."""
+    bm = BlockManager(num_pages=8, page_size=4, max_slots=2,
+                      max_pages_per_slot=4)
+    pc = PrefixCache(bm)
+    tokens = np.arange(8, dtype=np.int32)         # 2 full pages
+    assert bm.allocate(0, 2)
+    ids = bm.slot_page_ids(0)
+    assert pc.insert(tokens, ids) == 2
+    bm.release(0)                                  # writer evicted: pinned
+    pages, matched = pc.lookup(tokens)
+    assert pages == ids and matched == 8
+    assert bm.map_shared(1, pages)                 # reader slot maps them
+    # pressure: reclaim wants 2 pages, but the trie's leaves are still
+    # table-mapped -> unpinning them frees nothing
+    assert pc.reclaim(2) == 0
+    assert pc.pinned_pages == 0                    # pins are gone...
+    assert all(bm.page_refcount(p) == 1 for p in ids)   # ...pages live
+    # fresh allocations must not alias the reader's mapping
+    assert bm.allocate(0, min(bm.free_pages, 4))
+    assert not set(bm.slot_page_ids(0)) & set(ids)
+    bm.release(1)                                  # last reader frees them
+    assert all(bm.page_refcount(p) == 0 for p in ids)
+
+
+def test_engine_eviction_mid_window_keeps_identity():
+    """Requests finishing at different steps while sharing pinned pages:
+    evictions decref mid-run and outputs still match prefix-off."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=e4m3@32:ocp"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prefix = rng.integers(0, cfg.vocab, size=2 * PAGE).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab, size=t)
+                               .astype(np.int32)]) for t in [1, 5, 9, 1, 5, 9]]
+    budgets = [2, 6, 3, 5, 2, 4]                   # staggered finishes
+
+    def run(pc):
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=SLOTS, page_size=PAGE,
+            max_len=max(len(p) for p in prompts) + max(budgets) + 1,
+            prefix_cache=pc)
+        rids = [eng.add_request(p, b) for p, b in zip(prompts, budgets)]
+        outs = eng.run()
+        return eng, [outs[r] for r in rids]
+
+    eng_off, off = run(False)
+    eng_on, on = run(True)
+    for got, ref in zip(on, off):
+        np.testing.assert_array_equal(got, ref)
+    assert eng_on.prefix.hits > 0
+
+
+# =============================================================================
+# scheduler capacity: shared prefixes admit more from the same pool
+# =============================================================================
+def _submit(sch, rids, prompt_len, new=NEW, vocab=1000, seed=3):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in rids:
+        p = rng.integers(0, vocab, size=prompt_len).astype(np.int32)
+        reqs.append(Request(rid=rid, prompt=p, max_new_tokens=new))
+        sch.submit(reqs[-1])
+    return reqs
+
+
+def test_admission_capacity_improves_with_shared_prefix():
+    """Same pool, same prompts: a warmed prefix cache turns per-request
+    page demand from 3 private pages into 1, so admission goes from two
+    concurrent requests to a full house."""
+    prefix = np.arange(16, dtype=np.int32)         # 2 full pages
+
+    def mk(with_prefix):
+        bm = BlockManager(num_pages=8, page_size=8, max_slots=4,
+                          max_pages_per_slot=3)
+        pc = PrefixCache(bm) if with_prefix else None
+        return bm, pc, Scheduler(max_slots=4, blocks=bm, prefix=pc)
+
+    def traffic(sch, seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for rid in range(4):
+            p = np.concatenate(
+                [prefix, rng.integers(0, 1000, size=1).astype(np.int32)])
+            out.append(Request(rid=rid, prompt=p, max_new_tokens=NEW))
+            sch.submit(out[-1])
+        return out
+
+    # --- warmed prefix cache ---------------------------------------------
+    bm, pc, sch = mk(True)
+    warm = Request(rid=99, prompt=prefix.copy(), max_new_tokens=1)
+    sch.submit(warm)
+    assert sch.admit() == [warm]
+    pc.insert(warm.prompt, bm.slot_page_ids(warm.slot)[:2])
+    sch.evict(warm)                                # pages survive via pins
+    admitted = sch.admit()                         # nothing waiting yet
+    traffic(sch, seed=4)
+    admitted = sch.admit()
+    assert len(admitted) == 4                      # full house
+    assert all(r.matched_tokens == 16 for r in admitted)
+    assert bm.shared_pages == 2                    # one canonical chain
+    # --- no prefix cache: 3 private pages each, so the same pool (5 free
+    # after the warm chain's 2 stay pinned there, 7 here) fits only 2 ----
+    bm2, _, sch2 = mk(False)
+    traffic(sch2, seed=4)
+    admitted2 = sch2.admit()
+    assert len(admitted2) == 2
+    assert bm2.shared_pages == 0
+
+
+def test_scheduler_backs_out_partial_admission():
+    """When the pool can't cover a hit's private suffix even after
+    reclaim, admission must back out the tentative shared mapping."""
+    bm = BlockManager(num_pages=5, page_size=8, max_slots=2,
+                      max_pages_per_slot=4)
+    pc = PrefixCache(bm)
+    sch = Scheduler(max_slots=2, blocks=bm, prefix=pc)
+    warm = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                   max_new_tokens=8)
+    sch.submit(warm)
+    assert sch.admit() == [warm]
+    pc.insert(warm.prompt, bm.slot_page_ids(warm.slot)[:1])
+    # warm keeps running (1 page mapped + 1 growth reserve): 2 of the 3
+    # remaining pages are spendable.  The hit matches 1 shared page but
+    # its private suffix needs 3 more; reclaim can't help (the chain is
+    # still table-mapped, unpinning frees nothing) -> back out.
+    big = Request(rid=1, prompt=np.concatenate(
+        [np.arange(8), np.arange(9)]).astype(np.int32), max_new_tokens=8)
+    sch.submit(big)
+    assert sch.admit() == []
+    assert big.slot == -1
+    # the backed-out mapping left no refcounts behind (the pin was spent
+    # by the failed reclaim; warm's own table ref remains)
+    assert bm.page_refcount(bm.slot_page_ids(warm.slot)[0]) == 1
+    assert bm.mapped_pages == bm.slot_pages(warm.slot)
+    assert pc.pinned_pages == 0
