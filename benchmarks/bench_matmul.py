@@ -1,49 +1,120 @@
-"""MX-weight matmul vs f32 matmul: wall time (CPU; kernel correctness path)
-and the weight-byte reduction that drives the TPU memory-roofline win."""
+"""Weight-resident MX matmul: fused dequant-in-VMEM kernel vs the
+dequant-then-einsum fallback, per element format.
+
+Measures, at a decode-like skinny-M shape, (a) wall time of the fused
+Pallas kernel (codes stay bit-packed in memory; tiles unpacked + scaled
+in VMEM) vs the fallback that materializes the f32 weight, (b) the weight
+HBM bytes each format stores (codes + E8M0 scales, ``spec.storage_nbytes``
+accounting), and (c) the max |fused - einsum| output difference.  Wall
+times are CPU-container numbers (interpret mode, the correctness path);
+the HBM byte column is what drives the TPU memory-roofline win.
+
+Writes the ``bench_matmul/v1`` JSON artifact consumed by
+``validate_bench_matmul.py`` (CI bench-smoke job):
+
+    PYTHONPATH=src python benchmarks/bench_matmul.py --smoke
+    PYTHONPATH=src python benchmarks/bench_matmul.py --full
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mx_quantize
-from repro.core.formats import get_format
-from repro.kernels.ref import mx_matmul_2d_ref
+from repro.core import MXWeight, QuantSpec
+from repro.core.formats import ALL_FORMATS
+from repro.kernels.ops import mx_matmul_resident
 
-M, K, N = 256, 2048, 2048
-REPS = 10
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_matmul.json"
+FULL = dict(m=8, k=2048, n=2048, reps=20)
+SMOKE = dict(m=4, k=256, n=128, reps=3)
+MODE = "ocp"
 
 
-def _time(fn, *args) -> float:
+def _time(fn, *args, reps: int) -> float:
     fn(*args).block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(REPS):
+    for _ in range(reps):
         fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / REPS * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> List[Tuple[str, float, str]]:
+def _impl_fn(mw: MXWeight, impl: str):
+    # close over the static MXWeight metadata; jit over the array leaves
+    def fn(a, codes, scales):
+        w = MXWeight(codes, scales, mw.fmt, mw.mode, mw.block,
+                     mw.packed, mw.k, mw.n)
+        return mx_matmul_resident(a, w, impl)
+    return jax.jit(fn)
+
+
+def run(smoke: bool = True, out_path: Path = DEFAULT_OUT
+        ) -> List[Tuple[str, float, str]]:
+    sizes = SMOKE if smoke else FULL
+    m, k, n, reps = sizes["m"], sizes["k"], sizes["n"], sizes["reps"]
     rng = np.random.default_rng(2)
-    a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
-    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32) * 0.05)
+
     rows = []
-    base = _time(jax.jit(lambda x, y: x @ y), a, w)
-    rows.append(("matmul_f32_base", base, f"{2*M*K*N/base/1e3:.1f}GFLOP/s"))
-    for fmt in ("e4m3", "int8", "e2m1"):
-        mx = mx_quantize(w, fmt=fmt, mode="ocp", axis=0)
-        fn = jax.jit(lambda x, c, s, f=fmt:
-                     mx_matmul_2d_ref(x, c, s, fmt=f, mode="ocp"))
-        us = _time(fn, a, mx.codes, mx.scales)
-        f = get_format(fmt)
-        wr = 32 / f.bits_per_element()
-        rows.append((f"matmul_mx_{fmt}", us,
-                     f"weightbytes/4={wr:.2f}x_smaller_vs_f32"))
+    doc_rows = []
+    base_us = _time(jax.jit(lambda x, y: x @ y), a, w, reps=reps)
+    rows.append(("matmul_f32_base", base_us,
+                 f"{2 * m * k * n / base_us / 1e3:.1f}GFLOP/s"))
+    for f in ALL_FORMATS:
+        fmt = f.name
+        spec = QuantSpec(fmt, MODE, 32, True)
+        mw = MXWeight.quantize(w, spec)
+        fused = _impl_fn(mw, "fused")
+        eins = _impl_fn(mw, "einsum")
+        fused_us = _time(fused, a, mw.codes, mw.scales, reps=reps)
+        einsum_us = _time(eins, a, mw.codes, mw.scales, reps=reps)
+        diff = float(jnp.max(jnp.abs(fused(a, mw.codes, mw.scales)
+                                     - eins(a, mw.codes, mw.scales))))
+        speedup = einsum_us / fused_us
+        bpw = mw.nbytes * 8 / (k * n)
+        doc_rows.append({
+            "spec": str(spec),
+            "fmt": fmt,
+            "mode": MODE,
+            "packed": mw.packed,
+            "weight_bytes": mw.nbytes,
+            "bits_per_weight": bpw,
+            "fused_us": fused_us,
+            "einsum_us": einsum_us,
+            "speedup": speedup,
+            "max_abs_diff": diff,
+        })
+        rows.append((f"matmul_mx_{fmt}_fused", fused_us,
+                     f"{speedup:.2f}x_vs_einsum_{bpw:.2f}bits/w"))
+    doc = {
+        "schema": "bench_matmul/v1",
+        "m": m, "k": k, "n": n, "reps": reps,
+        "dtype": "float32",
+        "baseline_f32_us": base_us,
+        "rows": doc_rows,
+    }
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (CI bench-smoke job)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=not args.full, out_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {args.out}")
+
+
 if __name__ == "__main__":
-    for name, us, d in run():
-        print(f"{name},{us:.1f},{d}")
+    main()

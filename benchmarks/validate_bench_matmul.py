@@ -1,0 +1,173 @@
+"""Validate BENCH_matmul.json against the bench_matmul/v1 schema (dep-free).
+
+    python benchmarks/validate_bench_matmul.py [BENCH_matmul.json]
+
+Beyond field typing (unknown fields are schema drift and fail, like the
+other bench validators), this re-derives the claims the artifact makes:
+
+  * weight_bytes must equal the ``spec.storage_nbytes`` accounting —
+    packed code bytes for K rows (2/byte for 4-bit, 4/3-bytes for 6-bit,
+    1/byte for 8-bit) plus one E8M0 scale byte per 32 rows, per column —
+    recomputed here from the row's spec string alone;
+  * bits_per_weight and speedup must match the row's own numbers;
+  * every row must show fused >= dequant-einsum throughput (speedup >= 1)
+    at equal results (max_abs_diff small relative to the f32 outputs);
+  * all six element formats must be present exactly once.
+
+Exits nonzero with a per-field report.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "bench_matmul/v1"
+TOP_FIELDS = {
+    "schema": str,
+    "m": int,
+    "k": int,
+    "n": int,
+    "reps": int,
+    "dtype": str,
+    "baseline_f32_us": float,
+    "rows": list,
+}
+ROW_FIELDS = {
+    "spec": str,
+    "fmt": str,
+    "mode": str,
+    "packed": bool,
+    "weight_bytes": int,
+    "bits_per_weight": float,
+    "fused_us": float,
+    "einsum_us": float,
+    "speedup": float,
+    "max_abs_diff": float,
+}
+KNOWN_FMTS = ("e5m2", "e4m3", "e3m2", "e2m3", "e2m1", "int8")
+CODE_BITS = {"e5m2": 8, "e4m3": 8, "int8": 8, "e3m2": 6, "e2m3": 6,
+             "e2m1": 4}
+BLOCK = 32
+# |fused - einsum| tolerance: both paths accumulate f32 over K; tile-order
+# differences stay within a few ulps of the output magnitude
+DIFF_TOL = 1e-3
+
+
+def _fields(errs, obj, fields, where):
+    for field, ty in fields.items():
+        if field not in obj:
+            errs.append(f"{where}: missing field {field!r}")
+        elif ty is float and isinstance(obj[field], int) \
+                and not isinstance(obj[field], bool):
+            pass                               # ints are acceptable floats
+        elif ty is not bool and isinstance(obj[field], bool):
+            errs.append(f"{where}.{field}: expected {ty.__name__}, got bool")
+        elif not isinstance(obj[field], ty):
+            errs.append(f"{where}.{field}: expected {ty.__name__}, "
+                        f"got {type(obj[field]).__name__}")
+    for field in sorted(set(obj) - set(fields)):
+        errs.append(f"{where}: unknown field {field!r} (schema drift — "
+                    f"extend the validator in the same PR)")
+
+
+def _code_nbytes(fmt: str, k: int) -> int:
+    bits = CODE_BITS[fmt]
+    if bits <= 4:
+        return (k + 1) // 2
+    if bits <= 6:
+        return (k + 3) // 4 * 3
+    return k
+
+
+def _weight_nbytes(fmt: str, packed: bool, k: int, n: int) -> int:
+    kp = -(-k // BLOCK) * BLOCK
+    code = _code_nbytes(fmt, kp) if packed else kp
+    return code * n + (kp // BLOCK) * n
+
+
+def check(doc) -> list:
+    errs = []
+    _fields(errs, doc, TOP_FIELDS, "top-level")
+    if errs:
+        return errs
+    if doc["schema"] != SCHEMA:
+        errs.append(f"schema: expected {SCHEMA!r}, got {doc['schema']!r}")
+    for dim in ("m", "k", "n", "reps"):
+        if doc[dim] < 1:
+            errs.append(f"{dim}: must be >= 1, got {doc[dim]}")
+    if doc["k"] % BLOCK:
+        errs.append(f"k: must be a multiple of the scale block {BLOCK}, "
+                    f"got {doc['k']}")
+    k, n = doc["k"], doc["n"]
+    seen = []
+    for i, row in enumerate(doc["rows"]):
+        where = f"rows[{i}]"
+        _fields(errs, row, ROW_FIELDS, where)
+        if set(ROW_FIELDS) - set(row):
+            continue
+        fmt = row["fmt"]
+        if fmt not in KNOWN_FMTS:
+            errs.append(f"{where}.fmt: unknown format {fmt!r}")
+            continue
+        seen.append(fmt)
+        if not row["spec"].startswith(fmt):
+            errs.append(f"{where}.spec: {row['spec']!r} does not name "
+                        f"fmt {fmt!r}")
+        if row["mode"] not in ("paper", "ocp"):
+            errs.append(f"{where}.mode: {row['mode']!r}")
+        if row["packed"] != (CODE_BITS[fmt] < 8):
+            errs.append(f"{where}.packed: {row['packed']} but {fmt} has "
+                        f"{CODE_BITS[fmt]}-bit codes (sub-byte formats "
+                        f"pack, 8-bit formats store 1 code/byte)")
+        want = _weight_nbytes(fmt, row["packed"], k, n)
+        if row["weight_bytes"] != want:
+            errs.append(f"{where}.weight_bytes: claimed "
+                        f"{row['weight_bytes']}, storage_nbytes accounting "
+                        f"gives {want} for {fmt} at K={k}, N={n}")
+        bpw = row["weight_bytes"] * 8 / (k * n)
+        if abs(row["bits_per_weight"] - bpw) > 1e-6:
+            errs.append(f"{where}.bits_per_weight: claimed "
+                        f"{row['bits_per_weight']}, re-derived {bpw}")
+        if row["fused_us"] <= 0 or row["einsum_us"] <= 0:
+            errs.append(f"{where}: non-positive wall time")
+            continue
+        speedup = row["einsum_us"] / row["fused_us"]
+        if abs(row["speedup"] - speedup) > 1e-6 * max(1.0, speedup):
+            errs.append(f"{where}.speedup: claimed {row['speedup']}, "
+                        f"einsum_us/fused_us = {speedup}")
+        if speedup < 1.0:
+            errs.append(f"{where}: fused slower than dequant-einsum "
+                        f"({row['fused_us']:.1f}us vs "
+                        f"{row['einsum_us']:.1f}us) — the fused kernel "
+                        f"must win at equal results")
+        if row["max_abs_diff"] > DIFF_TOL:
+            errs.append(f"{where}.max_abs_diff: {row['max_abs_diff']} "
+                        f"exceeds {DIFF_TOL} — fused and einsum paths "
+                        f"disagree beyond accumulation-order noise")
+    if sorted(seen) != sorted(KNOWN_FMTS):
+        errs.append(f"rows: expected all six formats exactly once, "
+                    f"got {seen}")
+    return errs
+
+
+def main() -> None:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(
+        "BENCH_matmul.json")
+    doc = json.loads(path.read_text())
+    errs = check(doc)
+    if errs:
+        print(f"{path}: {len(errs)} error(s)")
+        for e in errs:
+            print(f"  - {e}")
+        sys.exit(1)
+    rows = doc["rows"]
+    best = max(rows, key=lambda r: r["speedup"])
+    print(f"{path}: OK — schema {SCHEMA}, {len(rows)} formats at "
+          f"M={doc['m']} K={doc['k']} N={doc['n']}; fused/einsum speedup "
+          f"{min(r['speedup'] for r in rows):.2f}-"
+          f"{best['speedup']:.2f}x (best {best['fmt']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,5 +12,11 @@ from repro.core.convert import (  # noqa: F401
     mx_dequantize, mx_error_bound, mx_quantize, pow2_f32, quantize_dequantize,
     scale_to_f32, shared_scale,
 )
-from repro.core.pack import pack_codes, packed_nbytes, unpack_codes  # noqa: F401
+from repro.core.pack import (  # noqa: F401
+    pack_codes, pack_codes_rows, packed_nbytes, unpack_codes,
+    unpack_codes_rows,
+)
+from repro.core.mx_weight import (  # noqa: F401
+    MXWeight, mx_weight_nbytes, params_nbytes,
+)
 from repro.core import metrics  # noqa: F401

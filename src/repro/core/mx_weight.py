@@ -1,0 +1,124 @@
+"""Weight-resident MX storage: the serve-time weight container.
+
+An ``MXWeight`` holds a matmul weight W (..., K, N) entirely in MX form:
+
+  * ``codes``  uint8 — element codes along the contraction axis (axis -2),
+    bit-packed via ``pack_codes_rows`` when the spec is packed and sub-byte
+    (E2M1: 2 codes/byte; E3M2/E2M3: 4 codes/3 bytes), so HBM holds
+    ``spec.storage_nbytes(K)`` byte rows instead of K fp rows.
+  * ``scales`` uint8 — E8M0 shared scales, one per ``block`` rows:
+    (..., K/32, N).
+
+fp weights are never materialized back to HBM: the fused matmul kernel
+(``kernels.mx_matmul``) unpacks code tiles and applies scales in VMEM inside
+the tile loop.  Leading batch axes (scan-stacked layers, MoE expert dims)
+ride along — MXWeight is a registered pytree with static format metadata,
+so ``lax.scan`` slicing and ``tree_map`` indexing preserve the spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.convert import MXArray, mx_dequantize, mx_quantize
+from repro.core.pack import pack_codes_rows, unpack_codes_rows
+from repro.core.spec import QuantSpec, as_spec
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MXWeight:
+    """A weight-resident MX matmul operand: packed codes + E8M0 scales."""
+    codes: Array             # (..., storage_nbytes(Kp), N) u8 if packed
+    #                          else (..., Kp, N) u8
+    scales: Array            # (..., Kp // block, N) u8
+    fmt: str                 # static: element format name
+    mode: str                # static: "paper" | "ocp"
+    block: int               # static: codes per shared scale
+    packed: bool             # static: sub-byte codes bit-packed along K
+    k: int                   # static: logical (unpadded) contraction length
+    n: int                   # static: output width
+
+    def tree_flatten(self):
+        return ((self.codes, self.scales),
+                (self.fmt, self.mode, self.block, self.packed,
+                 self.k, self.n))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def spec(self) -> QuantSpec:
+        return QuantSpec(self.fmt, self.mode, self.block, self.packed)
+
+    @property
+    def kp(self) -> int:
+        """Contraction length padded up to a block multiple."""
+        return self.scales.shape[-2] * self.block
+
+    @property
+    def nbytes(self) -> int:
+        """HBM bytes as stored (codes + scales, one byte per element)."""
+        return int(np.prod(self.codes.shape) + np.prod(self.scales.shape))
+
+    @classmethod
+    def quantize(cls, w: Array, spec) -> "MXWeight":
+        """Quantize W (..., K, N) along the contraction axis (-2)."""
+        spec = as_spec(spec)
+        if w.ndim < 2:
+            raise ValueError(f"MXWeight needs a (..., K, N) weight, "
+                             f"got shape {tuple(w.shape)}")
+        k, n = w.shape[-2], w.shape[-1]
+        mx = mx_quantize(w.astype(jnp.float32), spec, axis=w.ndim - 2)
+        codes = mx.codes
+        packed = bool(spec.packed and spec.format.code_bits < 8)
+        if packed:
+            codes = pack_codes_rows(codes, spec.fmt)
+        return cls(codes=codes, scales=mx.scales, fmt=spec.fmt,
+                   mode=spec.mode, block=spec.block, packed=packed,
+                   k=int(k), n=int(n))
+
+    def unpacked_codes(self) -> Array:
+        """Codes with the bit-packing undone: (..., Kp, N) u8."""
+        if not self.packed:
+            return self.codes
+        return unpack_codes_rows(self.codes, self.fmt, self.kp)
+
+    def dequantize(self) -> Array:
+        """Materialize the f32 weight (..., K, N) — fallback path only."""
+        codes = self.unpacked_codes()
+        mx = MXArray.from_spec(
+            codes, self.scales,
+            QuantSpec(self.fmt, self.mode, self.block, packed=False),
+            orig_len=self.k, axis=codes.ndim - 2)
+        return mx_dequantize(mx)
+
+    def take(self, i: int) -> "MXWeight":
+        """Slice one entry off the leading batch axis (e.g. one MoE expert)."""
+        return dataclasses.replace(self, codes=self.codes[i],
+                                   scales=self.scales[i])
+
+
+def mx_weight_nbytes(k: int, n: int, spec) -> int:
+    """Analytic HBM bytes for one (K, N) weight stored per ``spec``.
+
+    ``storage_nbytes`` bytes of codes per column plus one E8M0 byte per
+    block of 32 rows — e.g. packed E2M1 at block 32 is 4 + 8/32 = 4.25
+    bits/weight vs 32 for f32.
+    """
+    spec = as_spec(spec)
+    kp = -(-k // spec.block) * spec.block
+    return spec.storage_nbytes(kp) * n + (kp // spec.block) * n
+
+
+def params_nbytes(params) -> int:
+    """Total bytes of a param pytree as stored (MXWeight leaves flatten to
+    their uint8 codes/scales; fp leaves count at their dtype width)."""
+    return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(params)))

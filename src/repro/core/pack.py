@@ -54,6 +54,55 @@ def pack_codes(codes: jax.Array, fmt: MXFormat | str) -> jax.Array:
         lead + (n // 4 * 3,)).astype(_U8)
 
 
+def pack_codes_rows(codes: jax.Array, fmt: MXFormat | str) -> jax.Array:
+    """Pack along axis -2 (a weight's contraction axis).
+
+    codes (..., K, N) -> (..., packed_nbytes(K), N): byte r of the output
+    holds the same codes as byte r of ``pack_codes`` applied to each column,
+    so a row slice [r0:r0+packed_nbytes(BK)] is exactly the packed form of
+    code rows [k0:k0+BK] when k0/BK are multiples of 4 — which lets the
+    matmul kernel fetch packed tiles with a plain BlockSpec and unpack them
+    in VMEM.
+    """
+    f = get_format(fmt)
+    if f.code_bits == 8:
+        return codes
+    c = codes.astype(jnp.uint32)
+    lead, (k, n) = codes.shape[:-2], codes.shape[-2:]
+    if f.code_bits <= 4:                     # 2 rows per byte row
+        assert k % 2 == 0, "4-bit packing needs an even code-row count"
+        pair = c.reshape(lead + (k // 2, 2, n))
+        out = pair[..., 0, :] | (pair[..., 1, :] << 4)
+        return out.astype(_U8)
+    # 6-bit: 4 code rows -> 3 byte rows, little-endian bit order
+    assert k % 4 == 0, "6-bit packing needs a code-row count multiple of 4"
+    quad = c.reshape(lead + (k // 4, 4, n))
+    w = (quad[..., 0, :] | (quad[..., 1, :] << 6) | (quad[..., 2, :] << 12)
+         | (quad[..., 3, :] << 18))          # 24 bits per column
+    b = jnp.stack([w & 0xFF, (w >> 8) & 0xFF, (w >> 16) & 0xFF], axis=-2)
+    return b.reshape(lead + (k // 4 * 3, n)).astype(_U8)
+
+
+def unpack_codes_rows(packed: jax.Array, fmt: MXFormat | str,
+                      k: int) -> jax.Array:
+    """Inverse of ``pack_codes_rows``: (..., nbytes, N) -> (..., k, N)."""
+    f = get_format(fmt)
+    if f.code_bits == 8:
+        return packed
+    p = packed.astype(jnp.uint32)
+    lead, n = packed.shape[:-2], packed.shape[-1]
+    if f.code_bits <= 4:
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        out = jnp.stack([lo, hi], axis=-2).reshape(lead + (k, n))
+        return out.astype(_U8)
+    trip = p.reshape(lead + (k // 4, 3, n))
+    w = (trip[..., 0, :] | (trip[..., 1, :] << 8) | (trip[..., 2, :] << 16))
+    c = jnp.stack([w & 0x3F, (w >> 6) & 0x3F, (w >> 12) & 0x3F,
+                   (w >> 18) & 0x3F], axis=-2)
+    return c.reshape(lead + (k, n)).astype(_U8)
+
+
 def unpack_codes(packed: jax.Array, fmt: MXFormat | str, n: int) -> jax.Array:
     """Packed uint8 stream -> uint8 codes of trailing length ``n``."""
     f = get_format(fmt)

@@ -160,6 +160,22 @@ def _axes_size(mesh, axes: Tuple[str, ...]) -> int:
     return n
 
 
+def model_axis_size() -> int:
+    """Mesh extent behind the logical "model" name under the installed
+    rules (1 when no rules/mesh are active).  Divisibility checks at MX
+    weight use points key off this: a dim that this size does not divide
+    is silently replicated by ``logical`` rather than sharded."""
+    rules = current_rules()
+    if rules is None:
+        return 1
+    mesh = compat.current_mesh()
+    if mesh is None:
+        return 1
+    axes = tuple(a for a in (rules.get("model") or ())
+                 if a in mesh.axis_names)
+    return _axes_size(mesh, axes) if axes else 1
+
+
 def logical(x: jax.Array, *names) -> jax.Array:
     """Constrain ``x`` dim-by-dim via the installed rules.
 

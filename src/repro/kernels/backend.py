@@ -30,3 +30,25 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     if env is not None:
         return env != "0"
     return jax.default_backend() != "tpu"
+
+
+MATMUL_ENV_VAR = "REPRO_MX_MATMUL_IMPL"
+MATMUL_IMPLS = ("fused", "einsum")
+
+
+def resolve_matmul_impl(impl: Optional[str] = None) -> str:
+    """Resolve the weight-resident matmul path: explicit value > env > fused.
+
+    ``"fused"`` runs the Pallas dequant-in-VMEM kernel (sub-byte codes
+    unpacked inside the tile loop; fp weights never hit HBM); ``"einsum"``
+    dequantizes the whole weight and falls back to a plain einsum.  Like
+    ``resolve_interpret``, the ``REPRO_MX_MATMUL_IMPL`` environment override
+    is read at trace time, so flipping it only affects newly traced
+    computations.
+    """
+    if impl is None:
+        impl = os.environ.get(MATMUL_ENV_VAR, "fused")
+    if impl not in MATMUL_IMPLS:
+        raise ValueError(
+            f"unknown mx matmul impl {impl!r}; expected one of {MATMUL_IMPLS}")
+    return impl

@@ -57,6 +57,43 @@ def mx_matmul(a: jax.Array, w: MXArray) -> jax.Array:
     return out.reshape(lead + (n,))
 
 
+def mx_matmul_resident(a: jax.Array, w, impl: Optional[str] = None
+                       ) -> jax.Array:
+    """a (..., K) @ dequant(w) for a weight-resident ``MXWeight`` (K, N).
+
+    Dispatches through ``kernels.backend.resolve_matmul_impl``: "fused"
+    feeds the (possibly bit-packed) codes straight into the Pallas kernel,
+    which unpacks and dequantizes tiles in VMEM; "einsum" materializes the
+    f32 weight and contracts with a plain einsum.  Both return f32 and are
+    bit-identical when the contraction fits one k-tile (K <= bk).
+    """
+    from repro.core.mx_weight import MXWeight
+    from repro.kernels.backend import resolve_matmul_impl
+    assert isinstance(w, MXWeight), type(w)
+    assert w.codes.ndim == 2, (
+        f"mx_matmul_resident takes a single (K, N) weight, codes shape "
+        f"{tuple(w.codes.shape)}; slice batch axes with w.take(i)")
+    impl = resolve_matmul_impl(impl)
+    lead = a.shape[:-1]
+    if impl == "einsum":
+        wd = w.dequantize().astype(a.dtype)
+        return jnp.einsum("...k,kn->...n", a, wd,
+                          preferred_element_type=jnp.float32)
+    a2 = a.reshape(-1, a.shape[-1])
+    if a2.shape[1] != w.kp:          # K was padded to a block multiple
+        a2 = jnp.pad(a2, ((0, 0), (0, w.kp - a2.shape[1])))
+    from repro.kernels.backend import resolve_interpret
+    if resolve_interpret(None):
+        # interpret mode (CPU correctness path): per-grid-step overhead
+        # dominates, so cover N in one tile and K in few — 5-10x faster
+        # than VMEM-sized tiles at decode shapes, same results
+        out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec,
+                               bn=w.n, bk=min(w.kp, 1024))
+    else:
+        out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec)
+    return out.reshape(lead + (w.n,))
+
+
 def quantize_weight(w: jax.Array, spec=None, mode: Optional[str] = None,
                     block: Optional[int] = None, *,
                     fmt: Optional[str] = None) -> MXArray:

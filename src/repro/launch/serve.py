@@ -67,6 +67,13 @@ def main() -> None:
                     help="deprecated: use --quant kv=<fmt>@32:<mode>")
     ap.add_argument("--mx-mode", choices=["paper", "ocp"], default="ocp",
                     help="deprecated: use --quant")
+    ap.add_argument("--weight-resident", action="store_true",
+                    help="store decoder/MoE matmul weights in their "
+                         "policy's 'weights' spec (uint8 codes, bit-packed "
+                         "for sub-byte formats, + E8M0 scales) and serve "
+                         "through the fused dequant-in-VMEM matmul kernel "
+                         "— fp weights never materialize in HBM; needs a "
+                         "weights role, e.g. --quant weights=e4m3@32:ocp")
     ap.add_argument("--shard", action="store_true",
                     help="serve under a (data, model) mesh with the decode "
                          "sharding rules (needs >1 device)")
@@ -175,6 +182,21 @@ def main() -> None:
         print(f"[serve] KV cache: {kv_cache_token_nbytes(cfg)} B/token "
               f"across {cfg.n_layers} layers "
               f"(budget {auto_budget:.4g} B/token)")
+    if args.weight_resident:
+        from repro.core.mx_weight import params_nbytes
+        has_weights = cfg.mx.weights is not None or (
+            cfg.mx_table is not None
+            and any(cfg.layer_cfg(i).mx.weights is not None
+                    for i in range(cfg.n_layers)))
+        if not has_weights:
+            ap.error("--weight-resident needs a 'weights' role in the "
+                     "policy, e.g. --quant weights=e4m3@32:ocp")
+        fp_bytes = params_nbytes(params)
+        params = model.quantize_weights(params)
+        mx_bytes = params_nbytes(params)
+        print(f"[serve] weight-resident: params {fp_bytes / 1e6:.2f} MB fp "
+              f"-> {mx_bytes / 1e6:.2f} MB MX "
+              f"({fp_bytes / max(mx_bytes, 1):.2f}x smaller)")
     rules = None
     mesh_ctx = contextlib.nullcontext()
     if args.shard:
@@ -228,6 +250,10 @@ def main() -> None:
               f"{toks / dt:.1f} tok/s, {eng.n_steps} decode steps in "
               f"{eng.n_syncs} fused windows, "
               f"{eng.blocks.free_pages}/{eng.blocks.num_pages} pages free")
+        print(f"[serve] HBM pools: weights "
+              f"{eng.weight_pool_nbytes / 1024:.1f} KiB"
+              f"{' (MX-resident)' if args.weight_resident else ' (fp)'}, "
+              f"kv pages {eng.kv_pool_nbytes / 1024:.1f} KiB")
         print(f"[serve] phase wall: prefill {ph['prefill']:.2f}s, "
               f"decode {ph['decode']:.2f}s, host-sync {ph['sync']:.2f}s")
         if args.prefix_cache:
@@ -261,6 +287,8 @@ def main() -> None:
     print(f"[serve] {cfg.name} quant={cfg.mx}: generated {toks} tokens; "
           f"first {t_first:.2f}s (incl. compile), steady {t_steady:.2f}s "
           f"({toks / t_steady:.1f} tok/s)")
+    print(f"[serve] weight HBM: {eng.weight_pool_nbytes / 1024:.1f} KiB"
+          f"{' (MX-resident)' if args.weight_resident else ' (fp)'}")
     print("[serve] sample output tokens:", out[0][:12].tolist())
 
 

@@ -131,8 +131,13 @@ def _head(params, cfg, x):
 
 
 def _scan_layer_params(params, i: int):
-    """Layer ``i``'s slice of the stacked scanned-layer params."""
-    return jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+    """Layer ``i``'s slice of the scanned-layer params (stacked pytree, or
+    a per-layer list when heterogeneous weight specs force one — see
+    ``quantize_weights``)."""
+    layers = params["layers"]
+    if isinstance(layers, (list, tuple)):
+        return layers[i]
+    return jax.tree_util.tree_map(lambda p: p[i], layers)
 
 
 def _scan_cfgs(cfg: ModelConfig):
@@ -140,6 +145,63 @@ def _scan_cfgs(cfg: ModelConfig):
     continue after the leading dense layers)."""
     n_scan = cfg.n_layers - cfg.n_dense_layers
     return [cfg.layer_cfg(cfg.n_dense_layers + i) for i in range(n_scan)]
+
+
+# matmul weight leaves quantized by ``quantize_weights`` — all stored
+# (..., K, N) with the contraction axis at -2.  Router logits, norms,
+# embeddings, and the (tied or separate) LM head stay fp.
+_WEIGHT_KEYS = frozenset({"wq", "wk", "wv", "wo", "w1", "w2", "w3"})
+
+
+def _quantize_layer_tree(lp, spec):
+    """MXWeight-quantize every matmul weight leaf of one layer's params
+    (leading scan/expert axes ride along); None spec keeps the layer fp."""
+    if spec is None:
+        return lp
+
+    def walk(d):
+        out = {}
+        for key, val in d.items():
+            if isinstance(val, dict):
+                out[key] = walk(val)
+            elif key in _WEIGHT_KEYS and getattr(val, "ndim", 0) >= 2:
+                out[key] = L.MXWeight.quantize(val, spec)
+            else:
+                out[key] = val
+        return out
+
+    return walk(lp)
+
+
+def quantize_weights(params, cfg: ModelConfig):
+    """Convert matmul weights to weight-resident MXWeight storage.
+
+    Uniform policy (``cfg.mx.weights``): the stacked scanned-layer pytree
+    is quantized in place — MXWeight is a registered pytree, so
+    ``lax.scan`` still slices one layer per step.  Non-uniform tables
+    (``cfg.mx_table``): ``params["layers"]`` becomes a per-layer list,
+    each layer quantized per its own ``layer_cfg(i).mx.weights`` (layers
+    whose table entry has no weights role stay fp) — the unrolled walks
+    already consume lists via ``_scan_layer_params``.
+    """
+    if cfg.mla:
+        raise NotImplementedError(
+            "weight-resident storage covers the GQA decoder family "
+            "(MLA projections are not routed through MXWeight yet)")
+    out = dict(params)
+    if cfg.mx_table is not None:
+        out["layers"] = [
+            _quantize_layer_tree(_scan_layer_params(params, i),
+                                 cfg_i.mx.weights)
+            for i, cfg_i in enumerate(_scan_cfgs(cfg))]
+    else:
+        out["layers"] = _quantize_layer_tree(params["layers"],
+                                             cfg.mx.weights)
+    if "dense_layers" in params:
+        out["dense_layers"] = [
+            _quantize_layer_tree(dl, cfg.layer_cfg(i).mx.weights)
+            for i, dl in enumerate(params["dense_layers"])]
+    return out
 
 
 def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,

@@ -21,10 +21,12 @@ import numpy as np
 
 from repro.core.convert import (MXArray, mx_dequantize, mx_quantize,
                                 quantize_dequantize)
+from repro.core.mx_weight import MXWeight
 from repro.core.pack import pack_codes, unpack_codes
 from repro.core.spec import QuantPolicy, QuantSpec
 from repro.dist.sharding import (bf16_matmul_out_enabled, logical,
-                                 weight_gather_enabled, weight_gather_mode)
+                                 model_axis_size, weight_gather_enabled,
+                                 weight_gather_mode)
 from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
@@ -85,6 +87,28 @@ def _gather_spec(tp: str, rank: int):
     return lead + (None, "model")          # col (default)
 
 
+def _check_mx_row_gather(k: int, block: int, tp: str) -> None:
+    """Row-parallel ("model" on K) gather of an MX weight shards the codes'
+    K axis *and* the scales' K//block axis with the same spec.  ``logical``
+    silently replicates any dim the mesh does not divide, so a K that
+    shards while K//block does not would leave codes "model"-sharded but
+    scales replicated — inconsistent layouts feeding one matmul.  Refuse
+    loudly instead."""
+    if tp != "row" or weight_gather_mode() == "full":
+        return
+    ms = model_axis_size()
+    if ms <= 1:
+        return
+    kblk = k // block
+    if k % ms == 0 and kblk % ms != 0:
+        raise ValueError(
+            f"row-parallel FSDP gather cannot shard this MX weight: the "
+            f"codes' contraction axis (K={k}) divides the 'model' axis "
+            f"size {ms}, but the scales' axis (K//block={kblk}, block="
+            f"{block}) does not — pad K to a multiple of {ms * block} or "
+            f"store this weight unquantized")
+
+
 def dense(x: jax.Array, w, mx: Optional[QuantPolicy] = None,
           fake_quant: bool = False, tp: str = "col") -> jax.Array:
     """x @ w steered by the policy's ``weights``/``activations`` roles
@@ -97,11 +121,26 @@ def dense(x: jax.Array, w, mx: Optional[QuantPolicy] = None,
     if fake_quant and mx is not None and mx.activations is not None:
         x = quantize_dequantize(x.astype(jnp.float32), mx.activations,
                                 axis=-1).astype(x.dtype)
-    if isinstance(w, MXArray):
+    if isinstance(w, MXWeight):
+        # weight-resident serving: codes (possibly bit-packed) + scales go
+        # straight to the fused kernel, which dequantizes tiles in VMEM —
+        # fp weights are never materialized in HBM
+        if gather:
+            _check_mx_row_gather(w.kp, w.block, tp)
+            spec = _gather_spec(tp, w.codes.ndim)
+            w = dataclasses.replace(w, codes=logical(w.codes, *spec),
+                                    scales=logical(w.scales, *spec))
+        from repro.kernels.backend import resolve_matmul_impl
+        if resolve_matmul_impl() == "fused":
+            from repro.kernels.ops import mx_matmul_resident
+            return mx_matmul_resident(x, w).astype(x.dtype)
+        wd = w.dequantize().astype(x.dtype)
+    elif isinstance(w, MXArray):
         # gather the *codes* (u8): the FSDP all-gather moves ~4x fewer
         # bytes than gathering f32/bf16 weights — the paper's converter as
         # a collective-compression lever
         if gather:
+            _check_mx_row_gather(w.codes.shape[-2], w.block, tp)
             spec = _gather_spec(tp, w.codes.ndim)
             w = dataclasses.replace(w, codes=logical(w.codes, *spec),
                                     scales=logical(w.scales, *spec))
@@ -901,28 +940,38 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig,
 
     xe = act_q(xe)
 
-    def exp_mm(t, w):
+    def exp_mm(t, w, sub):
+        if isinstance(w, MXWeight):
+            # weight-resident experts: per-expert fused dequant-in-VMEM
+            # matmuls (codes stay packed in HBM); einsum fallback
+            # materializes the f32 expert stack
+            if weight_gather_enabled():
+                w = dataclasses.replace(
+                    w, codes=logical(w.codes, "model", None, None),
+                    scales=logical(w.scales, "model", None, None))
+            from repro.kernels.backend import resolve_matmul_impl
+            if resolve_matmul_impl() == "fused":
+                from repro.kernels.ops import mx_matmul_resident
+                cols = [mx_matmul_resident(t[:, i], w.take(i))
+                        for i in range(t.shape[1])]
+                return jnp.stack(cols, axis=1).astype(t.dtype)
+            wd = w.dequantize().astype(t.dtype)
+            return jnp.einsum(sub, t, wd,
+                              preferred_element_type=jnp.float32
+                              ).astype(t.dtype)
         if weight_gather_enabled():
             w = logical(w, "model", None, None)  # EP on E; gather FSDP dim
         if fake_quant and mx.weights is not None:
             w = quantize_dequantize(w.astype(jnp.float32), mx.weights,
                                     axis=1).astype(t.dtype)
-        return jnp.einsum("gecd,edf->gecf", t, w.astype(t.dtype),
+        return jnp.einsum(sub, t, w.astype(t.dtype),
                           preferred_element_type=jnp.float32).astype(t.dtype)
 
-    h = exp_mm(xe, we["w1"])
-    gte = exp_mm(xe, we["w3"])
+    h = exp_mm(xe, we["w1"], "gecd,edf->gecf")
+    gte = exp_mm(xe, we["w3"], "gecd,edf->gecf")
     h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * gte
     h = act_q(h)
-    w2g = logical(we["w2"], "model", None, None) \
-        if weight_gather_enabled() else we["w2"]
-    if fake_quant and mx.weights is not None:
-        w2 = quantize_dequantize(w2g.astype(jnp.float32), mx.weights,
-                                 axis=1).astype(x.dtype)
-    else:
-        w2 = w2g.astype(x.dtype)
-    ye = jnp.einsum("gecf,efd->gecd", h, w2,
-                    preferred_element_type=jnp.float32).astype(x.dtype)
+    ye = exp_mm(h, we["w2"], "gecf,efd->gecd")
     out = jnp.einsum("gsec,gecd->gsd", comb, ye).reshape(b, s, d)
     if cfg.n_shared_experts:
         out = out + mlp(p["shared"], x, cfg, fake_quant)

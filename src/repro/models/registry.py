@@ -90,6 +90,19 @@ class Model:
         return self.mod.decode_step(params, token, cache, pos, self.cfg,
                                     fake_quant=fake_quant)
 
+    def quantize_weights(self, params):
+        """Convert matmul weights to weight-resident MXWeight storage per
+        the policy's ``weights`` role (decoder family; see
+        decoder.quantize_weights).  Serve the result as-is — ``dense()``
+        routes MXWeight operands through the fused dequant-in-VMEM
+        matmul kernel."""
+        cfg = self.cfg
+        if cfg.family != "decoder":
+            raise NotImplementedError(
+                f"{cfg.name}: weight-resident storage covers the decoder "
+                "family")
+        return self.mod.quantize_weights(params, cfg)
+
     def forward_calib(self, params, batch: Dict[str, jax.Array]):
         """Instrumented forward for repro.calib: (logits, aux, taps) with
         per-layer activation / kv_key / kv_value tensors (GQA decoder

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mx_weight import params_nbytes
 from repro.dist.sharding import use_rules
 from repro.models.decoder import sample_tokens
 from repro.models.registry import Model
@@ -84,6 +85,12 @@ class ServeEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+
+    @property
+    def weight_pool_nbytes(self) -> int:
+        """Serve-time weight HBM bytes as stored (MXWeight leaves count
+        their uint8 codes + scales; fp params their dtype width)."""
+        return params_nbytes(self.params)
 
     def generate(self, batch: Dict[str, jax.Array],
                  gen: GenerationConfig = GenerationConfig()
@@ -281,6 +288,15 @@ class ContinuousBatchingEngine:
         ``PolicyTable`` each layer's pool is sized by its own specs)."""
         return int(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
                        for leaf in jax.tree_util.tree_leaves(self.pool)))
+
+    @property
+    def weight_pool_nbytes(self) -> int:
+        """Serve-time weight HBM bytes as stored: after
+        ``Model.quantize_weights`` the MXWeight leaves flatten to uint8
+        codes (bit-packed for sub-byte formats) + E8M0 scales, so this
+        reports the ``spec.storage_nbytes`` accounting; fp params count
+        at their dtype width."""
+        return params_nbytes(self.params)
 
     @property
     def kv_pool_bytes_effective(self) -> int:

@@ -24,6 +24,53 @@ def run_devprog(body: str, ndev: int = 8) -> str:
     return out.stdout
 
 
+def test_row_parallel_mx_gather_divisibility():
+    """Satellite regression: row-parallel ("model" on K) FSDP gather of an
+    MX weight must refuse K//block scale rows that don't divide the model
+    axis (codes would shard while scales silently replicate), and still
+    serve cleanly when they do divide."""
+    run_devprog("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import MXWeight, QuantSpec
+        from repro.core.convert import mx_quantize
+        from repro.dist import compat
+        from repro.dist.sharding import make_rules, use_rules
+        from repro.models.layers import dense
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        rules = make_rules(("data", "model"), fsdp_params=True)
+        spec = QuantSpec("e4m3", "ocp", 32, True)
+        rng = np.random.default_rng(0)
+        fn = jax.jit(lambda x, w: dense(x, w, tp="row"))
+
+        with compat.set_mesh(mesh), use_rules(rules):
+            # K=32 -> K//block=1 scale row, model axis 2: codes' K divides,
+            # scales' K//block does not -> loud error naming the sizes
+            w_bad = rng.normal(size=(32, 16)).astype(np.float32)
+            x_bad = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+            for bad in (mx_quantize(jnp.asarray(w_bad), spec, axis=0),
+                        MXWeight.quantize(jnp.asarray(w_bad), spec)):
+                try:
+                    fn(x_bad, bad)
+                    raise SystemExit("expected ValueError for K//block=1")
+                except ValueError as e:
+                    assert "K//block=1" in str(e) and "size 2" in str(e), e
+            # K=128 -> K//block=4 divides the model axis: both container
+            # types serve, matching the unsharded dequant matmul
+            w_ok = rng.normal(size=(128, 16)).astype(np.float32) * 0.05
+            x_ok = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+            mxa = mx_quantize(jnp.asarray(w_ok), spec, axis=0)
+            mxw = MXWeight.quantize(jnp.asarray(w_ok), spec)
+            ya = np.asarray(fn(x_ok, mxa))
+            yw = np.asarray(fn(x_ok, mxw))
+            ref = np.asarray(x_ok) @ np.asarray(mxw.dequantize())
+            np.testing.assert_allclose(ya, ref, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(yw, ref, rtol=1e-5, atol=1e-5)
+        print("OK rowshard")
+    """, ndev=4)
+
+
 def test_mx_allreduce_matches_exact_mean():
     run_devprog("""
         import jax, numpy as np

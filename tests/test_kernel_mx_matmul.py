@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ALL_FORMATS, mx_quantize
+from repro.core import (ALL_FORMATS, QuantSpec, decode_elements, mx_quantize,
+                        pack_codes_rows, scale_to_f32)
 from repro.kernels.mx_matmul import mx_matmul_2d
 from repro.kernels.ops import mx_matmul, mx_quantize_pallas, quantize_weight
 from repro.kernels.ref import mx_matmul_2d_ref
@@ -78,6 +79,88 @@ def test_ops_wrappers_nd():
         np.asarray(wq.dequantize()))
     np.testing.assert_allclose(np.asarray(out).reshape(-1, 40),
                                np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- tiling
+def test_bk_not_block_multiple_rounds_down():
+    """bk=48 with block=32 used to truncate the scale tile (one scale row
+    stretched over 48 code rows); it must now round down to bk=32 and
+    agree with the oracle."""
+    a, w = _setup(17, 96, 72, seed=7)
+    for fmt, mode in [("e4m3", "ocp"), ("e2m1", "paper"), ("int8", "ocp")]:
+        mx = mx_quantize(w, fmt=fmt, mode=mode, axis=0)
+        out = mx_matmul_2d(a, mx.codes, mx.scales, fmt=fmt, mode=mode,
+                           bk=48)
+        ref = mx_matmul_2d_ref(a, mx.codes, mx.scales, fmt=fmt, mode=mode)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_bk_below_block_raises():
+    a, w = _setup(8, 64, 32, seed=8)
+    mx = mx_quantize(w, fmt="e4m3", mode="ocp", axis=0)
+    with pytest.raises(ValueError, match="scale block"):
+        mx_matmul_2d(a, mx.codes, mx.scales, fmt="e4m3", mode="ocp", bk=16)
+    with pytest.raises(ValueError, match="positive"):
+        mx_matmul_2d(a, mx.codes, mx.scales, fmt="e4m3", mode="ocp", bm=0)
+
+
+# ---------------------------------------------------------- zero padding
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_zero_code_zero_scale_decodes_to_exact_zero(fmt, mode):
+    """The kernel zero-pads codes AND scales; the padded region contributes
+    exactly 0.0 iff decode(0) * scale_to_f32(0) == 0.0 — including int8's
+    two's-complement code space (code 0 is integer 0 in both modes) and
+    the 2^-127 subnormal that an all-zero E8M0 scale denotes."""
+    spec = QuantSpec(fmt, mode, 32, True)
+    elem = decode_elements(jnp.zeros((32,), jnp.uint8), spec.format, mode)
+    sfac = scale_to_f32(jnp.zeros((1,), jnp.uint8))
+    prod = elem * sfac
+    assert np.all(np.asarray(elem) == 0.0), (fmt, mode)
+    assert np.all(np.asarray(prod) == 0.0), (fmt, mode)
+    # the sign bit must be clean too: 0.0, not -0.0 leaking sign flips
+    assert not np.signbit(np.asarray(prod)).any(), (fmt, mode)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_padding_never_leaks_non_aligned(fmt, mode):
+    """Golden test on non-aligned M/N/K: tile padding must never leak into
+    out[:m, :n].  Tiny tiles force padding on every axis; the oracle sees
+    only the unpadded operands."""
+    m, k, n = 13, 96, 21
+    a, w = _setup(m, k, n, seed=9)
+    mx = mx_quantize(w, fmt=fmt, mode=mode, axis=0)
+    out = mx_matmul_2d(a, mx.codes, mx.scales, fmt=fmt, mode=mode,
+                       bm=8, bn=16, bk=64)
+    ref = mx_matmul_2d_ref(a, mx.codes, mx.scales, fmt=fmt, mode=mode)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- packed codes path
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+def test_packed_codes_bitwise_match_unpacked(fmt, mode):
+    """The fused kernel unpacking bit-packed codes in VMEM must produce
+    bitwise-identical output to the same kernel fed unpacked codes."""
+    a, w = _setup(9, 160, 48, seed=10)
+    mx = mx_quantize(w, fmt=fmt, mode=mode, axis=0)
+    packed = pack_codes_rows(mx.codes, fmt)
+    spec = QuantSpec(fmt, mode, 32, True)
+    o_un = mx_matmul_2d(a, mx.codes, mx.scales, spec, bm=8, bn=32, bk=64)
+    o_pk = mx_matmul_2d(a, packed, mx.scales, spec, bm=8, bn=32, bk=64)
+    np.testing.assert_array_equal(np.asarray(o_un), np.asarray(o_pk))
+
+
+def test_packed_codes_bad_row_count_raises():
+    a, w = _setup(4, 64, 32, seed=11)
+    mx = mx_quantize(w, fmt="e2m1", mode="ocp", axis=0)
+    with pytest.raises(ValueError, match="rows"):
+        mx_matmul_2d(a, mx.codes[:48], mx.scales,
+                     QuantSpec("e2m1", "ocp", 32, True))
 
 
 def test_pallas_quant_wrapper_matches_core():
