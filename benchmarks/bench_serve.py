@@ -36,6 +36,18 @@ superlinear in either axis alone — which
 ``validate_bench_serve.py`` re-derives and asserts from the committed
 artifact.
 
+Schema v4 (this PR) adds a top-level ``"traffic"`` section: the same
+engine config served through the asyncio front end under an on/off bursty
+arrival process at two intensities, once with ``admission="reject"``
+(reject-on-full baseline) and once with ``admission="block"`` +
+preempt-and-swap.  Each row carries p50/p99 TTFT and inter-token latency,
+preemption/swap accounting, and the **per-request records** (arrival /
+token / finish timestamps as millisecond offsets from trace start) the
+validator re-derives every percentile and preemption count from.  The
+headline claim — at equal pool bytes, preempt-and-swap sustains strictly
+higher admitted-request throughput than reject-on-full at every swept
+intensity — is asserted by the validator against the raw records.
+
 Wall times are CPU-container numbers (correctness path — Pallas interpret
 mode when attn_impl=flash); the relative fp32-vs-MX pool bytes, the phase
 split, and the prefix-sharing deltas are the portable signals.  Validate
@@ -44,6 +56,7 @@ with ``python benchmarks/validate_bench_serve.py``.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import time
 from pathlib import Path
@@ -64,6 +77,7 @@ CACHE_CONFIGS = (
 )
 MIXES = ("uniform", "mixed")
 PREFIX_CACHE_NAME = "mx-int8"   # the prefix sweep rides this cache config
+TRAFFIC_CACHE_NAME = "mx-int8"  # ... and so does the async traffic sweep
 
 
 def _prompt_lens(mix: str, n_req: int, base: int,
@@ -121,7 +135,7 @@ def _prefix_sweep(model, params, cfg, policy, *, max_slots, page_size,
         out = eng.run()
         dt = time.perf_counter() - t0
         toks = sum(len(v) for v in out.values())
-        tps = toks / dt
+        tps = toks / dt if dt > 0 else 0.0
         dec_toks = toks - len(out)
         name = f"serve_{PREFIX_CACHE_NAME}_prefix_c{c}_n{n_req}"
         rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
@@ -152,6 +166,174 @@ def _prefix_sweep(model, params, cfg, policy, *, max_slots, page_size,
             "kv_pages_mapped_peak": int(eng.peak_mapped_pages),
             "kv_pool_bytes_effective": int(eng.kv_pool_bytes_effective),
         })
+
+
+def _percentile(samples, q):
+    """Nearest-rank percentile — must stay in lockstep with both
+    ``repro.serve.frontend.percentile`` and the validator's re-derivation
+    (the committed rows are checked against the raw records)."""
+    s = sorted(samples)
+    return s[int(-(-(q / 100.0) * len(s) // 1)) - 1]
+
+
+def _traffic_row(model, params, cfg, *, policy_name, arrival_spec,
+                 arrivals, max_slots, page_size, max_len, num_pages,
+                 sync_every, warm_prompts, new_tokens):
+    """Serve one (intensity x SLO-policy) cell through the asyncio front
+    end and report latency percentiles + per-request records.
+
+    ``policy_name`` — "reject" (admission='reject', no preemption: the
+    reject-on-full baseline) or "preempt" (admission='block' +
+    preempt-and-swap).  Both run the *same* engine geometry — equal pool
+    bytes — and the same deterministic arrival trace.
+
+    Warmup requests (one per prefill shape) compile the jitted closures,
+    then ``reset_metrics`` opens the measurement window — stale TTFT
+    samples or hit rates from warmup cannot leak into the row.
+    """
+    from repro.serve import (AsyncServer, ContinuousBatchingEngine,
+                             GenerationConfig, latency_summary, replay)
+
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=max_slots, page_size=page_size,
+        max_len=max_len, num_pages=num_pages,
+        gen=GenerationConfig(max_new_tokens=new_tokens),
+        sync_every=sync_every, prefill_bucket=max_len,
+        preempt=(policy_name == "preempt"))
+    for p in warm_prompts:                  # compile prefill + windows
+        eng.add_request(p, new_tokens)
+    eng.run()
+    eng.reset_metrics()
+
+    async def go():
+        async with AsyncServer(
+                eng, admission=("reject" if policy_name == "reject"
+                                else "block")) as srv:
+            return await replay(srv, arrivals, speedup=1.0)
+
+    t0 = time.perf_counter()
+    _, rejected = asyncio.run(go())
+    wall = time.perf_counter() - t0
+
+    fin = eng.finished_in_window
+    # per-request records: ms offsets from the first arrival; every
+    # latency/percentile/preemption figure below re-derives from these
+    # exact serialized values, so the validator's recomputation is
+    # bit-for-bit
+    records = []
+    t_zero = min(r.arrival_t for r in fin) if fin else 0.0
+    for r in sorted(fin, key=lambda r: r.arrival_t):
+        records.append({
+            "priority": int(r.priority),
+            "deadline_ms": (None if r.deadline_s is None
+                            else float(r.deadline_s * 1e3)),
+            "prompt_tokens": int(r.prompt_len),
+            "generated_tokens": int(len(r.out)),
+            "arrival_ms": float((r.arrival_t - t_zero) * 1e3),
+            "token_ms": [float((t - t_zero) * 1e3) for t in r.t_tokens],
+            "finished_ms": float((r.t_finished - t_zero) * 1e3),
+            "n_preemptions": int(r.n_preemptions),
+        })
+    ttft = [rec["token_ms"][0] - rec["arrival_ms"] for rec in records]
+    itl = [b - a for rec in records
+           for a, b in zip(rec["token_ms"], rec["token_ms"][1:])]
+    met = [rec["token_ms"][0] - rec["arrival_ms"] <= rec["deadline_ms"]
+           for rec in records if rec["deadline_ms"] is not None]
+    toks = sum(rec["generated_tokens"] for rec in records)
+    row = {
+        "arrival": arrival_spec,
+        "policy": policy_name,
+        "n_arrivals": int(len(arrivals)),
+        "n_served": int(len(records)),
+        "n_rejected": int(len(rejected)),
+        "wall_s": float(wall),
+        "admitted_per_s": float(len(records) / wall if wall > 0 else 0.0),
+        "generated_tokens": int(toks),
+        "ttft_p50_ms": float(_percentile(ttft, 50)) if ttft else 0.0,
+        "ttft_p99_ms": float(_percentile(ttft, 99)) if ttft else 0.0,
+        "itl_p50_ms": float(_percentile(itl, 50)) if itl else 0.0,
+        "itl_p99_ms": float(_percentile(itl, 99)) if itl else 0.0,
+        "slo_attainment": float(sum(met) / len(met)) if met else 1.0,
+        "n_preemptions": int(eng.n_preemptions),
+        "n_restores": int(eng.n_restores),
+        "swap_bytes_out": int(eng.swap_store.bytes_out),
+        "swap_bytes_in": int(eng.swap_store.bytes_in),
+        "kv_pool_bytes": int(eng.kv_pool_nbytes),
+        "requests": records,
+    }
+    assert len(records) + len(rejected) == len(arrivals)
+    return row, latency_summary(fin)
+
+
+def _traffic_sweep(model, params, cfg, policy, *, max_slots, page_size,
+                   new_tokens, sync_every, smoke, rows):
+    """The (arrival intensity x SLO policy) grid: bursty on/off traffic
+    mixing an interactive class (priority 0, TTFT deadline) with a batch
+    class (priority 1, longer generations), served once with
+    reject-on-full and once with preempt-and-swap at equal pool bytes."""
+    from repro.serve import TrafficClass, on_off_times, synthesize
+
+    # tighter than the throughput rows: 2 slots and long batch
+    # generations, so a burst oversubscribes the engine and the SLO
+    # policies actually diverge
+    max_slots = 2
+    ts_sync = 4
+    gen_it = 12                         # interactive generation length
+    gen_batch = (36, 49)                # batch class range
+    n_req = 20 if smoke else 28
+    lo, hi = 8, 24
+    classes = [
+        TrafficClass("interactive", (lo, hi), (gen_it, gen_it + 1),
+                     priority=0, deadline_s=0.35, weight=1.5),
+        TrafficClass("batch", (lo, hi), gen_batch, priority=1,
+                     weight=1.0),
+    ]
+    max_len = (hi - 1) + gen_batch[1]
+    num_pages = 1 + max_slots * _ceil_pages(max_len, page_size)
+    warm_prompts = [np.arange(1, 1 + lo, dtype=np.int32),
+                    np.arange(1, 1 + hi - 1, dtype=np.int32)]
+
+    # bursts far over slot capacity; the off gap lets the backlog drain,
+    # so the wall is span-dominated for both policies (claim robustness:
+    # admitted/s then tracks served counts, not drain speed)
+    intensities = [("onoff:60:0.15:2.0", 60.0, 0.15, 2.0),
+                   ("onoff:120:0.15:2.0", 120.0, 0.15, 2.0)]
+    out_rows = []
+    for spec, rate, on_s, off_s in intensities:
+        times = on_off_times(rate, n_req, on_s=on_s, off_s=off_s, seed=11)
+        arrivals = synthesize(times, classes, cfg.vocab, seed=11)
+        for policy_name in ("reject", "preempt"):
+            row, summ = _traffic_row(
+                model, params, cfg, policy_name=policy_name,
+                arrival_spec=spec, arrivals=arrivals,
+                max_slots=max_slots, page_size=page_size,
+                max_len=max_len, num_pages=num_pages,
+                sync_every=ts_sync, warm_prompts=warm_prompts,
+                new_tokens=gen_it)
+            name = f"serve_traffic_{spec.split(':')[1]}rps_{policy_name}"
+            rows.append((name, row["ttft_p99_ms"] * 1e3,
+                         f"{row['admitted_per_s']:.2f}req/s"))
+            out_rows.append(row)
+    return {
+        "cache": TRAFFIC_CACHE_NAME,
+        "quant": str(policy),
+        "max_slots": int(max_slots),
+        "page_size": int(page_size),
+        "sync_every": int(ts_sync),
+        "num_pages": int(num_pages),
+        "new_tokens": int(gen_it),
+        "classes": [{
+            "name": c.name, "priority": c.priority,
+            "deadline_ms": (None if c.deadline_s is None
+                            else c.deadline_s * 1e3),
+            "weight": c.weight,
+        } for c in classes],
+        "rows": out_rows,
+    }
+
+
+def _ceil_pages(tokens: int, page_size: int) -> int:
+    return max(1, -(-tokens // page_size))
 
 
 def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
@@ -217,7 +399,7 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
             out, dt, steps, syncs, ph, ptoks = min(
                 (serve() for _ in range(5)), key=lambda r: r[1])
             toks = sum(len(v) for v in out.values())
-            tps = toks / dt
+            tps = toks / dt if dt > 0 else 0.0
             dec_toks = toks - len(out)      # prefill emits one per request
             name = f"serve_{cache_name}_{mix}"
             rows.append((name, dt / toks * 1e6, f"{tps:.1f}tok/s"))
@@ -253,15 +435,21 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
                           max_slots=max_slots, page_size=page_size,
                           new_tokens=new_tokens, sync_every=sync_every,
                           rows=rows, configs=configs)
+        if cache_name == TRAFFIC_CACHE_NAME:
+            traffic = _traffic_sweep(
+                model, params, cfg, policy, max_slots=max_slots,
+                page_size=page_size, new_tokens=new_tokens,
+                sync_every=sync_every, smoke=smoke, rows=rows)
 
     doc = {
-        "schema": "bench_serve/v3",
+        "schema": "bench_serve/v4",
         "arch": f"{ARCH}-reduced",
         "page_size": int(page_size),
         "max_slots": int(max_slots),
         "new_tokens": int(new_tokens),
         "sync_every": int(sync_every),
         "configs": configs,
+        "traffic": traffic,
     }
     out_path.write_text(json.dumps(doc, indent=2) + "\n")
     return rows

@@ -1,8 +1,19 @@
-"""Validate BENCH_serve.json against the bench_serve/v3 schema (dep-free).
+"""Validate BENCH_serve.json against the bench_serve/v4 schema (dep-free).
 
     python benchmarks/validate_bench_serve.py [BENCH_serve.json]
 
-Schema v3 adds prefix-sharing accounting (``prefix_cache``,
+Schema v4 adds the top-level ``"traffic"`` section: bursty arrivals
+served through the asyncio front end at two intensities under two SLO
+policies (reject-on-full vs preempt-and-swap).  The validator does not
+trust the section's summary numbers: every TTFT/ITL percentile, the SLO
+attainment, the admitted-request throughput, and the preemption/restore
+counts are **re-derived from the per-request records** (millisecond
+timestamp offsets) and must match the row exactly.  The headline claim —
+at equal pool bytes, preempt-and-swap sustains strictly higher
+admitted-request throughput than reject-on-full at *every* swept
+intensity — is asserted from those re-derived values.
+
+Schema v3 added prefix-sharing accounting (``prefix_cache``,
 ``shared_prefix_tokens``, ``prefix_hit_rate``, ``prefill_tokens_computed``,
 ``kv_pages_shared``, ``kv_pages_mapped_peak``,
 ``kv_pool_bytes_effective``) and the ``mix="prefix"`` sweep rows.  Beyond
@@ -29,7 +40,7 @@ import json
 import sys
 from pathlib import Path
 
-SCHEMA = "bench_serve/v3"
+SCHEMA = "bench_serve/v4"
 TOP_FIELDS = {
     "schema": str,
     "arch": str,
@@ -38,6 +49,7 @@ TOP_FIELDS = {
     "new_tokens": int,
     "sync_every": int,
     "configs": list,
+    "traffic": dict,
 }
 CONFIG_FIELDS = {
     "cache": str,
@@ -72,10 +84,67 @@ KNOWN_CACHES = {"fp32", "mx-int8", "mx-e4m3", "mx-e5m2", "mx-e3m2",
                 "mx-e2m3", "mx-e2m1", "mx-mixed"}
 KNOWN_MIXES = {"uniform", "mixed", "prefix"}
 KNOWN_FMTS = {"int8", "e4m3", "e5m2", "e3m2", "e2m3", "e2m1", None}
+TRAFFIC_FIELDS = {
+    "cache": str,
+    "quant": str,
+    "max_slots": int,
+    "page_size": int,
+    "sync_every": int,
+    "num_pages": int,
+    "new_tokens": int,
+    "classes": list,
+    "rows": list,
+}
+CLASS_FIELDS = {
+    "name": str,
+    "priority": int,
+    "deadline_ms": (float, int, type(None)),
+    "weight": (float, int),
+}
+TRAFFIC_ROW_FIELDS = {
+    "arrival": str,
+    "policy": str,
+    "n_arrivals": int,
+    "n_served": int,
+    "n_rejected": int,
+    "wall_s": float,
+    "admitted_per_s": float,
+    "generated_tokens": int,
+    "ttft_p50_ms": float,
+    "ttft_p99_ms": float,
+    "itl_p50_ms": float,
+    "itl_p99_ms": float,
+    "slo_attainment": (float, int),
+    "n_preemptions": int,
+    "n_restores": int,
+    "swap_bytes_out": int,
+    "swap_bytes_in": int,
+    "kv_pool_bytes": int,
+    "requests": list,
+}
+RECORD_FIELDS = {
+    "priority": int,
+    "deadline_ms": (float, int, type(None)),
+    "prompt_tokens": int,
+    "generated_tokens": int,
+    "arrival_ms": (float, int),
+    "token_ms": list,
+    "finished_ms": (float, int),
+    "n_preemptions": int,
+}
+KNOWN_POLICIES = {"reject", "preempt"}
 
 
 def _pages(tokens: int, page_size: int) -> int:
     return max(1, -(-tokens // page_size))
+
+
+def _percentile(samples, q):
+    """Nearest-rank percentile — in lockstep with
+    ``repro.serve.frontend.percentile`` and ``bench_serve._percentile``:
+    the committed rows must reproduce bit-for-bit from the records."""
+    s = sorted(samples)
+    return s[int(-(-(q / 100.0) * len(s) // 1)) - 1]
 
 
 def _check_prefix_row(i, c, doc, errs) -> None:
@@ -191,6 +260,197 @@ def _check_prefix_claims(prows, errs) -> None:
                     f"({c1}|{c2}) x ({n1}|{n2})")
 
 
+def _fields_ok(obj, spec, where, errs) -> bool:
+    """Typed-field + unknown-field sweep shared by the traffic checks."""
+    before = len(errs)
+    for field, ty in spec.items():
+        if field not in obj:
+            errs.append(f"{where}: missing field {field!r}")
+        elif not isinstance(obj[field], ty) \
+                or (ty is int and isinstance(obj[field], bool)):
+            tn = ty.__name__ if isinstance(ty, type) else \
+                "/".join(t.__name__ for t in ty)
+            errs.append(f"{where}.{field}: expected {tn}, "
+                        f"got {type(obj[field]).__name__}")
+    for field in sorted(set(obj) - set(spec)):
+        errs.append(f"{where}: unknown field {field!r} (schema drift — "
+                    f"extend the validator in the same PR)")
+    return len(errs) == before
+
+
+def _check_traffic_row(j, r, classes, errs) -> None:
+    """Re-derive every summary figure of one (intensity x policy) row
+    from its per-request records.  The bench computed the row *from* the
+    exact serialized values, so the recomputation must match bit-for-bit
+    (the 1e-9 slack only forgives float re-formatting, not drift)."""
+    w = f"traffic.rows[{j}]"
+    if r["policy"] not in KNOWN_POLICIES:
+        errs.append(f"{w}.policy: unknown {r['policy']!r}")
+        return
+    recs = r["requests"]
+    if r["n_served"] != len(recs):
+        errs.append(f"{w}: n_served {r['n_served']} != "
+                    f"len(requests) {len(recs)}")
+        return
+    if r["n_served"] + r["n_rejected"] != r["n_arrivals"]:
+        errs.append(f"{w}: served + rejected != n_arrivals "
+                    f"({r['n_served']} + {r['n_rejected']} != "
+                    f"{r['n_arrivals']})")
+    if r["wall_s"] <= 0 or r["kv_pool_bytes"] <= 0:
+        errs.append(f"{w}: non-positive wall_s / kv_pool_bytes")
+        return
+    if not recs:
+        errs.append(f"{w}: no served requests — the row measures nothing")
+        return
+    class_keys = {(c["priority"], c["deadline_ms"]) for c in classes}
+    ok = True
+    for k, rec in enumerate(recs):
+        if not _fields_ok(rec, RECORD_FIELDS, f"{w}.requests[{k}]", errs):
+            ok = False
+            continue
+        tms = rec["token_ms"]
+        if len(tms) != rec["generated_tokens"] or not tms:
+            errs.append(f"{w}.requests[{k}]: len(token_ms) != "
+                        f"generated_tokens (or empty)")
+            ok = False
+            continue
+        if rec["prompt_tokens"] <= 0:
+            errs.append(f"{w}.requests[{k}]: non-positive prompt_tokens")
+        if any(b < a for a, b in zip(tms, tms[1:])):
+            errs.append(f"{w}.requests[{k}]: token_ms not monotone")
+        if not rec["arrival_ms"] <= tms[0]:
+            errs.append(f"{w}.requests[{k}]: first token before arrival")
+        if not tms[-1] <= rec["finished_ms"]:
+            errs.append(f"{w}.requests[{k}]: finished before last token")
+        if rec["arrival_ms"] < 0:
+            errs.append(f"{w}.requests[{k}]: negative arrival_ms "
+                        f"(offsets are from the first arrival)")
+        if (rec["priority"], rec["deadline_ms"]) not in class_keys:
+            errs.append(f"{w}.requests[{k}]: (priority, deadline_ms) "
+                        f"matches no declared traffic class")
+        if rec["n_preemptions"] < 0 or (
+                r["policy"] == "reject" and rec["n_preemptions"]):
+            errs.append(f"{w}.requests[{k}]: preemptions on a "
+                        f"reject-policy record")
+    if not ok:
+        return
+    if min(rec["arrival_ms"] for rec in recs) != 0.0:
+        errs.append(f"{w}: offsets not zeroed on the first arrival")
+    # latency percentiles, SLO attainment, throughput: recompute from
+    # the records with the very formulas the bench used
+    ttft = [rec["token_ms"][0] - rec["arrival_ms"] for rec in recs]
+    itl = [b - a for rec in recs
+           for a, b in zip(rec["token_ms"], rec["token_ms"][1:])]
+    met = [rec["token_ms"][0] - rec["arrival_ms"] <= rec["deadline_ms"]
+           for rec in recs if rec["deadline_ms"] is not None]
+    want = {
+        "ttft_p50_ms": _percentile(ttft, 50) if ttft else 0.0,
+        "ttft_p99_ms": _percentile(ttft, 99) if ttft else 0.0,
+        "itl_p50_ms": _percentile(itl, 50) if itl else 0.0,
+        "itl_p99_ms": _percentile(itl, 99) if itl else 0.0,
+        "slo_attainment": sum(met) / len(met) if met else 1.0,
+        "admitted_per_s": r["n_served"] / r["wall_s"],
+    }
+    for field, val in want.items():
+        if abs(r[field] - val) > 1e-9 * max(1.0, abs(val)):
+            errs.append(f"{w}.{field}: {r[field]} does not re-derive "
+                        f"from the records (want {val})")
+    if not 0.0 <= r["slo_attainment"] <= 1.0:
+        errs.append(f"{w}: slo_attainment outside [0, 1]")
+    if r["generated_tokens"] != sum(rec["generated_tokens"]
+                                    for rec in recs):
+        errs.append(f"{w}: generated_tokens != sum over records")
+    # preemption accounting: the row counters are sums of what the
+    # records witnessed, and every swapped-out page came back
+    npre = sum(rec["n_preemptions"] for rec in recs)
+    if r["n_preemptions"] != npre:
+        errs.append(f"{w}: n_preemptions {r['n_preemptions']} != "
+                    f"sum over records {npre}")
+    if r["n_restores"] != r["n_preemptions"]:
+        errs.append(f"{w}: n_restores != n_preemptions (a preempted "
+                    f"request never resumed)")
+    if r["swap_bytes_in"] != r["swap_bytes_out"]:
+        errs.append(f"{w}: swap_bytes_in != swap_bytes_out")
+    if (r["swap_bytes_out"] > 0) != (r["n_preemptions"] > 0):
+        errs.append(f"{w}: swap bytes inconsistent with preemption count")
+    if r["policy"] == "reject":
+        if r["n_preemptions"] or r["n_restores"] or r["swap_bytes_out"]:
+            errs.append(f"{w}: reject row carries preempt/swap state")
+    else:
+        if r["n_rejected"]:
+            errs.append(f"{w}: preempt row rejected requests (block "
+                        f"admission never drops)")
+
+
+def _check_traffic(t, errs) -> None:
+    """The v4 traffic section: bursty arrivals under two SLO policies at
+    equal pool bytes, plus the headline preempt-vs-reject claim."""
+    if not _fields_ok(t, TRAFFIC_FIELDS, "traffic", errs):
+        return
+    if t["cache"] not in KNOWN_CACHES:
+        errs.append(f"traffic.cache: unknown {t['cache']!r}")
+    for f in ("max_slots", "page_size", "sync_every", "num_pages",
+              "new_tokens"):
+        if t[f] < 1:
+            errs.append(f"traffic.{f}: must be >= 1, got {t[f]}")
+    classes = t["classes"]
+    ok = all(_fields_ok(c, CLASS_FIELDS, f"traffic.classes[{i}]", errs)
+             for i, c in enumerate(classes))
+    if not ok:
+        return
+    if len(classes) < 2 \
+            or not any(c["deadline_ms"] is not None and c["priority"] == 0
+                       for c in classes) \
+            or not any(c["deadline_ms"] is None and c["priority"] > 0
+                       for c in classes):
+        errs.append("traffic.classes: need an interactive class "
+                    "(priority 0, TTFT deadline) and a lower-importance "
+                    "batch class (no deadline)")
+    if any(c["weight"] <= 0 for c in classes):
+        errs.append("traffic.classes: non-positive weight")
+    before = len(errs)
+    for j, r in enumerate(t["rows"]):
+        if _fields_ok(r, TRAFFIC_ROW_FIELDS, f"traffic.rows[{j}]", errs):
+            _check_traffic_row(j, r, classes, errs)
+    if len(errs) != before:
+        return
+    # the claim: at every swept intensity and equal pool bytes,
+    # preempt-and-swap admits strictly more requests per second than
+    # reject-on-full — and the sweep actually exercised both mechanisms
+    grid = {}
+    for j, r in enumerate(t["rows"]):
+        if (r["arrival"], r["policy"]) in grid:
+            errs.append(f"traffic.rows[{j}]: duplicate "
+                        f"(arrival, policy) cell")
+            return
+        grid[(r["arrival"], r["policy"])] = r
+    arrivals = sorted({a for a, _ in grid})
+    if len(arrivals) < 2:
+        errs.append("traffic.rows: need >= 2 arrival intensities")
+        return
+    pools = {r["kv_pool_bytes"] for r in t["rows"]}
+    if len(pools) != 1:
+        errs.append(f"traffic.rows: unequal kv_pool_bytes across the "
+                    f"grid {sorted(pools)} — the comparison is void")
+    for a in arrivals:
+        rej, pre = grid.get((a, "reject")), grid.get((a, "preempt"))
+        if rej is None or pre is None:
+            errs.append(f"traffic.rows: intensity {a!r} missing a "
+                        f"reject/preempt cell")
+            continue
+        if not pre["admitted_per_s"] > rej["admitted_per_s"]:
+            errs.append(f"traffic claim: at {a!r} preempt admitted/s "
+                        f"{pre['admitted_per_s']:.3f} fails to beat "
+                        f"reject {rej['admitted_per_s']:.3f}")
+    if not sum(r["n_preemptions"] for r in t["rows"]) > 0:
+        errs.append("traffic claim: no preemption anywhere in the sweep "
+                    "— the preempt rows never exercised the mechanism")
+    if not sum(r["n_rejected"] for r in t["rows"]
+               if r["policy"] == "reject") > 0:
+        errs.append("traffic claim: the reject baseline never dropped a "
+                    "request — the comparison is vacuous")
+
+
 def check(doc) -> list:
     errs = []
     for field, ty in TOP_FIELDS.items():
@@ -292,6 +552,7 @@ def check(doc) -> list:
     if not errs:
         _check_prefix_claims(
             [c for c in doc["configs"] if c["mix"] == "prefix"], errs)
+        _check_traffic(doc["traffic"], errs)
     return errs
 
 
@@ -311,9 +572,11 @@ def main() -> None:
         sys.exit(1)
     caches = sorted({c["cache"] for c in doc["configs"]})
     npfx = sum(c["mix"] == "prefix" for c in doc["configs"])
+    trows = doc["traffic"]["rows"]
     print(f"{path}: valid {SCHEMA} ({len(doc['configs'])} configs, "
           f"caches={caches}, sync_every={doc['sync_every']}, "
-          f"prefix_rows={npfx})")
+          f"prefix_rows={npfx}, traffic_rows={len(trows)}, "
+          f"preemptions={sum(r['n_preemptions'] for r in trows)})")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,41 @@ import argparse
 import time
 
 
+def safe_rate(count: float, seconds: float) -> float:
+    """Throughput that tolerates degenerate windows: a zero-decode or
+    zero-duration run (all-prefill workloads, --new-tokens 1, warmup
+    excision leaving an empty window) reports 0.0 instead of crashing
+    the report with a ZeroDivisionError."""
+    return count / seconds if seconds > 0 else 0.0
+
+
+def parse_arrival(spec: str):
+    """Parse an ``--arrival`` spec into ``(kind, params)``:
+
+    ``batch``                      — pre-load every request (PR 2-7 path)
+    ``poisson:<rate>``             — Poisson arrivals at <rate> req/s
+    ``onoff:<rate>:<on_s>:<off_s>``— bursty on/off modulated Poisson
+    ``trace:<path>``               — replay a JSONL trace
+    """
+    parts = spec.split(":")
+    kind = parts[0]
+    try:
+        if kind == "batch" and len(parts) == 1:
+            return "batch", ()
+        if kind == "poisson" and len(parts) == 2:
+            return "poisson", (float(parts[1]),)
+        if kind == "onoff" and len(parts) == 4:
+            return "onoff", (float(parts[1]), float(parts[2]),
+                             float(parts[3]))
+        if kind == "trace" and len(parts) >= 2:
+            return "trace", (spec.split(":", 1)[1],)
+    except ValueError:
+        pass
+    raise ValueError(
+        f"bad --arrival {spec!r}: expected batch, poisson:<rate>, "
+        f"onoff:<rate>:<on_s>:<off_s>, or trace:<path>")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -110,6 +145,31 @@ def main() -> None:
     ap.add_argument("--shard-pool", action="store_true",
                     help="shard the page pool's page dim over the data "
                          "axes (with --shard)")
+    ap.add_argument("--arrival", default="batch",
+                    help="paged mode request arrivals: 'batch' (pre-load "
+                         "everything), 'poisson:<rate>' req/s, "
+                         "'onoff:<rate>:<on_s>:<off_s>' bursty, or "
+                         "'trace:<path>' JSONL replay — non-batch "
+                         "arrivals serve through the asyncio front end")
+    ap.add_argument("--slo", type=float, default=0.0,
+                    help="async mode: mark ~2/3 of synthetic requests as "
+                         "an interactive class (priority 0) with this "
+                         "TTFT deadline in seconds; the rest become a "
+                         "batch class (priority 1, no deadline).  0 = "
+                         "single default class")
+    ap.add_argument("--preempt", action="store_true",
+                    help="async mode: preempt-and-swap — under pool "
+                         "pressure a lower-priority victim's MX KV pages "
+                         "swap (still packed) to host memory and restore "
+                         "token-identically on re-admission")
+    ap.add_argument("--admission", choices=["block", "reject"],
+                    default="block",
+                    help="async mode: backpressure policy — 'block' "
+                         "queues submissions, 'reject' drops requests "
+                         "that cannot start immediately")
+    ap.add_argument("--speedup", type=float, default=0.0,
+                    help="async mode: divide trace arrival times by this "
+                         "(0 = submit as fast as the loop allows)")
     args = ap.parse_args()
 
     import contextlib
@@ -210,6 +270,16 @@ def main() -> None:
     gen = GenerationConfig(max_new_tokens=args.new_tokens,
                            temperature=args.temperature)
 
+    arrival_kind, arrival_params = parse_arrival(args.arrival)
+    if arrival_kind != "batch" and not args.paged:
+        ap.error("--arrival needs --paged (the async front end drives "
+                 "the continuous-batching engine)")
+
+    if args.paged and arrival_kind != "batch":
+        _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
+                     arrival_kind, arrival_params)
+        return
+
     if args.paged:
         rng = np.random.default_rng(0)
         n_req = args.requests or 2 * args.batch
@@ -225,7 +295,7 @@ def main() -> None:
             page_size=args.page_size, max_len=max_len, rules=rules,
             gen=gen, sync_every=args.sync_every,
             prefill_bucket=args.prefill_bucket or None,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, preempt=args.preempt)
         shared = rng.integers(0, cfg.vocab, size=args.shared_prefix
                               ).astype(np.int32)
         prompts = []
@@ -247,7 +317,8 @@ def main() -> None:
               f"{len(out)} requests "
               f"({'mixed' if args.mixed else 'uniform'} lengths), "
               f"{toks} tokens in {dt:.2f}s (incl. compile) — "
-              f"{toks / dt:.1f} tok/s, {eng.n_steps} decode steps in "
+              f"{safe_rate(toks, dt):.1f} tok/s, "
+              f"{eng.n_steps} decode steps in "
               f"{eng.n_syncs} fused windows, "
               f"{eng.blocks.free_pages}/{eng.blocks.num_pages} pages free")
         print(f"[serve] HBM pools: weights "
@@ -286,10 +357,106 @@ def main() -> None:
     toks = out.size
     print(f"[serve] {cfg.name} quant={cfg.mx}: generated {toks} tokens; "
           f"first {t_first:.2f}s (incl. compile), steady {t_steady:.2f}s "
-          f"({toks / t_steady:.1f} tok/s)")
+          f"({safe_rate(toks, t_steady):.1f} tok/s)")
     print(f"[serve] weight HBM: {eng.weight_pool_nbytes / 1024:.1f} KiB"
           f"{' (MX-resident)' if args.weight_resident else ' (fp)'}")
     print("[serve] sample output tokens:", out[0][:12].tolist())
+
+
+def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
+                 arrival_kind, arrival_params) -> None:
+    """Drive the continuous-batching engine through the asyncio front end
+    under a synthetic (or replayed) arrival process and report tail
+    latency + preemption accounting."""
+    import asyncio
+
+    import numpy as np
+
+    from repro.serve import (AsyncServer, ContinuousBatchingEngine,
+                             TrafficClass, latency_summary, load_trace,
+                             on_off_times, poisson_times, replay,
+                             synthesize)
+
+    n_req = args.requests or 2 * args.batch
+    if arrival_kind == "trace":
+        arrivals = load_trace(arrival_params[0])
+        max_prompt = max(a.prompt.shape[0] for a in arrivals)
+        max_new = max(a.max_new_tokens for a in arrivals)
+    else:
+        if arrival_kind == "poisson":
+            times = poisson_times(arrival_params[0], n_req, seed=0)
+        else:
+            rate, on_s, off_s = arrival_params
+            times = on_off_times(rate, n_req, on_s=on_s, off_s=off_s,
+                                 seed=0)
+        lo = max(1, args.prompt_len // 4)
+        hi = max(lo + 1, 2 * args.prompt_len) if args.mixed \
+            else args.prompt_len + 1
+        lo = lo if args.mixed else args.prompt_len
+        if args.slo > 0:
+            classes = [
+                TrafficClass("interactive", (lo, hi),
+                             (args.new_tokens, args.new_tokens + 1),
+                             priority=0, deadline_s=args.slo, weight=2.0),
+                TrafficClass("batch", (lo, hi),
+                             (args.new_tokens, 2 * args.new_tokens + 1),
+                             priority=1, weight=1.0),
+            ]
+        else:
+            classes = [TrafficClass("default", (lo, hi),
+                                    (args.new_tokens,
+                                     args.new_tokens + 1))]
+        arrivals = synthesize(times, classes, cfg.vocab, seed=0)
+        max_prompt = max(a.prompt.shape[0] for a in arrivals)
+        max_new = max(a.max_new_tokens for a in arrivals)
+
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=args.batch, page_size=args.page_size,
+        max_len=max_prompt + max_new + 1, rules=rules, gen=gen,
+        sync_every=args.sync_every,
+        prefill_bucket=args.prefill_bucket or None,
+        prefix_cache=args.prefix_cache, preempt=args.preempt)
+    speedup = args.speedup if args.speedup > 0 else float("inf")
+
+    async def run():
+        async with AsyncServer(eng, admission=args.admission) as srv:
+            return await replay(srv, arrivals, speedup=speedup)
+
+    with mesh_ctx:
+        t0 = time.perf_counter()
+        streams, rejected = asyncio.run(run())
+        dt = time.perf_counter() - t0
+
+    fin = eng.finished_in_window
+    summ = latency_summary(fin)
+    toks = sum(len(r.out) for r in fin)
+    print(f"[serve] {cfg.name} async quant={cfg.mx} "
+          f"arrival={args.arrival} admission={args.admission} "
+          f"preempt={'on' if args.preempt else 'off'}: "
+          f"{len(fin)} served / {len(rejected)} rejected of "
+          f"{len(arrivals)} arrivals, {toks} tokens in {dt:.2f}s "
+          f"(incl. compile) — {safe_rate(toks, dt):.1f} tok/s, "
+          f"{safe_rate(len(fin), dt):.2f} admitted req/s")
+    if "ttft_p50_ms" in summ:
+        print(f"[serve] TTFT p50 {summ['ttft_p50_ms']:.1f} ms / "
+              f"p99 {summ['ttft_p99_ms']:.1f} ms"
+              + (f", ITL p50 {summ['itl_p50_ms']:.2f} ms / "
+                 f"p99 {summ['itl_p99_ms']:.2f} ms"
+                 if "itl_p50_ms" in summ else ""))
+    if "slo_attainment" in summ:
+        print(f"[serve] SLO attainment (TTFT <= {args.slo:.3g}s): "
+              f"{summ['slo_attainment']:.1%}")
+    ph = eng.phase
+    print(f"[serve] phase wall: prefill {ph['prefill']:.2f}s, decode "
+          f"{ph['decode']:.2f}s, host-sync {ph['sync']:.2f}s, swap "
+          f"{ph['swap']:.2f}s")
+    if args.preempt:
+        sw = eng.swap_store
+        print(f"[serve] preempt-and-swap: {eng.n_preemptions} "
+              f"preemptions, {eng.n_restores} restores, swap traffic "
+              f"{sw.bytes_out / 1024:.1f} KiB out / "
+              f"{sw.bytes_in / 1024:.1f} KiB in (MX-packed), peak "
+              f"resident {sw.peak_resident_bytes / 1024:.1f} KiB")
 
 
 if __name__ == "__main__":

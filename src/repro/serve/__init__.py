@@ -1,6 +1,13 @@
 from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
                                 GenerationConfig, ServeEngine)
+from repro.serve.frontend import (AsyncServer, RejectedError,  # noqa: F401
+                                  RequestStream, latency_summary,
+                                  percentile)
 from repro.serve.paging import BlockManager, pages_needed  # noqa: F401
 from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.scheduler import (Request, RequestState,  # noqa: F401
                                    Scheduler)
+from repro.serve.swap import HostSwapStore, SwapData  # noqa: F401
+from repro.serve.traffic import (Arrival, TrafficClass,  # noqa: F401
+                                 load_trace, on_off_times, poisson_times,
+                                 replay, save_trace, synthesize)

@@ -50,6 +50,8 @@ from repro.models.registry import Model
 from repro.serve.paging import TRASH_PAGE, BlockManager, pages_needed
 from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.swap import (HostSwapStore, SwapData, concat_snapshots,
+                              gather_pages, scatter_pages)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +150,14 @@ class ContinuousBatchingEngine:
                          one batch.  Larger buckets mean fewer distinct
                          prefill shapes (fewer retraces) at the cost of
                          padded FLOPs.
+    ``preempt``        — enable preempt-and-swap: when the waiting head
+                         cannot be admitted and a strictly lower-priority
+                         request is running, the victim's KV pages are
+                         copied (MX codes still packed) to the host swap
+                         store, its slot freed, and the request restored
+                         page-for-page on re-admission — continuation is
+                         token-identical to an unpreempted run (asserted
+                         in tests/test_serve_preempt.py).
     ``prefix_cache``   — enable prefix sharing: finished prefills publish
                          their full KV pages into a trie keyed by page
                          token content (``repro.serve.prefix``); later
@@ -168,7 +178,8 @@ class ContinuousBatchingEngine:
                  gen: GenerationConfig = GenerationConfig(),
                  sync_every: int = 8,
                  prefill_bucket: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 preempt: bool = False):
         if not model.supports_paged():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching needs a GQA "
@@ -191,6 +202,8 @@ class ContinuousBatchingEngine:
         self.prefix = PrefixCache(self.blocks) if prefix_cache else None
         self.scheduler = Scheduler(max_slots, self.blocks,
                                    prefix=self.prefix)
+        self.preempt = bool(preempt)
+        self.swap_store = HostSwapStore()
         self.pool = model.init_paged_cache(num_pages, page_size)
         self.gen = gen
         self.rules = rules
@@ -215,8 +228,16 @@ class ContinuousBatchingEngine:
         self.n_cow_forks = 0
         self.peak_mapped_pages = 0         # distinct pages in slot tables
         self.peak_shared_pages = 0         # mapped by >= 2 table entries
-        # per-phase wall clock (bench_serve schema v2)
-        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0}
+        # preempt-and-swap accounting (bench_serve schema v4)
+        self.n_preemptions = 0
+        self.n_restores = 0
+        # latency-observability window start: requests finished before
+        # this index in scheduler.finished predate the last reset_metrics
+        # (warmup) and are excluded from finished_in_window summaries
+        self._metrics_start = 0
+        # per-phase wall clock (bench_serve schema v2; "swap" is v4)
+        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0,
+                      "swap": 0.0}
         cfg = model.cfg
         self.vocab = cfg.vocab
         temperature = float(gen.temperature)
@@ -261,6 +282,11 @@ class ContinuousBatchingEngine:
             writer touches them."""
             return model.copy_pool_pages(pool, src, dst)
 
+        def _swap_in(pool, page_ids, host):
+            """Batched restore: scatter a swap-store snapshot back into
+            freshly allocated pages (donated pool — no double buffer)."""
+            return scatter_pages(pool, page_ids, host)
+
         def _multi(params, tok, pool, bt, lengths, remaining, keys,
                    n_steps):
             with _ctx():
@@ -278,6 +304,7 @@ class ContinuousBatchingEngine:
         self._suffix_prefill = jax.jit(_suffix_prefill,
                                        donate_argnums=(5,))
         self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
+        self._swap_in = jax.jit(_swap_in, donate_argnums=(0,))
         self._multi = jax.jit(_multi, static_argnums=(7,),
                               donate_argnums=(2,))
 
@@ -322,33 +349,62 @@ class ContinuousBatchingEngine:
         self.peak_shared_pages = max(self.peak_shared_pages,
                                      self.blocks.shared_pages)
 
+    @property
+    def finished_in_window(self) -> List[Request]:
+        """Requests finished since the last ``reset_metrics`` — the
+        population latency summaries and bench rows must draw from, so a
+        warmup request's TTFT/ITL samples can't leak into steady state."""
+        return self.scheduler.finished[self._metrics_start:]
+
     def reset_metrics(self) -> None:
-        """Zero the serving counters and peaks for a steady-state
-        measurement window (e.g. after a warmup request has populated the
-        prefix trie).  The trie, page pool, and jitted closures stay warm;
-        only the accounting restarts."""
+        """Zero the serving counters, peaks, latency window, and swap
+        traffic for a steady-state measurement window (e.g. after a
+        warmup request has populated the prefix trie).  The trie, page
+        pool, swap-store *residents*, and jitted closures stay warm; only
+        the accounting restarts.  Requests finished before the reset drop
+        out of ``finished_in_window``, so stale hit-rate or TTFT samples
+        cannot survive warmup excision."""
         self.n_steps = self.n_syncs = self.n_generated = 0
         self.prefill_tokens_computed = 0
         self.n_cow_forks = 0
         self.peak_mapped_pages = 0
         self.peak_shared_pages = 0
-        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0}
+        self.n_preemptions = 0
+        self.n_restores = 0
+        self._metrics_start = len(self.scheduler.finished)
+        self.scheduler.n_preemptions = 0
+        self.scheduler.n_restores = 0
+        self.swap_store.reset_counters()
+        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0,
+                      "swap": 0.0}
         if self.prefix is not None:
             self.prefix.lookups = self.prefix.hits = 0
             self.prefix.tokens_matched = 0
 
     # ------------------------------------------------------------ requests
-    def add_request(self, prompt, max_new_tokens: int) -> int:
+    def add_request(self, prompt, max_new_tokens: int, *,
+                    priority: int = 0,
+                    deadline_s: Optional[float] = None,
+                    arrival_t: Optional[float] = None) -> int:
         """Queue a prompt; returns the request id.  Admission happens on a
-        subsequent ``step()`` when a slot and enough pages are free.
-        Raises ValueError (from ``Scheduler.submit``) when the sequence can
-        never fit a slot or the pool."""
+        subsequent ``step()`` when a slot and enough pages are free, in
+        (priority, deadline, arrival) order — ``priority`` 0 is the most
+        urgent class, ``deadline_s`` an optional TTFT target used for EDF
+        ordering within the class and SLO-attainment reporting.
+        ``arrival_t`` (a ``time.perf_counter`` stamp) defaults to now;
+        the async front end passes the submission-time stamp explicitly
+        so queueing delay counts against TTFT.  Raises ValueError (from
+        ``Scheduler.submit``) when the sequence can never fit a slot or
+        the pool."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (prefill always "
                              "emits the first generated token)")
         req = Request(rid=self._next_rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens, priority=priority,
+                      deadline_s=deadline_s,
+                      arrival_t=(time.perf_counter()
+                                 if arrival_t is None else arrival_t))
         self.scheduler.submit(req)              # validates capacity
         self._next_rid += 1
         return req.rid
@@ -360,6 +416,15 @@ class ContinuousBatchingEngine:
         returns the (request id, token) pairs emitted this cycle in step
         order (admissions emit their prefill token here too)."""
         emitted: List[Tuple[int, int]] = []
+        if self.preempt:
+            # swap out one victim at a time until the waiting head fits
+            # (or no strictly lower-priority runner remains); the freed
+            # slots/pages are re-granted by the admit() right below
+            while True:
+                victim = self.scheduler.pick_victim()
+                if victim is None:
+                    break
+                self._swap_out(victim)
         t0 = time.perf_counter()
         admitted = self.scheduler.admit()
         self.phase["sync"] += time.perf_counter() - t0
@@ -388,6 +453,9 @@ class ContinuousBatchingEngine:
                 if t < rem0[slot]:
                     tok = int(toks[t, slot])
                     req.out.append(tok)
+                    # tokens become *visible* at the sync boundary: every
+                    # token of a fused window shares its drain stamp
+                    req.t_tokens.append(t2)
                     emitted.append((req.rid, tok))
                     self.n_generated += 1
         for slot, req in snapshot:
@@ -436,6 +504,15 @@ class ContinuousBatchingEngine:
         bucket of same-padded *suffix* lengths prefills only its uncached
         positions through the paged pool.  Cold admissions keep the exact
         contiguous prefill+scatter path of ``prefix_cache=False``."""
+        restored_rids = {r.rid for r in admitted
+                         if r.rid in self.swap_store}
+        if restored_rids:
+            self._restore_swapped(
+                [r for r in admitted if r.rid in restored_rids])
+            admitted = [r for r in admitted
+                        if r.rid not in restored_rids]
+        if not admitted:
+            return
         t0 = time.perf_counter()
         cold = [r for r in admitted if r.matched_tokens == 0]
         hits = [r for r in admitted if r.matched_tokens > 0]
@@ -521,6 +598,64 @@ class ContinuousBatchingEngine:
                 bt[jnp.asarray(slots)])
             self._finish_prefill(reqs, slots, keys, first, emitted)
 
+    # ------------------------------------------------- preempt-and-swap
+    def _swap_out(self, req: Request) -> None:
+        """Copy ``req``'s KV pages (MX codes still packed) to the host
+        swap store and free its slot — the device side of
+        ``Scheduler.preempt``.  The saved per-slot PRNG key plus the
+        request's own token history make the later restore
+        token-identical."""
+        t0 = time.perf_counter()
+        slot = req.slot
+        ids = self.blocks.slot_page_ids(slot)
+        host, nbytes = gather_pages(self.pool, ids)
+        self.swap_store.put(req.rid, SwapData(
+            pages=host, n_pages=len(ids),
+            length=int(self._lengths[slot]),
+            key=np.asarray(self._slot_keys[slot]), nbytes=nbytes))
+        req.swap_pages = len(ids)
+        self.scheduler.preempt(req)
+        self.n_preemptions += 1
+        self._cur_tok[slot] = 0
+        self._lengths[slot] = 0
+        self._remaining[slot] = 0
+        self.phase["swap"] += time.perf_counter() - t0
+
+    def _restore_swapped(self, reqs: List[Request]) -> None:
+        """Re-admission of preempted requests: scatter their swap-store
+        snapshots into the freshly allocated private pages (one batched
+        device call for all restores this cycle) and rebuild the slot
+        state — current token, cache length, budget, and the PRNG key
+        exactly as saved, so the continuation is bit-identical.  No
+        prefill runs and no token is emitted (the first token was already
+        streamed before the preemption)."""
+        t0 = time.perf_counter()
+        ids_all: List[int] = []
+        datas = []
+        for r in reqs:
+            data = self.swap_store.pop(r.rid)
+            slot_ids = self.blocks.slot_page_ids(r.slot)
+            assert len(slot_ids) == data.n_pages, \
+                "restore admission allocated the swapped page count"
+            ids_all.extend(slot_ids)
+            datas.append(data)
+        self.pool = self._swap_in(
+            self.pool, jnp.asarray(ids_all, jnp.int32),
+            concat_snapshots([d.pages for d in datas]))
+        for r, data in zip(reqs, datas):
+            slot = r.slot
+            # out[-1] is the last sampled (not yet decoded) token; the
+            # cache holds prompt + out[:-1] = data.length positions
+            self._cur_tok[slot] = r.out[-1]
+            self._lengths[slot] = data.length
+            self._remaining[slot] = r.max_new_tokens - len(r.out)
+            self._slot_keys = self._slot_keys.at[slot].set(
+                jnp.asarray(data.key))
+            r.swap_pages = 0
+            self.n_restores += 1
+        self._note_page_stats()
+        self.phase["swap"] += time.perf_counter() - t0
+
     def _finish_prefill(self, reqs: List[Request], slots, keys, first,
                         emitted: List[Tuple[int, int]]) -> None:
         """Common admission epilogue: install per-slot keys, emit each
@@ -528,6 +663,7 @@ class ContinuousBatchingEngine:
         grant the first decode write's page."""
         self._slot_keys = self._slot_keys.at[slots].set(keys)
         first = np.asarray(first)
+        now = time.perf_counter()
         for i, r in enumerate(reqs):
             slot = r.slot
             tok = int(first[i])
@@ -542,6 +678,7 @@ class ContinuousBatchingEngine:
                 self.prefix.insert(
                     r.prompt, self.blocks.slot_page_ids(slot)[:n_full])
             r.out.append(tok)
+            r.t_tokens.append(now)      # first-token (TTFT) stamp
             self.n_generated += 1
             emitted.append((r.rid, tok))
             if r.done:
@@ -566,6 +703,7 @@ class ContinuousBatchingEngine:
             self.prefix.insert(
                 seq, self.blocks.slot_page_ids(slot)[:n_full])
         self.scheduler.evict(req)
+        req.t_finished = time.perf_counter()
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0
         self._remaining[slot] = 0

@@ -1,0 +1,294 @@
+"""Asyncio serving front end over ``ContinuousBatchingEngine``.
+
+``AsyncServer`` accepts requests as they arrive (coroutines calling
+:meth:`submit`), streams each request's tokens back through its own
+``asyncio.Queue``, and drives the engine from a **single background step
+loop** — the engine itself stays synchronous and single-threaded, so all
+of PR 2-7's token-identity guarantees carry over verbatim.
+
+Concurrency model:
+
+* Submissions land in a pending deque; the step loop applies them to the
+  scheduler *between* engine steps, always on the loop task — the
+  scheduler is never touched concurrently with a step, even when the
+  step itself runs in a worker thread (``use_executor=True``).
+* Each accepted request gets a :class:`RequestStream`; the step loop
+  pushes ``(token, final)`` pairs into its queue as ``engine.step()``
+  emits them, and the caller consumes them with ``async for``.
+* Backpressure: ``max_queued`` bounds the number of requests waiting for
+  admission; ``submit`` blocks (``admission="block"``) until the backlog
+  drains, or raises :class:`RejectedError` (``admission="reject"``) when
+  the request could not *start immediately* — the reject-on-full baseline
+  the bench's preempt-and-swap claim is measured against.
+* ``use_executor=True`` runs each engine step in the default thread-pool
+  executor so the event loop stays responsive while the device computes;
+  the engine is still only ever stepped by one caller at a time.
+
+Latency accounting is carried by the ``Request`` objects themselves
+(``arrival_t`` is stamped at submission, first-token / per-token stamps by
+the engine); :func:`latency_summary` aggregates a population of finished
+requests into the p50/p99 TTFT + ITL numbers ``bench_serve`` schema v4
+reports.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import time
+from typing import AsyncIterator, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.scheduler import Request
+
+
+class RejectedError(RuntimeError):
+    """Raised by ``submit`` under ``admission="reject"`` when the request
+    cannot start immediately (no free slot/pages, or a backlog exists)."""
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (no interpolation): the ceil(q/100 * n)-th
+    smallest sample.  Exactly reproducible from the raw records by the
+    dependency-free bench validator — that is the point."""
+    if not samples:
+        raise ValueError("percentile of an empty sample set")
+    if not 0 < q <= 100:
+        raise ValueError(f"q must be in (0, 100], got {q}")
+    s = sorted(samples)
+    rank = -(-(q / 100.0) * len(s) // 1)        # ceil without math import
+    return s[int(rank) - 1]
+
+
+def latency_summary(finished: Sequence[Request]) -> Dict[str, float]:
+    """p50/p99 TTFT and ITL (milliseconds) plus SLO attainment over a
+    population of finished requests.  Requests lacking stamps (none
+    finished, or an engine driven without arrival times) are skipped."""
+    ttft = [r.ttft_s for r in finished if r.ttft_s is not None]
+    itl: List[float] = []
+    for r in finished:
+        itl.extend(r.itl_s)
+    out: Dict[str, float] = {"n_requests": float(len(finished))}
+    if ttft:
+        out["ttft_p50_ms"] = percentile(ttft, 50) * 1e3
+        out["ttft_p99_ms"] = percentile(ttft, 99) * 1e3
+    if itl:
+        out["itl_p50_ms"] = percentile(itl, 50) * 1e3
+        out["itl_p99_ms"] = percentile(itl, 99) * 1e3
+    met = [r.deadline_met for r in finished if r.deadline_met is not None]
+    if met:
+        out["slo_attainment"] = sum(met) / len(met)
+    return out
+
+
+class RequestStream:
+    """One request's token stream: ``async for tok in stream`` yields
+    generated token ids as the engine emits them; :meth:`tokens` collects
+    the full output.  ``request`` exposes the live ``Request`` (latency
+    stamps, preemption count) once finished."""
+
+    def __init__(self, rid: int, request: Request):
+        self.rid = rid
+        self.request = request
+        self._q: asyncio.Queue = asyncio.Queue()
+        self._out: List[int] = []
+        self._done = False
+
+    def __aiter__(self) -> AsyncIterator[int]:
+        return self._gen()
+
+    async def _gen(self) -> AsyncIterator[int]:
+        # once the final token is consumed the stream is exhausted —
+        # iterating again (e.g. tokens() after an async-for) must stop
+        # instead of awaiting a queue nothing will ever fill
+        while not self._done:
+            tok, final = await self._q.get()
+            self._out.append(tok)
+            self._done = final
+            yield tok
+
+    async def tokens(self) -> np.ndarray:
+        """Drain the stream to completion; returns all generated tokens
+        (including any consumed earlier through ``async for``)."""
+        async for _ in self:
+            pass
+        return np.asarray(self._out, np.int32)
+
+
+class _Pending:
+    """One submission awaiting application by the step loop."""
+
+    __slots__ = ("future", "prompt", "max_new_tokens", "priority",
+                 "deadline_s", "arrival_t")
+
+    def __init__(self, future, prompt, max_new_tokens, priority,
+                 deadline_s, arrival_t):
+        self.future = future
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.priority = priority
+        self.deadline_s = deadline_s
+        self.arrival_t = arrival_t
+
+
+class AsyncServer:
+    """Single-loop asyncio front end over a ``ContinuousBatchingEngine``.
+
+    ``admission`` — ``"block"`` queues submissions (awaiting when more
+    than ``max_queued`` are waiting for admission) or ``"reject"`` raises
+    :class:`RejectedError` unless the request can start immediately.
+    ``use_executor`` — run each engine step in the default thread-pool
+    executor so jitted device work doesn't block the event loop.
+
+    Use as an async context manager (starts/stops the step loop), or call
+    :meth:`start` / :meth:`stop` explicitly.
+    """
+
+    def __init__(self, engine: ContinuousBatchingEngine, *,
+                 admission: str = "block", max_queued: int = 64,
+                 use_executor: bool = False):
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', "
+                             f"got {admission!r}")
+        if max_queued < 1:
+            raise ValueError(f"max_queued must be >= 1, got {max_queued}")
+        self.engine = engine
+        self.admission = admission
+        self.max_queued = int(max_queued)
+        self.use_executor = bool(use_executor)
+        self._pending: collections.deque = collections.deque()
+        self._streams: Dict[int, RequestStream] = {}
+        self._task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._space: Optional[asyncio.Condition] = None
+        self._stopping = False
+        self.n_accepted = 0
+        self.n_rejected = 0
+
+    # ------------------------------------------------------------ lifecycle
+    async def __aenter__(self) -> "AsyncServer":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("server already started")
+        self._wake = asyncio.Event()
+        self._space = asyncio.Condition()
+        self._stopping = False
+        self._task = asyncio.get_running_loop().create_task(self._loop())
+
+    async def stop(self) -> None:
+        """Drain in-flight work, then stop the step loop."""
+        await self.drain()
+        self._stopping = True
+        self._wake.set()
+        await self._task
+        self._task = None
+
+    # ------------------------------------------------------------ submission
+    def _backlog(self) -> int:
+        """Requests accepted but not yet admitted into a slot."""
+        return len(self._pending) + len(self.engine.scheduler.waiting)
+
+    async def submit(self, prompt, max_new_tokens: int, *,
+                     priority: int = 0,
+                     deadline_s: Optional[float] = None) -> RequestStream:
+        """Accept one request; resolves to its :class:`RequestStream` once
+        the step loop has applied the submission (or raises
+        :class:`RejectedError` under ``admission="reject"``).
+
+        The arrival timestamp is taken *here* — queueing delay (backlog
+        under ``"block"``, scheduler wait, preemption) all counts against
+        the request's TTFT.
+        """
+        if self._task is None:
+            raise RuntimeError("server is not running")
+        arrival = time.perf_counter()
+        if self.admission == "block":
+            async with self._space:
+                await self._space.wait_for(
+                    lambda: self._backlog() < self.max_queued)
+        future = asyncio.get_running_loop().create_future()
+        self._pending.append(_Pending(
+            future, np.asarray(prompt, np.int32).reshape(-1),
+            int(max_new_tokens), int(priority), deadline_s, arrival))
+        self._wake.set()
+        return await future
+
+    async def drain(self) -> None:
+        """Wait until every accepted request has finished streaming."""
+        while (self._pending or self._streams
+               or self.engine.scheduler.has_work()):
+            self._wake.set()
+            await asyncio.sleep(0.001)
+
+    # ------------------------------------------------------------ step loop
+    def _apply_pending(self) -> None:
+        """Apply queued submissions to the scheduler — always on the loop
+        task, between engine steps, so scheduler state is single-writer."""
+        while self._pending:
+            p = self._pending.popleft()
+            if p.future.cancelled():
+                continue
+            if self.admission == "reject" \
+                    and not self.engine.scheduler.can_admit_now(
+                        p.prompt, p.max_new_tokens):
+                self.n_rejected += 1
+                p.future.set_exception(RejectedError(
+                    "cannot start immediately: admission='reject'"))
+                continue
+            try:
+                rid = self.engine.add_request(
+                    p.prompt, p.max_new_tokens, priority=p.priority,
+                    deadline_s=p.deadline_s, arrival_t=p.arrival_t)
+            except ValueError as e:        # can never fit slot/pool
+                p.future.set_exception(e)
+                continue
+            req = next(r for r in self.engine.scheduler.waiting
+                       if r.rid == rid)
+            stream = RequestStream(rid, req)
+            self._streams[rid] = stream
+            self.n_accepted += 1
+            p.future.set_result(stream)
+
+    async def _loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            self._apply_pending()
+            if self.engine.scheduler.has_work():
+                if self.use_executor:
+                    emitted = await loop.run_in_executor(
+                        None, self.engine.step)
+                else:
+                    emitted = self.engine.step()
+                    await asyncio.sleep(0)  # let submitters interleave
+                self._publish(emitted)
+            async with self._space:
+                self._space.notify_all()
+            if not self.engine.scheduler.has_work() \
+                    and not self._pending:
+                if self._stopping:
+                    return
+                self._wake.clear()
+                if self._pending:           # raced with a submit
+                    continue
+                await self._wake.wait()
+
+    def _publish(self, emitted) -> None:
+        done_rids = {r.rid for r in self.engine.scheduler.finished}
+        last: Dict[int, int] = {}
+        for i, (rid, _) in enumerate(emitted):
+            last[rid] = i
+        for i, (rid, tok) in enumerate(emitted):
+            stream = self._streams.get(rid)
+            if stream is None:
+                continue
+            final = rid in done_rids and i == last[rid]
+            stream._q.put_nowait((tok, final))
+            if final:
+                del self._streams[rid]

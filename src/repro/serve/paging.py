@@ -266,6 +266,18 @@ class BlockManager:
         self._pins[page] -= 1
         self._return_if_dead(page)
 
+    def swap_out(self, slot: int) -> List[Tuple[int, bool]]:
+        """Snapshot-and-release for preemption: returns ``slot``'s
+        ``(physical page, was_shared)`` entries in logical order, then
+        releases the row exactly like :meth:`release`.  The caller must
+        have copied the pages' device contents to the swap store *before*
+        this call — afterwards the non-shared, non-pinned pages are back
+        on the free list and may be rewritten at any time."""
+        row = list(zip(self._owned[slot],
+                       (bool(s) for s in self._shared[slot])))
+        self.release(slot)
+        return row
+
     def release(self, slot: int) -> None:
         """Decref all of ``slot``'s pages and re-point its row at trash.
         Pages still mapped by other slots or pinned by the prefix cache

@@ -1,18 +1,35 @@
-"""Slot-based continuous-batching scheduler.
+"""Slot-based continuous-batching scheduler with SLO-aware admission.
 
-Requests arrive with arbitrary prompt lengths and generation budgets; the
-scheduler admits them into a fixed number of decode slots as slots and KV
-pages free up, and evicts them on completion.  Admission is conservative:
-a request is only admitted when the pool can hold its whole sequence
-(prompt + max_new_tokens), so an in-flight request can never stall on page
-exhaustion — preemption/swapping is future work.
+Requests arrive with arbitrary prompt lengths, generation budgets, and an
+SLO class (``priority`` — lower is more urgent — plus an optional
+time-to-first-token ``deadline_s``); the scheduler admits them into a
+fixed number of decode slots as slots and KV pages free up, and evicts
+them on completion.
+
+Admission order is (priority, EDF deadline, arrival) — FIFO within a
+class, so the PR-2 behavior is unchanged when every request uses the
+default class.  Admission is conservative: a request is only admitted
+when the pool can hold its whole sequence (prompt + max_new_tokens), so
+an in-flight request can never stall on page exhaustion.
+
+**Preempt-and-swap** (this PR): when the head of the queue cannot be
+admitted and a strictly lower-priority request is running,
+``pick_victim`` nominates the youngest, least-important runner; the
+engine copies the victim's KV pages to the host swap store (MX codes
+stay packed, so the swap traffic is already compressed) and calls
+:meth:`preempt`, which frees the slot and re-queues the victim at its
+*original* (priority, arrival) rank — it resumes ahead of later arrivals
+of its class, page-for-page, token-identically.  Restored requests skip
+prefill entirely: admission allocates the same number of private pages
+the victim held and the engine scatters the saved contents back.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import enum
-from collections import deque
-from typing import Deque, Dict, List, Optional
+import time
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -23,6 +40,7 @@ from repro.serve.prefix import PrefixCache
 class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
+    SWAPPED = "swapped"         # preempted; KV pages live in the swap store
     FINISHED = "finished"
 
 
@@ -32,6 +50,10 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (L,) int32
     max_new_tokens: int
+    # ---- SLO class -------------------------------------------------------
+    priority: int = 0                   # lower = more urgent
+    deadline_s: Optional[float] = None  # TTFT target, seconds from arrival
+    # ----------------------------------------------------------------------
     state: RequestState = RequestState.WAITING
     slot: int = -1
     out: List[int] = dataclasses.field(default_factory=list)
@@ -41,6 +63,15 @@ class Request:
     # fully-cached prompt forks its last page to rewrite position L-1)
     matched_tokens: int = 0
     cow_pending: int = 0
+    # ---- scheduling / preemption state ----------------------------------
+    seq: int = -1                       # arrival rank (set by submit)
+    swap_pages: int = 0                 # pages to re-allocate on restore
+    n_preemptions: int = 0
+    # ---- latency observability (bench_serve schema v4) ------------------
+    arrival_t: Optional[float] = None   # perf_counter at add_request
+    t_admitted: Optional[float] = None  # first admission
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
+    t_finished: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -67,19 +98,58 @@ class Request:
         """Tokens the request is still entitled to generate."""
         return self.max_new_tokens - len(self.out)
 
+    # ---- derived latency metrics ----------------------------------------
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Arrival -> first visible token (None until both exist)."""
+        if self.arrival_t is None or not self.t_tokens:
+            return None
+        return self.t_tokens[0] - self.arrival_t
+
+    @property
+    def itl_s(self) -> List[float]:
+        """Inter-token gaps between *visible* token timestamps.  Tokens
+        surfacing in the same fused decode window share a sync-boundary
+        stamp — a gap of ~0 is the honest latency of window delivery."""
+        return [b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])]
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """TTFT SLO outcome (None when no deadline or no token yet)."""
+        if self.deadline_s is None:
+            return None
+        t = self.ttft_s
+        return None if t is None else t <= self.deadline_s
+
+
+def _order(req: Request):
+    """Admission rank: priority class first, earliest TTFT deadline (EDF)
+    within a class, then arrival order.  Default-class requests with no
+    deadline reduce to pure FIFO."""
+    if req.arrival_t is not None and req.deadline_s is not None:
+        dl = req.arrival_t + req.deadline_s
+    else:
+        dl = float("inf")
+    return (req.priority, dl, req.seq)
+
 
 class Scheduler:
-    """FIFO admission into ``max_slots`` decode slots backed by ``blocks``."""
+    """Priority admission into ``max_slots`` decode slots backed by
+    ``blocks`` (FIFO within an SLO class; strict FIFO when every request
+    uses the default class)."""
 
     def __init__(self, max_slots: int, blocks: BlockManager,
                  prefix: Optional[PrefixCache] = None):
         self.max_slots = max_slots
         self.blocks = blocks
         self.prefix = prefix
-        self.waiting: Deque[Request] = deque()
-        self.running: Dict[int, Request] = {}       # slot -> request
+        self.waiting: List[Request] = []        # kept sorted by _order
+        self.running: Dict[int, Request] = {}   # slot -> request
         self.finished: List[Request] = []
         self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._seq = 0
+        self.n_preemptions = 0
+        self.n_restores = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -99,7 +169,10 @@ class Scheduler:
                 f"can never fit a slot "
                 f"({self.blocks.max_pages_per_slot} pages) or the pool "
                 f"({self.blocks.num_pages - 1} usable pages)")
-        self.waiting.append(req)
+        if req.seq < 0:
+            req.seq = self._seq
+            self._seq += 1
+        bisect.insort(self.waiting, req, key=_order)
 
     def _outstanding_pages(self) -> int:
         """*Fresh* pages the running set is still entitled to consume.
@@ -120,9 +193,10 @@ class Scheduler:
             for r in self.running.values())
 
     def admit(self) -> List[Request]:
-        """Admit waiting requests (FIFO, no head-of-line bypass) while a
-        slot is free and the pool can hold their full sequence on top of
-        what the running set is already entitled to.
+        """Admit waiting requests in (priority, deadline, arrival) order —
+        no head-of-line bypass — while a slot is free and the pool can
+        hold their full sequence on top of what the running set is
+        already entitled to.
 
         With a :class:`PrefixCache` installed, the longest cached full-page
         prefix of each prompt is mapped read-only into the new slot
@@ -131,14 +205,20 @@ class Scheduler:
         fully-cached prompt's last page — is charged against the free
         pool.  When pinned-but-unmapped trie pages are all that stand
         between a request and admission, the trie reclaims them LRU-first.
+
+        A SWAPPED request (preempted earlier) is re-admitted without a
+        prefix lookup: it gets exactly the private pages it held at
+        swap-out; the engine then restores their contents from the host
+        swap store instead of prefilling.
         """
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
+            restoring = req.state is RequestState.SWAPPED
             need_total = pages_needed(req.total_len, self.blocks.page_size)
             pages: List[int] = []
             matched = 0
-            if self.prefix is not None:
+            if self.prefix is not None and not restoring:
                 pages, matched = self.prefix.lookup(req.prompt)
             cow = 1 if matched and matched >= req.prompt_len else 0
             need_private = need_total - len(pages) + cow
@@ -154,10 +234,14 @@ class Scheduler:
                 avail += self.prefix.reclaim(need_private - avail)
             if need_private > avail:
                 self.blocks.release(slot)   # undo the tentative mapping
-                break                       # FIFO: wait for evictions
+                break                       # in-class FIFO: wait
             self._free_slots.pop()
-            priv = pages_needed(req.prompt_len, self.blocks.page_size) \
-                - len(pages)
+            if restoring:
+                priv = req.swap_pages
+                self.n_restores += 1
+            else:
+                priv = pages_needed(req.prompt_len, self.blocks.page_size) \
+                    - len(pages)
             if priv > 0:
                 ok = self.blocks.allocate(slot, priv)
                 assert ok
@@ -165,12 +249,85 @@ class Scheduler:
             req.matched_tokens = matched
             req.cow_pending = cow
             req.state = RequestState.RUNNING
+            if req.t_admitted is None:
+                req.t_admitted = time.perf_counter()
             self.running[slot] = req
-            self.waiting.popleft()
+            self.waiting.pop(0)
             admitted.append(req)
-            if self.prefix is not None:
+            if self.prefix is not None and not restoring:
                 self.prefix.record(matched)
         return admitted
+
+    # --------------------------------------------------- preempt-and-swap
+    def _fits(self, req: Request) -> bool:
+        """Would :meth:`admit` take ``req`` right now?  Conservative twin
+        of the admit() arithmetic (no trie reclaim attempt): a free slot
+        plus enough uncommitted pages for the private part of its full
+        sequence."""
+        if not self._free_slots:
+            return False
+        need = pages_needed(req.total_len, self.blocks.page_size)
+        if self.prefix is not None \
+                and req.state is not RequestState.SWAPPED:
+            pages, matched = self.prefix.lookup(req.prompt)
+            need -= len(pages)
+            if matched and matched >= req.prompt_len:
+                need += 1                   # the COW fork of the last page
+        return need <= self.blocks.free_pages - self._outstanding_pages()
+
+    def can_admit_now(self, prompt, max_new_tokens: int) -> bool:
+        """Reject-on-full admission probe (``AsyncServer``): would a fresh
+        request start *immediately* — nothing queued ahead of it and a
+        slot + pages available?"""
+        if self.waiting:
+            return False
+        probe = Request(rid=-1, prompt=np.asarray(prompt, np.int32),
+                        max_new_tokens=max_new_tokens)
+        return self._fits(probe)
+
+    def pick_victim(self) -> Optional[Request]:
+        """Nominate a running request to preempt so the head of the
+        waiting queue can be admitted: only when the head cannot fit as
+        is and a *strictly* lower-priority request is running (strictness
+        prevents same-class thrash).  Among candidates the youngest of
+        the least important class is chosen — it has the least sunk
+        decode work of the requests the SLO ranks lowest.
+
+        Returns None when no preemption is warranted; the engine calls
+        this in a loop, swapping one victim at a time, until the head
+        fits or no candidate remains."""
+        if not self.waiting:
+            return None
+        head = self.waiting[0]
+        if self._fits(head):
+            return None                     # admit() will take it as is
+        cands = [r for r in self.running.values()
+                 if r.priority > head.priority]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.priority, r.seq))
+
+    def preempt(self, req: Request) -> None:
+        """Book-keep a preemption *after* the engine copied the victim's
+        pages to the swap store: free the slot (its private non-pinned
+        pages return to the pool), and re-queue the request at its
+        original (priority, arrival) rank so it resumes ahead of later
+        arrivals of its class."""
+        assert req.state is RequestState.RUNNING, \
+            "only a running request can be preempted"
+        assert req.swap_pages > 0, \
+            "preempt() requires the engine to have swapped the pages out"
+        slot = req.slot
+        self.blocks.release(slot)
+        del self.running[slot]
+        self._free_slots.append(slot)
+        req.slot = -1
+        req.matched_tokens = 0              # restored pages are private
+        req.cow_pending = 0
+        req.state = RequestState.SWAPPED
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        bisect.insort(self.waiting, req, key=_order)
 
     # ------------------------------------------------- decode-window planning
     def grant_horizon(self, req: Request, length: int) -> int:

@@ -1,0 +1,132 @@
+"""Host-memory swap store for preempt-and-swap serving.
+
+When the SLO scheduler preempts a running request (``Scheduler.pick_victim``
++ ``ContinuousBatchingEngine._swap_out``), the victim slot's KV pages are
+copied from the device page pool into host memory and the slot is freed for
+a higher-priority admission.  Because the pool stores *MX codes* (bit-packed
+sub-byte elements + E8M0 scales) rather than dequantized floats, the swap
+traffic is already compressed — an E2M1-value page moves at ~4.25 bits per
+element, the same ratio the OCP MX paper credits for weight/KV residency.
+
+On re-admission the request is restored page-for-page into freshly
+allocated private pages (``scatter_pages``); together with the saved
+per-slot PRNG key this makes the continuation *token-identical* to an
+unpreempted run (asserted across formats/modes/policy tables in
+``tests/test_serve_preempt.py``).
+
+The page-pool pytree layout is the same one ``models.decoder.copy_pool_pages``
+handles: leaves are ``(P, page, n_kv, X)`` per-layer pools or layer-stacked
+``(n_scan, P, page, n_kv, X)`` — the page dimension is axis 0 or 1 by rank,
+and the bytes move verbatim whatever each layer's spec, so one code path
+covers fp pools, uniform MX policies, and per-layer ``PolicyTable`` mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def _page_axis(leaf) -> int:
+    """Page axis of a pool leaf: layer-stacked leaves carry it at 1."""
+    return 1 if leaf.ndim == 5 else 0
+
+
+def gather_pages(pool, page_ids: Sequence[int]) -> Tuple[Any, int]:
+    """Copy ``page_ids``'s contents out of every pool leaf to host numpy
+    arrays.  Returns ``(host pytree, total bytes)``; the pytree mirrors
+    ``pool`` with the page dimension shrunk to ``len(page_ids)``."""
+    ids = np.asarray(page_ids, np.int32)
+
+    def leaf(x):
+        return np.asarray(x[:, ids] if _page_axis(x) == 1 else x[ids])
+
+    host = jax.tree_util.tree_map(leaf, pool)
+    nbytes = int(sum(v.nbytes
+                     for v in jax.tree_util.tree_leaves(host)))
+    return host, nbytes
+
+
+def scatter_pages(pool, page_ids, host):
+    """Write a ``gather_pages`` snapshot back into ``pool`` at (fresh)
+    physical ``page_ids`` — the restore half of preempt-and-swap.  Pure
+    function of jax arrays; the engine jits it with the pool donated so
+    the restore never double-buffers the dominant serving allocation."""
+    def leaf(x, v):
+        return x.at[:, page_ids].set(v) if _page_axis(x) == 1 \
+            else x.at[page_ids].set(v)
+
+    return jax.tree_util.tree_map(leaf, pool, host)
+
+
+def concat_snapshots(snapshots: Sequence[Any]):
+    """Concatenate several ``gather_pages`` pytrees along the page axis so
+    a batch of restores lands in one device scatter."""
+    if len(snapshots) == 1:
+        return snapshots[0]
+    flat = [jax.tree_util.tree_flatten(s) for s in snapshots]
+    treedef = flat[0][1]
+    leaves = [np.concatenate([f[0][i] for f in flat],
+                             axis=_page_axis(flat[0][0][i]))
+              for i in range(len(flat[0][0]))]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class SwapData:
+    """One preempted request's host-resident state: its KV page contents
+    (already MX-packed), how many pages they cover, the per-slot PRNG key
+    at the preemption boundary, and the cache length they held — enough,
+    with the request's own token history, to continue bit-identically."""
+    pages: Any                  # host pytree from gather_pages
+    n_pages: int
+    length: int                 # cache positions filled at swap-out
+    key: np.ndarray             # (2,) uint32 per-slot PRNG key
+    nbytes: int
+
+
+class HostSwapStore:
+    """Keyed host-memory store for :class:`SwapData` with byte/level
+    accounting (``bench_serve`` schema v4 reports the swap traffic).
+
+    ``reset_counters`` zeroes the traffic counters for a steady-state
+    measurement window without touching resident entries — a request
+    swapped out before the window must still restore correctly after it.
+    """
+
+    def __init__(self):
+        self._entries: Dict[int, SwapData] = {}
+        self.bytes_out = 0          # device -> host (swap-out) traffic
+        self.bytes_in = 0           # host -> device (restore) traffic
+        self.peak_resident_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(d.nbytes for d in self._entries.values())
+
+    def put(self, rid: int, data: SwapData) -> None:
+        if rid in self._entries:
+            raise ValueError(f"swap store: request {rid} already resident")
+        self._entries[rid] = data
+        self.bytes_out += data.nbytes
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+
+    def pop(self, rid: int) -> SwapData:
+        if rid not in self._entries:
+            raise KeyError(f"swap store: request {rid} is not resident")
+        data = self._entries.pop(rid)
+        self.bytes_in += data.nbytes
+        return data
+
+    def reset_counters(self) -> None:
+        self.bytes_out = self.bytes_in = 0
+        self.peak_resident_bytes = self.resident_bytes

@@ -1,8 +1,8 @@
 """Property-based tests (hypothesis) for the refcounted page allocator.
 
 A random interleaving of admissions, shared mappings, copy-on-write forks,
-pins and releases must never violate the BlockManager invariants its
-docstring promises:
+pins, releases and preemption swap-outs must never violate the
+BlockManager invariants its docstring promises:
 
 * every non-trash page is on the free list xor has refcount > 0;
 * per page, ``table_refs`` equals the number of block-table entries
@@ -138,6 +138,17 @@ class ModelChecker:
         self.bm.release(slot)
         self.rows[slot] = []
 
+    def op_swap_out(self, slot):
+        # snapshot-and-release: the returned (page, shared) rows must
+        # mirror the logical row exactly, then the slot empties like a
+        # release — shared/pinned pages stay live for their other owners
+        expect = list(self.rows[slot])
+        if self.rows[slot]:
+            self.version += 1
+        got = self.bm.swap_out(slot)
+        assert got == expect
+        self.rows[slot] = []
+
     # -------------------------------------------------------- invariants
     def check(self):
         refs = self.refcounts()
@@ -227,6 +238,10 @@ if HAVE_HYPOTHESIS:
         def release(self, slot):
             self.m.op_release(slot)
 
+        @rule(slot=st.integers(0, MAX_SLOTS - 1))
+        def swap_out(self, slot):
+            self.m.op_swap_out(slot)
+
         @invariant()
         def invariants_hold(self):
             if hasattr(self, "m"):
@@ -247,7 +262,7 @@ def test_random_walk_invariants(seed):
     rng = np.random.default_rng(seed)
     m = ModelChecker()
     for _ in range(300):
-        op = rng.integers(0, 7)
+        op = rng.integers(0, 8)
         slot = int(rng.integers(0, MAX_SLOTS))
         if op == 0:
             m.op_allocate(slot, int(rng.integers(0, 5)))
@@ -269,6 +284,8 @@ def test_random_walk_invariants(seed):
             m.op_unpin(pinned[rng.integers(0, len(pinned))])
         elif op == 6:
             m.op_release(slot)
+        elif op == 7:
+            m.op_swap_out(slot)
         m.check()
 
 

@@ -1,0 +1,396 @@
+"""Asyncio serving front end: token identity, admission control, traffic
+generators, latency stamps, and the warmup-excision metrics reset.
+
+The load-bearing guarantee mirrors PR 2-7's: routing requests through
+``AsyncServer`` (pending queue, step loop, per-request streams) changes
+*when* work is applied, never *what* is computed — the streamed tokens
+are identical to driving the same ``ContinuousBatchingEngine``
+synchronously.  Every async test is wrapped in ``asyncio.wait_for`` so a
+deadlocked loop fails the suite instead of hanging it (CI runs this file
+as its own tier-1 job under a timeout).
+"""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import parse_arrival, safe_rate
+from repro.models import Model, load_reduced
+from repro.models.config import QuantPolicy
+from repro.serve import (AsyncServer, ContinuousBatchingEngine,
+                         GenerationConfig, RejectedError, latency_summary,
+                         on_off_times, percentile, poisson_times, replay,
+                         save_trace, synthesize, load_trace, Arrival,
+                         TrafficClass)
+
+LENS = [4, 9, 14, 9, 4]
+NEW = 6
+PAGE = 8
+TIMEOUT = 180.0      # generous: CI containers compile jit closures cold
+
+
+def _run(coro):
+    return asyncio.run(asyncio.wait_for(coro, timeout=TIMEOUT))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in LENS]
+    return cfg, model, params, prompts
+
+
+def _engine(model, params, *, max_slots=2, prefix_cache=False,
+            new=NEW, max_len=None, num_pages=None):
+    return ContinuousBatchingEngine(
+        model, params, max_slots=max_slots, page_size=PAGE,
+        max_len=max_len or (max(LENS) + new + 1), num_pages=num_pages,
+        gen=GenerationConfig(max_new_tokens=new), sync_every=4,
+        prefix_cache=prefix_cache)
+
+
+# =============================================================================
+# token identity: async front end == synchronous engine
+# =============================================================================
+def test_async_streams_match_sync_engine(setup):
+    """The same prompts in the same order produce the same rids and the
+    same tokens whether submitted through AsyncServer or added directly."""
+    cfg, model, params, prompts = setup
+    sync_eng = _engine(model, params)
+    rids = [sync_eng.add_request(p, NEW) for p in prompts]
+    want = sync_eng.run()
+
+    async def go():
+        eng = _engine(model, params)
+        async with AsyncServer(eng) as srv:
+            streams = [await srv.submit(p, NEW) for p in prompts]
+            toks = [await s.tokens() for s in streams]
+        assert srv.n_accepted == len(prompts) and srv.n_rejected == 0
+        return [s.rid for s in streams], toks
+
+    got_rids, got = _run(go())
+    assert got_rids == rids
+    for rid, toks in zip(rids, got):
+        np.testing.assert_array_equal(toks, want[rid])
+
+
+def test_async_executor_steps_match(setup):
+    """use_executor=True moves each step to a worker thread; the pending
+    queue still serializes scheduler writes, so tokens are unchanged."""
+    cfg, model, params, prompts = setup
+    sync_eng = _engine(model, params)
+    rids = [sync_eng.add_request(p, NEW) for p in prompts]
+    want = sync_eng.run()
+
+    async def go():
+        eng = _engine(model, params)
+        async with AsyncServer(eng, use_executor=True) as srv:
+            streams = [await srv.submit(p, NEW) for p in prompts]
+            return [await s.tokens() for s in streams]
+
+    for rid, toks in zip(rids, _run(go())):
+        np.testing.assert_array_equal(toks, want[rid])
+
+
+def test_async_iteration_streams_incrementally(setup):
+    """``async for`` over a stream yields every generated token in order
+    (the queue carries (token, final) pairs; final closes the stream)."""
+    cfg, model, params, prompts = setup
+
+    async def go():
+        eng = _engine(model, params)
+        async with AsyncServer(eng) as srv:
+            stream = await srv.submit(prompts[0], NEW)
+            seen = [tok async for tok in stream]
+            rest = await stream.tokens()
+        return seen, rest
+
+    seen, rest = _run(go())
+    assert len(seen) == NEW
+    np.testing.assert_array_equal(np.asarray(seen, np.int32), rest)
+
+
+# =============================================================================
+# admission control
+# =============================================================================
+def test_block_admission_bounds_backlog(setup):
+    """admission='block': submit awaits until the backlog (pending +
+    scheduler waiting) is below max_queued — sampled continuously while
+    8 submitters race a 1-slot engine, it never exceeds the bound."""
+    cfg, model, params, prompts = setup
+    peak = 0
+
+    async def go():
+        nonlocal peak
+        eng = _engine(model, params, max_slots=1)
+        async with AsyncServer(eng, max_queued=2) as srv:
+            async def one(p):
+                s = await srv.submit(p, NEW)
+                return await s.tokens()
+
+            tasks = [asyncio.ensure_future(one(prompts[i % len(prompts)]))
+                     for i in range(8)]
+            while not all(t.done() for t in tasks):
+                peak = max(peak, srv._backlog())
+                await asyncio.sleep(0)
+            return await asyncio.gather(*tasks)
+
+    outs = _run(go())
+    assert len(outs) == 8 and all(len(o) == NEW for o in outs)
+    assert peak <= 2
+
+
+def test_reject_admission_raises_when_full(setup):
+    """admission='reject': a request that cannot start immediately (the
+    single slot is busy) raises RejectedError instead of queueing —
+    the reject-on-full baseline of the bench's traffic claim."""
+    cfg, model, params, prompts = setup
+
+    async def go():
+        eng = _engine(model, params, max_slots=1, new=16,
+                      max_len=max(LENS) + 17)
+        async with AsyncServer(eng, admission="reject") as srv:
+            first = await srv.submit(prompts[0], 16)
+            with pytest.raises(RejectedError):
+                await srv.submit(prompts[1], 16)
+            toks = await first.tokens()
+        return srv.n_accepted, srv.n_rejected, toks
+
+    acc, rej, toks = _run(go())
+    assert (acc, rej) == (1, 1)
+    assert len(toks) == 16
+
+
+def test_submit_on_stopped_server_raises(setup):
+    cfg, model, params, prompts = setup
+
+    async def go():
+        eng = _engine(model, params)
+        srv = AsyncServer(eng)
+        with pytest.raises(RuntimeError, match="not running"):
+            await srv.submit(prompts[0], NEW)
+
+    _run(go())
+
+
+def test_async_server_validates_args(setup):
+    cfg, model, params, _ = setup
+    eng = _engine(model, params)
+    with pytest.raises(ValueError, match="admission"):
+        AsyncServer(eng, admission="drop")
+    with pytest.raises(ValueError, match="max_queued"):
+        AsyncServer(eng, max_queued=0)
+
+
+# =============================================================================
+# latency stamps + percentile plumbing
+# =============================================================================
+def test_latency_stamps_recorded(setup):
+    """Every finished request carries arrival/first-token/per-token/finish
+    stamps: monotone, one stamp per generated token, TTFT/ITL derivable."""
+    cfg, model, params, prompts = setup
+
+    async def go():
+        eng = _engine(model, params)
+        async with AsyncServer(eng) as srv:
+            streams = [await srv.submit(p, NEW, deadline_s=30.0)
+                       for p in prompts]
+            for s in streams:
+                await s.tokens()
+        return eng
+
+    eng = _run(go())
+    fin = eng.finished_in_window
+    assert len(fin) == len(prompts)
+    for r in fin:
+        assert r.arrival_t is not None
+        assert len(r.t_tokens) == len(r.out) == NEW
+        assert r.arrival_t <= r.t_tokens[0]
+        assert all(b >= a for a, b in zip(r.t_tokens, r.t_tokens[1:]))
+        assert r.t_finished >= r.t_tokens[-1]
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert len(r.itl_s) == NEW - 1
+        assert r.deadline_met is True          # 30s deadline on a toy model
+    summ = latency_summary(fin)
+    assert summ["n_requests"] == len(prompts)
+    for k in ("ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms"):
+        assert summ[k] >= 0.0
+    assert summ["slo_attainment"] == 1.0
+
+
+def test_percentile_nearest_rank():
+    s = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(s, 50) == 20.0      # ceil(0.5*4) = 2nd smallest
+    assert percentile(s, 75) == 30.0
+    assert percentile(s, 76) == 40.0
+    assert percentile(s, 100) == 40.0
+    assert percentile([7.0], 99) == 7.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile(s, 0)
+    with pytest.raises(ValueError):
+        percentile(s, 101)
+
+
+# =============================================================================
+# metrics reset: warmup excision cannot leak stale samples
+# =============================================================================
+def test_reset_metrics_clears_latency_and_prefix_window(setup):
+    """reset_metrics after warmup: finished_in_window, prefix lookup/hit
+    counters, COW/preemption/swap accounting all restart at zero, so a
+    measurement window reports only its own requests."""
+    cfg, model, params, prompts = setup
+    eng = _engine(model, params, prefix_cache=True)
+    for p in prompts[:3]:
+        eng.add_request(p, NEW)
+    eng.run()
+    assert eng.finished_in_window and eng.prefix.lookups > 0
+    eng.reset_metrics()
+    assert eng.finished_in_window == []
+    assert eng.prefix.lookups == 0 and eng.prefix.hits == 0
+    assert eng.prefill_tokens_computed == 0
+    assert eng.n_cow_forks == 0
+    assert eng.n_preemptions == 0 and eng.n_restores == 0
+    assert eng.swap_store.bytes_out == 0 and eng.swap_store.bytes_in == 0
+    assert all(v == 0.0 for v in eng.phase.values())
+    # the next window sees exactly its own population
+    eng.add_request(prompts[3], NEW)
+    eng.run()
+    fin = eng.finished_in_window
+    assert len(fin) == 1
+    assert latency_summary(fin)["n_requests"] == 1.0
+
+
+# =============================================================================
+# traffic generators: determinism + shape
+# =============================================================================
+def test_poisson_times_deterministic():
+    a = poisson_times(50.0, 64, seed=3)
+    b = poisson_times(50.0, 64, seed=3)
+    assert a == b
+    assert a != poisson_times(50.0, 64, seed=4)
+    assert len(a) == 64
+    assert all(t2 > t1 for t1, t2 in zip(a, a[1:]))
+    with pytest.raises(ValueError):
+        poisson_times(0.0, 4)
+
+
+def test_on_off_times_respect_burst_windows():
+    on_s, off_s = 0.2, 1.0
+    a = on_off_times(100.0, 50, on_s=on_s, off_s=off_s, seed=7)
+    assert a == on_off_times(100.0, 50, on_s=on_s, off_s=off_s, seed=7)
+    assert all(t2 >= t1 for t1, t2 in zip(a, a[1:]))
+    period = on_s + off_s
+    for t in a:
+        assert (t % period) <= on_s + 1e-9    # never inside an off gap
+    with pytest.raises(ValueError):
+        on_off_times(10.0, 4, on_s=0.0, off_s=1.0)
+
+
+def test_synthesize_deterministic_and_class_tagged():
+    classes = [TrafficClass("i", (4, 8), (2, 4), priority=0,
+                            deadline_s=0.1, weight=2.0),
+               TrafficClass("b", (8, 16), (8, 12), priority=1)]
+    times = poisson_times(20.0, 40, seed=1)
+    a = synthesize(times, classes, vocab=128, seed=9)
+    b = synthesize(times, classes, vocab=128, seed=9)
+    assert len(a) == 40
+    for x, y in zip(a, b):
+        assert x.t == y.t and x.cls == y.cls
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+    names = {x.cls for x in a}
+    assert names <= {"i", "b"}
+    for x in a:
+        c = classes[0] if x.cls == "i" else classes[1]
+        assert c.prompt_len[0] <= len(x.prompt) < c.prompt_len[1]
+        assert c.max_new_tokens[0] <= x.max_new_tokens < c.max_new_tokens[1]
+        assert x.priority == c.priority and x.deadline_s == c.deadline_s
+        assert x.prompt.min() >= 1
+    with pytest.raises(ValueError):
+        synthesize(times, [], vocab=128)
+
+
+def test_trace_save_load_round_trip(tmp_path):
+    classes = [TrafficClass("i", (4, 8), (2, 4), deadline_s=0.25),
+               TrafficClass("b", (8, 16), (8, 12), priority=1)]
+    arrivals = synthesize(poisson_times(20.0, 16, seed=2), classes,
+                          vocab=64, seed=2)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, arrivals)
+    back = load_trace(path)
+    assert len(back) == len(arrivals)
+    for x, y in zip(sorted(arrivals, key=lambda a: a.t), back):
+        assert x.t == y.t and x.max_new_tokens == y.max_new_tokens
+        assert x.priority == y.priority and x.deadline_s == y.deadline_s
+        assert x.cls == y.cls
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+
+
+def test_load_trace_reports_bad_line(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text(json.dumps({"t": 0.0, "prompt": [1],
+                                "max_new_tokens": 2}) + "\n"
+                    + "{not json}\n")
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        load_trace(str(path))
+
+
+def test_replay_serves_a_trace(setup):
+    """End to end: a synthesized workload replayed (speedup=inf) against
+    the async server completes every request with its own length."""
+    cfg, model, params, _ = setup
+    classes = [TrafficClass("i", (4, 10), (2, 5), deadline_s=10.0)]
+    arrivals = synthesize(poisson_times(50.0, 6, seed=5), classes,
+                          vocab=cfg.vocab, seed=5)
+
+    async def go():
+        eng = _engine(model, params, new=8, max_len=24)
+        async with AsyncServer(eng) as srv:
+            return await replay(srv, arrivals, speedup=float("inf"))
+
+    streams, rejected = _run(go())
+    assert rejected == [] and len(streams) == len(arrivals)
+    for i, a in enumerate(sorted(arrivals, key=lambda a: a.t)):
+        assert len(streams[i]._out) == a.max_new_tokens
+
+
+def test_replay_rejects_speedup_zero(setup):
+    cfg, model, params, _ = setup
+
+    async def go():
+        eng = _engine(model, params)
+        async with AsyncServer(eng) as srv:
+            with pytest.raises(ValueError, match="speedup"):
+                await replay(srv, [Arrival(t=0.0,
+                                           prompt=np.ones(4, np.int32),
+                                           max_new_tokens=2)], speedup=0.0)
+
+    _run(go())
+
+
+# =============================================================================
+# launch helpers (zero-decode guards + --arrival grammar)
+# =============================================================================
+def test_safe_rate_zero_window():
+    assert safe_rate(10, 2.0) == 5.0
+    assert safe_rate(10, 0.0) == 0.0     # --new-tokens 1: no decode window
+    assert safe_rate(0, 0.0) == 0.0
+    assert safe_rate(10, -1.0) == 0.0
+
+
+def test_parse_arrival_grammar():
+    assert parse_arrival("batch") == ("batch", ())
+    assert parse_arrival("poisson:12.5") == ("poisson", (12.5,))
+    assert parse_arrival("onoff:60:0.15:2.0") == ("onoff", (60.0, 0.15, 2.0))
+    kind, (path,) = parse_arrival("trace:/tmp/a:b.jsonl")
+    assert kind == "trace" and path == "/tmp/a:b.jsonl"
+    for bad in ("poisson", "poisson:x", "onoff:60", "burst:1", "trace"):
+        with pytest.raises(ValueError, match="bad --arrival"):
+            parse_arrival(bad)

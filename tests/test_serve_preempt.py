@@ -1,0 +1,278 @@
+"""Preempt-and-swap: token-identical continuation across the format zoo.
+
+The load-bearing guarantee of PR 8's SLO scheduler: preempting a running
+request (KV pages swapped to host with their MX codes still packed, slot
+freed for a higher-priority admission) and later restoring it
+page-for-page yields **exactly** the tokens an unpreempted run produces —
+for all six MX element formats x both conversion modes, for mixed
+per-role policies, for a per-layer ``PolicyTable``, with the prefix cache
+on (trie pins/refcounts intact across swap-out), and under temperature
+sampling (the per-slot PRNG key is part of the swapped state).
+
+Every scenario runs the same deterministic script twice: once against a
+page pool sized so the interactive arrival *must* evict the batch
+request, once against a large pool where nothing is preempted — same
+submission order, same rids, so the sampling keys match and the outputs
+must be array-equal.
+
+Unit tests close out the file: ``gather_pages``/``scatter_pages``/
+``concat_snapshots`` round trips over both pool-leaf ranks,
+``HostSwapStore`` accounting, and ``BlockManager.swap_out`` semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PolicyTable
+from repro.core.formats import ALL_FORMATS
+from repro.models import Model, apply_policy_table, load_reduced
+from repro.models.config import QuantPolicy, QuantSpec
+from repro.serve import (BlockManager, ContinuousBatchingEngine,
+                         GenerationConfig, HostSwapStore, SwapData)
+from repro.serve.paging import TRASH_PAGE
+from repro.serve.swap import concat_snapshots, gather_pages, scatter_pages
+
+MIXED = QuantPolicy.parse("kv_key=int8@32:ocp,kv_value=e2m1@32:ocp")
+TABLE = PolicyTable("kv=int8@32:ocp", {1: "kv_key=e2m1@32:ocp,"
+                                          "kv_value=e4m3@32:ocp"})
+PAGE = 8
+MAX_LEN = 30
+B_NEW = 20          # batch request: 9-token prompt -> 4 reserved pages
+A_NEW = 4           # interactive: 17-token prompt -> 3 reserved pages
+
+
+def _force_preempt(cfg, *, temperature=0.0, prefix_cache=False,
+                   warm=None):
+    """Run the eviction script on a tight pool and on a large pool;
+    assert the tight run preempted and both runs emitted identical
+    tokens.  Returns the tight engine for extra assertions."""
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    pb = rng.integers(1, cfg.vocab, size=9).astype(np.int32)
+    pa = rng.integers(1, cfg.vocab, size=17).astype(np.int32)
+    if warm is not None:        # both prompts open with the warmed prefix
+        pb[:len(warm)] = warm
+        pa[:len(warm)] = warm
+
+    def build(num_pages):
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=2, page_size=PAGE, max_len=MAX_LEN,
+            num_pages=num_pages,
+            gen=GenerationConfig(max_new_tokens=B_NEW,
+                                 temperature=temperature),
+            sync_every=4, prefix_cache=prefix_cache, preempt=True)
+        if warm is not None:
+            eng.add_request(warm, 1)
+            eng.run()
+            eng.reset_metrics()
+        return eng
+
+    def drive(eng):
+        rb = eng.add_request(pb, B_NEW, priority=1)
+        req_b = next(r for r in eng.scheduler.waiting if r.rid == rb)
+        while len(req_b.out) < 5:        # batch request is mid-generation
+            eng.step()
+        ra = eng.add_request(pa, A_NEW, priority=0, deadline_s=1.0)
+        out = eng.run()
+        return rb, ra, out
+
+    # tight: the interactive arrival cannot fit beside the batch run
+    # (with the prefix trie warm, one page is pinned and both prompts
+    # get a shared-page credit, so the pool shrinks to compensate)
+    tight = build(num_pages=6)
+    rb, ra, out = drive(tight)
+    assert tight.n_preemptions >= 1, "scenario failed to force eviction"
+    assert tight.n_restores == tight.n_preemptions
+    assert tight.swap_store.bytes_in == tight.swap_store.bytes_out > 0
+    assert len(tight.swap_store) == 0    # every swap-out was restored
+    assert tight.phase["swap"] >= 0.0
+
+    ref = build(num_pages=32)
+    rb2, ra2, want = drive(ref)
+    assert (rb2, ra2) == (rb, ra)        # rid-matched: same sampling keys
+    assert ref.n_preemptions == 0
+    assert len(out[rb]) == B_NEW and len(out[ra]) == A_NEW
+    np.testing.assert_array_equal(out[rb], want[rb])
+    np.testing.assert_array_equal(out[ra], want[ra])
+    return tight
+
+
+# =============================================================================
+# token identity across the zoo
+# =============================================================================
+@pytest.mark.parametrize("mode", ["ocp", "paper"])
+@pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
+def test_preempt_token_identity_all_formats(fmt, mode):
+    kv = QuantSpec(fmt, mode)
+    cfg = load_reduced("chatglm3_6b",
+                       mx=QuantPolicy(kv_key=kv, kv_value=kv))
+    _force_preempt(cfg)
+
+
+def test_preempt_token_identity_fp_cache():
+    """Dense (unquantized) pages swap byte-for-byte too."""
+    _force_preempt(load_reduced("chatglm3_6b"))
+
+
+def test_preempt_token_identity_mixed_roles():
+    _force_preempt(load_reduced("chatglm3_6b", mx=MIXED))
+
+
+def test_preempt_token_identity_policy_table():
+    """Per-layer PolicyTable: per-layer pool leaves (different packed
+    widths per layer) gather/scatter through the same swap path."""
+    cfg = apply_policy_table(load_reduced("chatglm3_6b"), TABLE)
+    _force_preempt(cfg)
+
+
+def test_preempt_token_identity_sampled():
+    """temperature > 0: the per-slot PRNG key is saved at swap-out and
+    restored at re-admission, so the sampled continuation is identical."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    _force_preempt(cfg, temperature=0.7)
+
+
+def test_preempt_with_prefix_cache_keeps_trie_intact():
+    """Swap-out of a request holding shared trie pages must not corrupt
+    the prefix cache: the pinned pages survive, later arrivals still hit,
+    and the restored request's continuation is token-identical."""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse("kv=int8@32:ocp"))
+    model = Model(cfg)
+    rng = np.random.default_rng(11)
+    warm = rng.integers(1, cfg.vocab, size=PAGE).astype(np.int32)
+
+    eng = _force_preempt(cfg, prefix_cache=True, warm=warm)
+    assert eng.prefix.hits >= 2          # both scripted prompts matched
+    bm = eng.blocks
+    assert bm.free_pages + bm.live_pages == 5     # accounting intact
+    hits_before = eng.prefix.hits
+    tail = rng.integers(1, cfg.vocab, size=3).astype(np.int32)
+    eng.add_request(np.concatenate([warm, tail]), 2)
+    eng.run()
+    assert eng.prefix.hits == hits_before + 1     # trie still serves
+
+
+# =============================================================================
+# gather/scatter/concat over pool pytrees
+# =============================================================================
+def _fake_pool():
+    return {
+        "kc_pages": jnp.arange(6 * 4 * 2 * 3, dtype=jnp.float32
+                               ).reshape(6, 4, 2, 3),
+        "stacked": jnp.arange(2 * 6 * 4 * 2 * 3, dtype=jnp.int32
+                              ).reshape(2, 6, 4, 2, 3),
+    }
+
+
+def test_gather_scatter_roundtrip_both_ranks():
+    """(P, ...) per-layer leaves and (n_scan, P, ...) layer-stacked
+    leaves both move page-for-page, and the restore lands only on the
+    target physical pages."""
+    pool = _fake_pool()
+    host, nbytes = gather_pages(pool, [2, 5])
+    assert host["kc_pages"].shape == (2, 4, 2, 3)
+    assert host["stacked"].shape == (2, 2, 4, 2, 3)
+    assert isinstance(host["kc_pages"], np.ndarray)
+    assert nbytes == host["kc_pages"].nbytes + host["stacked"].nbytes
+    np.testing.assert_array_equal(host["kc_pages"],
+                                  np.asarray(pool["kc_pages"])[[2, 5]])
+    np.testing.assert_array_equal(host["stacked"],
+                                  np.asarray(pool["stacked"])[:, [2, 5]])
+
+    zero = jax.tree_util.tree_map(jnp.zeros_like, pool)
+    new_ids = np.asarray([1, 3])
+    out = scatter_pages(zero, new_ids, host)
+    np.testing.assert_array_equal(np.asarray(out["kc_pages"])[new_ids],
+                                  host["kc_pages"])
+    np.testing.assert_array_equal(np.asarray(out["stacked"])[:, new_ids],
+                                  host["stacked"])
+    untouched = [0, 2, 4, 5]
+    assert not np.asarray(out["kc_pages"])[untouched].any()
+    assert not np.asarray(out["stacked"])[:, untouched].any()
+
+
+def test_concat_snapshots_matches_single_gather():
+    pool = _fake_pool()
+    s1, _ = gather_pages(pool, [0])
+    s2, _ = gather_pages(pool, [2, 3])
+    cat = concat_snapshots([s1, s2])
+    want, _ = gather_pages(pool, [0, 2, 3])
+    np.testing.assert_array_equal(cat["kc_pages"], want["kc_pages"])
+    np.testing.assert_array_equal(cat["stacked"], want["stacked"])
+    one = concat_snapshots([s1])
+    np.testing.assert_array_equal(one["kc_pages"], s1["kc_pages"])
+
+
+# =============================================================================
+# HostSwapStore accounting
+# =============================================================================
+def _data(nbytes=64):
+    return SwapData(pages={"x": np.zeros(nbytes, np.uint8)}, n_pages=1,
+                    length=8, key=np.zeros(2, np.uint32), nbytes=nbytes)
+
+
+def test_swap_store_put_pop_accounting():
+    st = HostSwapStore()
+    st.put(1, _data(64))
+    st.put(2, _data(32))
+    assert len(st) == 2 and 1 in st and 3 not in st
+    assert st.bytes_out == 96 and st.bytes_in == 0
+    assert st.resident_bytes == 96 and st.peak_resident_bytes == 96
+    d = st.pop(1)
+    assert d.nbytes == 64
+    assert st.bytes_in == 64 and st.resident_bytes == 32
+    assert st.peak_resident_bytes == 96      # peak is sticky
+
+
+def test_swap_store_rejects_double_put_and_missing_pop():
+    st = HostSwapStore()
+    st.put(7, _data())
+    with pytest.raises(ValueError, match="already resident"):
+        st.put(7, _data())
+    with pytest.raises(KeyError, match="not resident"):
+        st.pop(8)
+    assert len(st) == 1                      # failed ops change nothing
+
+
+def test_swap_store_reset_keeps_residents():
+    """Warmup excision zeroes the traffic counters but a request swapped
+    out before the window must still be restorable after it."""
+    st = HostSwapStore()
+    st.put(1, _data(64))
+    st.reset_counters()
+    assert st.bytes_out == 0 and st.bytes_in == 0
+    assert st.peak_resident_bytes == 64      # re-anchored to residents
+    assert st.pop(1).nbytes == 64            # entry survived the reset
+
+
+# =============================================================================
+# BlockManager.swap_out semantics
+# =============================================================================
+def test_swap_out_snapshots_then_releases():
+    bm = BlockManager(8, PAGE, 2, 4)
+    assert bm.allocate(0, 2)
+    ids = bm.slot_page_ids(0)
+    assert bm.map_shared(0, [ids[0]])        # logical row: p0, p1, p0(sh)
+    row = bm.swap_out(0)
+    assert row == [(ids[0], False), (ids[1], False), (ids[0], True)]
+    assert bm.slot_pages(0) == 0
+    assert (bm.tables[0] == TRASH_PAGE).all()
+    assert bm.page_refcount(ids[0]) == 0     # all refs dropped -> free
+    assert bm.free_pages == 7
+
+
+def test_swap_out_keeps_pinned_and_shared_pages_live():
+    bm = BlockManager(8, PAGE, 2, 4)
+    assert bm.allocate(0, 2)
+    ids = bm.slot_page_ids(0)
+    bm.pin(ids[0])                           # trie holds page 0
+    assert bm.map_shared(1, [ids[1]])        # another slot reads page 1
+    row = bm.swap_out(0)
+    assert row == [(ids[0], False), (ids[1], False)]
+    assert bm.page_refcount(ids[0]) == 1     # pin outlives the swap-out
+    assert bm.page_refcount(ids[1]) == 1     # reader unaffected
+    assert bm.slot_page_ids(1) == [ids[1]]
+    bm.unpin(ids[0])
+    assert bm.page_refcount(ids[0]) == 0
