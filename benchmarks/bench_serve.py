@@ -48,6 +48,20 @@ headline claim — at equal pool bytes, preempt-and-swap sustains strictly
 higher admitted-request throughput than reject-on-full at every swept
 intensity — is asserted by the validator against the raw records.
 
+Schema v5 (this PR) adds a top-level ``"faults"`` section: the same
+engine config served through the asyncio front end under a **seeded
+fault plan** (one request quarantined once and retried to success, one
+poisoned on every attempt until ``RetriesExhausted``), with per-request
+outcome counts — ``served`` (finished clean), ``retried`` (finished
+after >= 1 retry), ``quarantined`` (permanently failed) — that must
+partition ``submitted``, the plan's ``fired`` log, wall times for the
+faulted vs fault-free run (their difference is the recovery cost), and a
+``health_overhead`` block comparing best-of-5 decode-phase wall time
+with the numeric-health guards on vs off at a steady-state serving
+geometry (8 slots, 16-step fused windows).  The validator re-derives
+``served + retried + quarantined == submitted``, the recovery wall time,
+and the overhead fraction, and asserts overhead <= 5%.
+
 Wall times are CPU-container numbers (correctness path — Pallas interpret
 mode when attn_impl=flash); the relative fp32-vs-MX pool bytes, the phase
 split, and the prefix-sharing deltas are the portable signals.  Validate
@@ -332,6 +346,126 @@ def _traffic_sweep(model, params, cfg, policy, *, max_slots, page_size,
     }
 
 
+FAULT_PLAN = "prefill_nan:rid=2,prefill_nan:rid=4:always"
+FAULT_SEED = 20260808
+
+
+def _fault_sweep(model, params, cfg, policy, *, page_size, rows):
+    """The v5 ``faults`` section: a seeded fault plan served through the
+    asyncio front end with a retry budget of 1.
+
+    The plan (rids count from 1 — rid 0 is the warmup request) poisons
+    rid 2's prefill once (quarantined, retried, replayed clean: lands in
+    ``retried``) and rid 4's on every attempt (``RetriesExhausted``:
+    lands in ``quarantined``); the other requests are ``served``
+    untouched.  The same workload runs fault-free first on an identical
+    engine, so the wall-time difference is the recovery cost and the
+    healthy token streams can be asserted identical.  A separate
+    best-of-5 decode-phase comparison measures the numeric-health guards
+    themselves at a steady-state geometry (8 slots, 16-step windows)
+    where the per-window scale scan amortizes — the <= 5% budget the
+    validator enforces."""
+    from repro.serve import (AsyncServer, ContinuousBatchingEngine,
+                             FaultPlan, GenerationConfig)
+
+    n_req, plen, new_tokens = 6, 12, 8
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, size=plen).astype(np.int32)
+               for _ in range(n_req)]
+
+    def build(faults=None):
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=4, page_size=page_size,
+            max_len=plen + new_tokens + 1,
+            gen=GenerationConfig(max_new_tokens=new_tokens),
+            sync_every=4, faults=faults)
+        eng.add_request(np.arange(1, 1 + plen, dtype=np.int32),
+                        new_tokens)                 # warmup takes rid 0
+        eng.run()
+        eng.reset_metrics()
+        return eng
+
+    async def go(eng):
+        async with AsyncServer(eng, retries=1,
+                               retry_backoff_s=0.01) as srv:
+            streams = [await srv.submit(p, new_tokens) for p in prompts]
+            res = await asyncio.gather(
+                *(s.tokens() for s in streams), return_exceptions=True)
+            return srv, streams, res
+
+    t0 = time.perf_counter()
+    _, _, clean = asyncio.run(go(build()))
+    clean_wall = time.perf_counter() - t0
+
+    plan = FaultPlan.parse(FAULT_PLAN, seed=FAULT_SEED)
+    eng = build(faults=plan)
+    t0 = time.perf_counter()
+    srv, streams, res = asyncio.run(go(eng))
+    wall = time.perf_counter() - t0
+
+    served = retried = quarantined = 0
+    for st, toks, want in zip(streams, res, clean):
+        if isinstance(toks, Exception):
+            quarantined += 1
+            continue
+        if st.request.n_retries:
+            retried += 1
+        else:
+            served += 1
+        # healthy/recovered streams replay the fault-free run exactly
+        assert np.array_equal(toks, want), \
+            f"rid {st.rid}: faulted tokens diverge from clean run"
+    assert served + retried + quarantined == n_req
+
+    def decode_best(health):
+        dprompts = [rng.integers(1, cfg.vocab, size=plen
+                                 ).astype(np.int32) for _ in range(8)]
+        heng = ContinuousBatchingEngine(
+            model, params, max_slots=8, page_size=page_size,
+            max_len=plen + 48 + 1, sync_every=16,
+            gen=GenerationConfig(max_new_tokens=48),
+            health_checks=health)
+
+        def serve():
+            for p in dprompts:
+                heng.add_request(p, 48)
+            d0 = heng.phase["decode"]
+            heng.run()
+            return heng.phase["decode"] - d0
+
+        serve()                                     # warm the closures
+        return min(serve() for _ in range(5))
+
+    dec_on, dec_off = decode_best(True), decode_best(False)
+    overhead = dec_on / dec_off - 1.0
+    rows.append(("serve_faults_recovery", wall * 1e6,
+                 f"{quarantined}quar/{retried}retry"))
+    rows.append(("serve_health_overhead", dec_on * 1e6,
+                 f"{overhead * 100:.2f}%"))
+    return {
+        "plan": FAULT_PLAN,
+        "seed": int(FAULT_SEED),
+        "retry_budget": 1,
+        "submitted": int(n_req),
+        "served": int(served),
+        "retried": int(retried),
+        "quarantined": int(quarantined),
+        "retry_attempts": int(srv.n_retried),
+        "fired": [[s, r, int(n)] for s, r, n in plan.fired],
+        "wall_s": float(wall),
+        "clean_wall_s": float(clean_wall),
+        "recovery_wall_s": float(max(0.0, wall - clean_wall)),
+        "health_overhead": {
+            "max_slots": 8,
+            "sync_every": 16,
+            "new_tokens": 48,
+            "decode_s_on": float(dec_on),
+            "decode_s_off": float(dec_off),
+            "overhead_frac": float(overhead),
+        },
+    }
+
+
 def _ceil_pages(tokens: int, page_size: int) -> int:
     return max(1, -(-tokens // page_size))
 
@@ -440,9 +574,11 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
                 model, params, cfg, policy, max_slots=max_slots,
                 page_size=page_size, new_tokens=new_tokens,
                 sync_every=sync_every, smoke=smoke, rows=rows)
+            faults = _fault_sweep(model, params, cfg, policy,
+                                  page_size=page_size, rows=rows)
 
     doc = {
-        "schema": "bench_serve/v4",
+        "schema": "bench_serve/v5",
         "arch": f"{ARCH}-reduced",
         "page_size": int(page_size),
         "max_slots": int(max_slots),
@@ -450,6 +586,7 @@ def run(smoke: bool = True, out_path: Path = DEFAULT_OUT,
         "sync_every": int(sync_every),
         "configs": configs,
         "traffic": traffic,
+        "faults": faults,
     }
     out_path.write_text(json.dumps(doc, indent=2) + "\n")
     return rows

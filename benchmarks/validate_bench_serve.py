@@ -1,8 +1,18 @@
-"""Validate BENCH_serve.json against the bench_serve/v4 schema (dep-free).
+"""Validate BENCH_serve.json against the bench_serve/v5 schema (dep-free).
 
     python benchmarks/validate_bench_serve.py [BENCH_serve.json]
 
-Schema v4 adds the top-level ``"traffic"`` section: bursty arrivals
+Schema v5 adds the top-level ``"faults"`` section: a seeded fault plan
+served through the asyncio front end with a retry budget.  The validator
+re-derives the request-outcome partition — ``served + retried +
+quarantined == submitted`` — checks that the section actually exercised
+recovery (at least one permanent quarantine, at least one successful
+retry, a non-empty ``fired`` log naming known sites), recomputes the
+recovery wall time from the committed faulted/clean walls, and asserts
+the numeric-health guards cost at most **5%** of decode-phase wall time
+(``overhead_frac`` re-derived from the committed on/off decode times).
+
+Schema v4 added the top-level ``"traffic"`` section: bursty arrivals
 served through the asyncio front end at two intensities under two SLO
 policies (reject-on-full vs preempt-and-swap).  The validator does not
 trust the section's summary numbers: every TTFT/ITL percentile, the SLO
@@ -40,7 +50,7 @@ import json
 import sys
 from pathlib import Path
 
-SCHEMA = "bench_serve/v4"
+SCHEMA = "bench_serve/v5"
 TOP_FIELDS = {
     "schema": str,
     "arch": str,
@@ -50,6 +60,7 @@ TOP_FIELDS = {
     "sync_every": int,
     "configs": list,
     "traffic": dict,
+    "faults": dict,
 }
 CONFIG_FIELDS = {
     "cache": str,
@@ -133,6 +144,32 @@ RECORD_FIELDS = {
     "n_preemptions": int,
 }
 KNOWN_POLICIES = {"reject", "preempt"}
+FAULTS_FIELDS = {
+    "plan": str,
+    "seed": int,
+    "retry_budget": int,
+    "submitted": int,
+    "served": int,
+    "retried": int,
+    "quarantined": int,
+    "retry_attempts": int,
+    "fired": list,
+    "wall_s": float,
+    "clean_wall_s": float,
+    "recovery_wall_s": (float, int),
+    "health_overhead": dict,
+}
+HEALTH_OVERHEAD_FIELDS = {
+    "max_slots": int,
+    "sync_every": int,
+    "new_tokens": int,
+    "decode_s_on": float,
+    "decode_s_off": float,
+    "overhead_frac": float,
+}
+KNOWN_FAULT_SITES = {"page_corrupt", "swap_corrupt", "prefill_nan",
+                     "kernel_fail", "alloc_fail", "stall"}
+HEALTH_OVERHEAD_BUDGET = 0.05
 
 
 def _pages(tokens: int, page_size: int) -> int:
@@ -451,6 +488,68 @@ def _check_traffic(t, errs) -> None:
                     "request — the comparison is vacuous")
 
 
+def _check_faults(f, errs) -> None:
+    """The v5 faults section: re-derive the outcome partition, the
+    recovery wall time, and the health-guard overhead budget."""
+    if not _fields_ok(f, FAULTS_FIELDS, "faults", errs):
+        return
+    if f["submitted"] < 3:
+        errs.append("faults.submitted: need >= 3 requests so served, "
+                    "retried, and quarantined can all be witnessed")
+    # the headline re-derivation: outcomes partition the submissions
+    total = f["served"] + f["retried"] + f["quarantined"]
+    if total != f["submitted"]:
+        errs.append(f"faults: served + retried + quarantined = {total} "
+                    f"!= submitted {f['submitted']}")
+    if any(f[k] < 0 for k in ("served", "retried", "quarantined",
+                              "retry_attempts", "retry_budget")):
+        errs.append("faults: negative outcome count")
+    # the section must actually exercise recovery, not just report zeros
+    if f["quarantined"] < 1:
+        errs.append("faults: no permanent quarantine — the exhaustion "
+                    "path was never exercised")
+    if f["retried"] < 1:
+        errs.append("faults: no successful retry — the recovery path "
+                    "was never exercised")
+    if f["retry_attempts"] < f["retried"]:
+        errs.append(f"faults: retry_attempts {f['retry_attempts']} < "
+                    f"requests that finished via retry {f['retried']}")
+    if not f["fired"]:
+        errs.append("faults: empty fired log — the plan never fired")
+    for k, rec in enumerate(f["fired"]):
+        if (not isinstance(rec, list) or len(rec) != 3
+                or rec[0] not in KNOWN_FAULT_SITES
+                or not isinstance(rec[2], int)
+                or not (rec[1] is None or isinstance(rec[1], int))):
+            errs.append(f"faults.fired[{k}]: expected "
+                        f"[site, rid|null, count], got {rec!r}")
+    if f["wall_s"] <= 0 or f["clean_wall_s"] <= 0:
+        errs.append("faults: non-positive wall times")
+        return
+    want_rec = max(0.0, f["wall_s"] - f["clean_wall_s"])
+    if abs(f["recovery_wall_s"] - want_rec) > 1e-9 * max(1.0, want_rec):
+        errs.append(f"faults.recovery_wall_s: {f['recovery_wall_s']} "
+                    f"does not re-derive from wall_s - clean_wall_s "
+                    f"(want {want_rec})")
+    h = f["health_overhead"]
+    if not _fields_ok(h, HEALTH_OVERHEAD_FIELDS, "faults.health_overhead",
+                      errs):
+        return
+    if h["decode_s_on"] <= 0 or h["decode_s_off"] <= 0:
+        errs.append("faults.health_overhead: non-positive decode times")
+        return
+    want_frac = h["decode_s_on"] / h["decode_s_off"] - 1.0
+    if abs(h["overhead_frac"] - want_frac) > 1e-9 * max(1.0,
+                                                        abs(want_frac)):
+        errs.append(f"faults.health_overhead.overhead_frac: "
+                    f"{h['overhead_frac']} does not re-derive from the "
+                    f"decode times (want {want_frac})")
+    if h["overhead_frac"] > HEALTH_OVERHEAD_BUDGET:
+        errs.append(f"faults claim: health-guard overhead "
+                    f"{h['overhead_frac']:.4f} exceeds the "
+                    f"{HEALTH_OVERHEAD_BUDGET:.0%} decode-phase budget")
+
+
 def check(doc) -> list:
     errs = []
     for field, ty in TOP_FIELDS.items():
@@ -553,6 +652,7 @@ def check(doc) -> list:
         _check_prefix_claims(
             [c for c in doc["configs"] if c["mix"] == "prefix"], errs)
         _check_traffic(doc["traffic"], errs)
+        _check_faults(doc["faults"], errs)
     return errs
 
 

@@ -102,6 +102,19 @@ FP4_FORMATS: Tuple[MXFormat, ...] = (E2M1,)
 ALL_FORMATS: Tuple[MXFormat, ...] = tuple(FORMATS.values())
 
 
+def poison_threshold(mode: str) -> int:
+    """Smallest E8M0 scale byte that marks a non-finite block under
+    ``mode``.  Paper mode clamps legitimate scales to 0xFD and encodes
+    Inf/NaN blocks as SCALE_INF/SCALE_NAN, so anything >= SCALE_INF is a
+    marker; ocp mode uses the full 0xFE range for finite scales and folds
+    both specials into SCALE_NAN.  A uint8 ``scale >= threshold`` compare
+    is therefore a complete poison detector — no dequantization needed
+    (the serving health guards rely on this)."""
+    if mode not in ("paper", "ocp"):
+        raise ValueError(f"unknown MX mode {mode!r}")
+    return SCALE_INF if mode == "paper" else SCALE_NAN
+
+
 def get_format(name: str | MXFormat) -> MXFormat:
     if isinstance(name, MXFormat):
         return name

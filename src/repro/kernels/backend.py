@@ -7,11 +7,22 @@ interpret mode (kernel bodies executed in Python, the correctness path)
 everywhere except a real TPU, where the kernels compile to Mosaic.  This
 keeps CPU CI bit-exact while real hardware gets compiled kernels without
 any call-site churn.
+
+**Supervised dispatch** (graceful degradation): callers with a dense
+fallback route their kernel through :func:`supervised` — on the first
+failure of a named op (a Pallas trace/lowering error, or an injected
+launch fault) the op is marked degraded, the failure is logged once, and
+``supervised`` returns None so the caller's existing ``if out is None``
+dense path takes over.  Every later trace of that op skips the kernel
+outright, so serving keeps running at dense speed instead of crashing.
+Both paths are token-identical by construction (asserted by the kernel
+correctness suites), so degradation changes throughput, never tokens.
 """
 from __future__ import annotations
 
+import logging
 import os
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 
@@ -52,3 +63,63 @@ def resolve_matmul_impl(impl: Optional[str] = None) -> str:
         raise ValueError(
             f"unknown mx matmul impl {impl!r}; expected one of {MATMUL_IMPLS}")
     return impl
+
+
+# =============================================================================
+# Supervised kernel dispatch (log once, degrade to dense, keep serving)
+# =============================================================================
+class KernelFault(RuntimeError):
+    """An injected kernel launch failure (see ``repro.serve.faults``)."""
+
+
+_log = logging.getLogger("repro.kernels")
+_degraded: Dict[str, str] = {}      # op -> first failure reason
+_injected: set = set()              # ops armed to fail at next trace
+
+
+def is_degraded(op: str) -> bool:
+    return op in _degraded
+
+
+def degraded_ops() -> Dict[str, str]:
+    """Snapshot of degraded ops and the failure that demoted each."""
+    return dict(_degraded)
+
+
+def degrade(op: str, reason: str) -> None:
+    """Mark ``op`` degraded; the first demotion is logged (once)."""
+    if op not in _degraded:
+        _degraded[op] = reason
+        _log.warning("kernel %r failed (%s); degrading to the dense "
+                     "fallback path for this process", op, reason)
+
+
+def reset_degradation() -> None:
+    """Clear degradations and armed failures (test isolation)."""
+    _degraded.clear()
+    _injected.clear()
+
+
+def inject_failure(op: str) -> None:
+    """Arm a one-shot failure: the next ``supervised(op, ...)`` raises
+    (and therefore degrades) instead of running the kernel.  Consumed at
+    trace time — the caller must force a retrace (fresh ``jax.jit``
+    wrapper) for an already-compiled computation to hit it."""
+    _injected.add(op)
+
+
+def supervised(op: str, fn, *args, **kwargs):
+    """Run kernel ``fn`` under supervision.  Returns its result, or None
+    when ``op`` is degraded or ``fn`` raises — the caller's dense
+    fallback path must handle None (the pre-existing contract of the
+    paged-attention kernel gate)."""
+    if op in _degraded:
+        return None
+    try:
+        if op in _injected:
+            _injected.discard(op)
+            raise KernelFault(f"injected {op} launch failure")
+        return fn(*args, **kwargs)
+    except Exception as e:          # noqa: BLE001 — demote, don't crash
+        degrade(op, repr(e))
+        return None

@@ -68,6 +68,7 @@ def mx_matmul_resident(a: jax.Array, w, impl: Optional[str] = None
     bit-identical when the contraction fits one k-tile (K <= bk).
     """
     from repro.core.mx_weight import MXWeight
+    from repro.kernels import backend
     from repro.kernels.backend import resolve_matmul_impl
     assert isinstance(w, MXWeight), type(w)
     assert w.codes.ndim == 2, (
@@ -75,23 +76,34 @@ def mx_matmul_resident(a: jax.Array, w, impl: Optional[str] = None
         f"{tuple(w.codes.shape)}; slice batch axes with w.take(i)")
     impl = resolve_matmul_impl(impl)
     lead = a.shape[:-1]
-    if impl == "einsum":
+
+    def einsum_path():
         wd = w.dequantize().astype(a.dtype)
         return jnp.einsum("...k,kn->...n", a, wd,
                           preferred_element_type=jnp.float32)
-    a2 = a.reshape(-1, a.shape[-1])
-    if a2.shape[1] != w.kp:          # K was padded to a block multiple
-        a2 = jnp.pad(a2, ((0, 0), (0, w.kp - a2.shape[1])))
-    from repro.kernels.backend import resolve_interpret
-    if resolve_interpret(None):
-        # interpret mode (CPU correctness path): per-grid-step overhead
-        # dominates, so cover N in one tile and K in few — 5-10x faster
-        # than VMEM-sized tiles at decode shapes, same results
-        out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec,
-                               bn=w.n, bk=min(w.kp, 1024))
-    else:
-        out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec)
-    return out.reshape(lead + (w.n,))
+
+    if impl == "einsum":
+        return einsum_path()
+
+    def fused_path():
+        a2 = a.reshape(-1, a.shape[-1])
+        if a2.shape[1] != w.kp:      # K was padded to a block multiple
+            a2 = jnp.pad(a2, ((0, 0), (0, w.kp - a2.shape[1])))
+        from repro.kernels.backend import resolve_interpret
+        if resolve_interpret(None):
+            # interpret mode (CPU correctness path): per-grid-step overhead
+            # dominates, so cover N in one tile and K in few — 5-10x faster
+            # than VMEM-sized tiles at decode shapes, same results
+            out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec,
+                                   bn=w.n, bk=min(w.kp, 1024))
+        else:
+            out = _mm.mx_matmul_2d(a2, w.codes, w.scales, w.spec)
+        return out.reshape(lead + (w.n,))
+
+    # supervised dispatch: a failed Pallas matmul degrades the op to the
+    # einsum path (logged once) instead of killing the serving process
+    out = backend.supervised("mx_matmul", fused_path)
+    return einsum_path() if out is None else out
 
 
 def quantize_weight(w: jax.Array, spec=None, mode: Optional[str] = None,

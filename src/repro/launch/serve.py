@@ -28,6 +28,17 @@ table directly:
         --reduced --paged --quant auto:96 --calib-batches 4 \
         --save-policy /tmp/policy.json
 
+Fault tolerance (README §Fault tolerance): numeric-health guards are on
+by default in paged mode; ``--faults`` injects a seeded deterministic
+fault plan, and the async front end recovers via ``--retry`` (quarantine
+retry budget), ``--watchdog`` + ``--snapshot-every`` (stalled-step
+restore from an engine checkpoint):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch chatglm3_6b \
+        --reduced --paged --batch 4 --requests 8 --arrival poisson:50 \
+        --quant kv=int8@32:ocp --faults prefill_nan:rid=2:always \
+        --retry 1 --watchdog 30 --snapshot-every 1
+
 ``--mx-kv``/``--mx-mode`` are deprecated aliases for uniform KV policies.
 """
 from __future__ import annotations
@@ -170,6 +181,36 @@ def main() -> None:
     ap.add_argument("--speedup", type=float, default=0.0,
                     help="async mode: divide trace arrival times by this "
                          "(0 = submit as fast as the loop allows)")
+    ap.add_argument("--faults", default=None,
+                    help="paged mode: seeded fault-injection plan, e.g. "
+                         "'prefill_nan:rid=1:always,kernel_fail:nth=0,"
+                         "stall:nth=2:stall_s=30' (sites: page_corrupt, "
+                         "swap_corrupt, prefill_nan, kernel_fail, "
+                         "alloc_fail, stall — see repro.serve.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --faults plan's randomness "
+                         "(which byte/page/slot each firing corrupts)")
+    ap.add_argument("--no-health-checks", action="store_true",
+                    help="paged mode: disable the in-jit numeric-health "
+                         "guards (finite-logits + MX scale-poison scans); "
+                         "poisoned requests stream garbage instead of "
+                         "being quarantined")
+    ap.add_argument("--retry", type=int, default=0,
+                    help="async mode: per-request retry budget for "
+                         "quarantined requests (jittered exponential "
+                         "backoff; RetriesExhausted after N attempts)")
+    ap.add_argument("--retry-backoff", type=float, default=0.05,
+                    help="async mode: base retry backoff in seconds")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="async mode: engine snapshot cadence in sync "
+                         "windows (0 = only when --watchdog needs one)")
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="async mode: stalled-step watchdog timeout in "
+                         "seconds; a hung step is aborted and the engine "
+                         "restored from the last snapshot (0 = off). "
+                         "Must comfortably exceed first-trace compile "
+                         "time or slow-but-healthy steps trip spurious "
+                         "recoveries")
     args = ap.parse_args()
 
     import contextlib
@@ -274,10 +315,23 @@ def main() -> None:
     if arrival_kind != "batch" and not args.paged:
         ap.error("--arrival needs --paged (the async front end drives "
                  "the continuous-batching engine)")
+    if not args.paged and (args.faults or args.no_health_checks):
+        ap.error("--faults/--no-health-checks need --paged (the guards "
+                 "and injection sites live in the paged engine)")
+    if arrival_kind == "batch" and (args.retry or args.watchdog > 0
+                                    or args.snapshot_every):
+        ap.error("--retry/--watchdog/--snapshot-every need a non-batch "
+                 "--arrival (they are front-end recovery policies)")
+
+    faults = None
+    if args.faults:
+        from repro.serve import FaultPlan
+        faults = FaultPlan.parse(args.faults, seed=args.fault_seed)
+        print(f"[serve] fault plan (seed {args.fault_seed}): {faults}")
 
     if args.paged and arrival_kind != "batch":
         _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
-                     arrival_kind, arrival_params)
+                     arrival_kind, arrival_params, faults)
         return
 
     if args.paged:
@@ -295,7 +349,8 @@ def main() -> None:
             page_size=args.page_size, max_len=max_len, rules=rules,
             gen=gen, sync_every=args.sync_every,
             prefill_bucket=args.prefill_bucket or None,
-            prefix_cache=args.prefix_cache, preempt=args.preempt)
+            prefix_cache=args.prefix_cache, preempt=args.preempt,
+            health_checks=not args.no_health_checks, faults=faults)
         shared = rng.integers(0, cfg.vocab, size=args.shared_prefix
                               ).astype(np.int32)
         prompts = []
@@ -338,8 +393,21 @@ def main() -> None:
                   f"effective pool "
                   f"{eng.kv_pool_bytes_effective / 1024:.1f} KiB "
                   f"(allocated {eng.kv_pool_nbytes / 1024:.1f} KiB)")
-        first = out[min(out)]
-        print("[serve] sample output tokens:", first[:12].tolist())
+        if faults is not None or eng.n_quarantined:
+            from repro.kernels import backend
+            fails = eng.scheduler.failed
+            print(f"[serve] fault tolerance: {eng.n_quarantined} "
+                  f"quarantined of {len(out) + len(fails)} submitted"
+                  + (f", fired sites "
+                     f"{sorted({s for s, _, _ in faults.fired})}"
+                     if faults is not None and faults.fired else ""))
+            for r in fails:
+                print(f"[serve]   rid {r.rid} quarantined: {r.error}")
+            for op, why in backend.degraded_ops().items():
+                print(f"[serve]   kernel {op!r} degraded to dense: {why}")
+        if out:
+            first = out[min(out)]
+            print("[serve] sample output tokens:", first[:12].tolist())
         return
 
     batch = make_concrete_batch(cfg, args.batch, args.prompt_len)
@@ -364,7 +432,7 @@ def main() -> None:
 
 
 def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
-                 arrival_kind, arrival_params) -> None:
+                 arrival_kind, arrival_params, faults=None) -> None:
     """Drive the continuous-batching engine through the asyncio front end
     under a synthetic (or replayed) arrival process and report tail
     latency + preemption accounting."""
@@ -415,11 +483,21 @@ def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
         max_len=max_prompt + max_new + 1, rules=rules, gen=gen,
         sync_every=args.sync_every,
         prefill_bucket=args.prefill_bucket or None,
-        prefix_cache=args.prefix_cache, preempt=args.preempt)
+        prefix_cache=args.prefix_cache, preempt=args.preempt,
+        health_checks=not args.no_health_checks, faults=faults)
     speedup = args.speedup if args.speedup > 0 else float("inf")
+    srv_kw = dict(admission=args.admission, retries=args.retry,
+                  retry_backoff_s=args.retry_backoff)
+    if args.watchdog > 0:
+        srv_kw.update(use_executor=True, watchdog_s=args.watchdog,
+                      snapshot_every=args.snapshot_every or 1)
+    elif args.snapshot_every:
+        srv_kw["snapshot_every"] = args.snapshot_every
+    servers = []
 
     async def run():
-        async with AsyncServer(eng, admission=args.admission) as srv:
+        async with AsyncServer(eng, **srv_kw) as srv:
+            servers.append(srv)
             return await replay(srv, arrivals, speedup=speedup)
 
     with mesh_ctx:
@@ -457,6 +535,21 @@ def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
               f"{sw.bytes_out / 1024:.1f} KiB out / "
               f"{sw.bytes_in / 1024:.1f} KiB in (MX-packed), peak "
               f"resident {sw.peak_resident_bytes / 1024:.1f} KiB")
+    srv = servers[0] if servers else None
+    if faults is not None or args.retry or args.watchdog > 0 \
+            or eng.n_quarantined:
+        from repro.kernels import backend
+        print(f"[serve] fault tolerance: {eng.n_quarantined} quarantine "
+              f"events, {srv.n_retried if srv else 0} retries, "
+              f"{srv.n_failed if srv else 0} permanent failures, "
+              f"{srv.n_recoveries if srv else 0} watchdog recoveries"
+              + (f", fired sites "
+                 f"{sorted({s for s, _, _ in faults.fired})}"
+                 if faults is not None and faults.fired else ""))
+        for r in eng.scheduler.failed:
+            print(f"[serve]   rid {r.rid} quarantined: {r.error}")
+        for op, why in backend.degraded_ops().items():
+            print(f"[serve]   kernel {op!r} degraded to dense: {why}")
 
 
 if __name__ == "__main__":

@@ -529,7 +529,8 @@ def paged_decode_multi_step(params, token, cache, block_tables, lengths,
                             remaining, keys, cfg: ModelConfig, *,
                             n_steps: int, temperature: float = 0.0,
                             trash_page: int = 0,
-                            fake_quant: bool = False):
+                            fake_quant: bool = False,
+                            health: bool = False):
     """``n_steps`` fused continuous-batching decode steps in one
     ``lax.scan`` — the device-resident hot loop.
 
@@ -546,23 +547,35 @@ def paged_decode_multi_step(params, token, cache, block_tables, lengths,
 
     token/lengths/remaining (B,) int32; keys (B, 2) uint32.  Returns
     (tokens (n_steps, B) int32, new cache, new lengths, new remaining,
-    new keys).
+    new keys) — plus, with ``health=True``, a (B,) bool flagging slots
+    whose sampled logits went non-finite at any *active* step of the
+    window (the finite-logits half of the serving numeric-health guard;
+    masked/done slots are exempt, since their logits are garbage by
+    design).  The flag rides the scan carry, so it costs one (B, vocab)
+    ``isfinite`` reduction per step and nothing on the host.
     """
     vocab = cfg.vocab
 
     def one(carry, _):
-        tok, cache, lengths, remaining, keys = carry
+        tok, cache, lengths, remaining, keys, bad = carry
         done = remaining <= 0
         bt = jnp.where(done[:, None], trash_page, block_tables)
         ln = jnp.where(done, 0, lengths)
         logits, cache = paged_decode_step(params, tok, cache, bt, ln, cfg,
                                           fake_quant=fake_quant)
-        keys, nxt = sample_tokens(logits[:, -1, :vocab], keys, temperature)
+        last = logits[:, -1, :vocab]
+        keys, nxt = sample_tokens(last, keys, temperature)
+        if health:
+            bad = bad | (~jnp.all(jnp.isfinite(last), axis=-1) & ~done)
         nxt = jnp.where(done, tok, nxt)
         lengths = jnp.where(done, lengths, lengths + 1)
         remaining = jnp.where(done, remaining, remaining - 1)
-        return (nxt, cache, lengths, remaining, keys), nxt
+        return (nxt, cache, lengths, remaining, keys, bad), nxt
 
-    (token, cache, lengths, remaining, keys), toks = jax.lax.scan(
-        one, (token, cache, lengths, remaining, keys), None, length=n_steps)
+    bad0 = jnp.zeros(token.shape, bool)
+    (token, cache, lengths, remaining, keys, bad), toks = jax.lax.scan(
+        one, (token, cache, lengths, remaining, keys, bad0), None,
+        length=n_steps)
+    if health:
+        return toks, cache, lengths, remaining, keys, bad
     return toks, cache, lengths, remaining, keys

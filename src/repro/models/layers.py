@@ -455,9 +455,12 @@ def attention_paged_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
     q = logical(q, "kv_batch", None, None, None)
     out = None
     if cfg.mx.kv_key is not None and cfg.attn_impl == "flash":
+        from repro.kernels import backend
         from repro.kernels.ops import mx_paged_decode_attention_ctx
-        out = mx_paged_decode_attention_ctx(q, pool, block_tables, lengths,
-                                            cfg)
+        # supervised dispatch: a failed (or degraded) kernel returns None
+        # and the dense gather path below serves token-identically
+        out = backend.supervised("paged_attn", mx_paged_decode_attention_ctx,
+                                 q, pool, block_tables, lengths, cfg)
     if out is None:
         ka, va = paged_cache_gather(pool, block_tables, cfg, x.dtype, hd)
         # keep the gathered view slot-sharded (decode reads stay local);

@@ -143,13 +143,15 @@ class Model:
                                 lengths, remaining, keys, *, n_steps: int,
                                 temperature: float = 0.0,
                                 trash_page: int = 0,
-                                fake_quant: bool = False):
+                                fake_quant: bool = False,
+                                health: bool = False):
         """``n_steps`` fused decode steps in one lax.scan (device-resident
-        sampling; see decoder.paged_decode_multi_step)."""
+        sampling; see decoder.paged_decode_multi_step).  ``health=True``
+        appends a (B,) non-finite-logits flag to the return tuple."""
         return self.mod.paged_decode_multi_step(
             params, token, cache, block_tables, lengths, remaining, keys,
             self.cfg, n_steps=n_steps, temperature=temperature,
-            trash_page=trash_page, fake_quant=fake_quant)
+            trash_page=trash_page, fake_quant=fake_quant, health=health)
 
     def scatter_prefill(self, pool, cache, page_ids):
         """Scatter a batched contiguous prefill cache into the page pool."""

@@ -1,12 +1,18 @@
 from repro.serve.engine import (ContinuousBatchingEngine,  # noqa: F401
                                 GenerationConfig, ServeEngine)
-from repro.serve.frontend import (AsyncServer, RejectedError,  # noqa: F401
-                                  RequestStream, latency_summary,
-                                  percentile)
-from repro.serve.paging import BlockManager, pages_needed  # noqa: F401
+from repro.serve.faults import (Fault, FaultError,  # noqa: F401
+                                FaultPlan)
+from repro.serve.frontend import (AsyncServer,  # noqa: F401
+                                  QuarantinedError, RejectedError,
+                                  RequestStream, RetriesExhausted,
+                                  latency_summary, percentile)
+from repro.serve.paging import (BlockManager,  # noqa: F401
+                                PageGrantError, pages_needed)
 from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.scheduler import (Request, RequestState,  # noqa: F401
                                    Scheduler)
+from repro.serve.snapshot import (EngineSnapshot, capture,  # noqa: F401
+                                  restore)
 from repro.serve.swap import HostSwapStore, SwapData  # noqa: F401
 from repro.serve.traffic import (Arrival, TrafficClass,  # noqa: F401
                                  load_trace, on_off_times, poisson_times,

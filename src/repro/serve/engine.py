@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -45,11 +46,16 @@ import numpy as np
 
 from repro.core.mx_weight import params_nbytes
 from repro.dist.sharding import use_rules
+from repro.kernels import backend
+from repro.models import health as H
 from repro.models.decoder import sample_tokens
 from repro.models.registry import Model
-from repro.serve.paging import TRASH_PAGE, BlockManager, pages_needed
+from repro.serve import faults as F
+from repro.serve.faults import FaultPlan
+from repro.serve.paging import (TRASH_PAGE, BlockManager, PageGrantError,
+                                pages_needed)
 from repro.serve.prefix import PrefixCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.swap import (HostSwapStore, SwapData, concat_snapshots,
                               gather_pages, scatter_pages)
 
@@ -169,6 +175,23 @@ class ContinuousBatchingEngine:
                          MX policies and fp-dense; asserted in tests) —
                          only the prefill compute and fresh-page demand
                          shrink.
+    ``health_checks``  — numeric-health guards: every prefill and decode
+                         window additionally reduces (in the same jit) a
+                         per-slot non-finite-logits flag and an MX-block
+                         poison flag (SCALE_NAN/SCALE_INF scale bytes in
+                         the slot's live KV pages, a uint8 compare — no
+                         dequantization).  A flagged slot is
+                         *quarantined* at the window boundary: its
+                         window tokens are suppressed, its pages freed,
+                         and the request parked in ``scheduler.failed``
+                         with a diagnostic — healthy slots stream on
+                         token-identically (batch rows are independent).
+    ``faults``         — optional ``serve.faults.FaultPlan`` consulted at
+                         named sites (page_corrupt / swap_corrupt /
+                         prefill_nan / kernel_fail / alloc_fail / stall)
+                         for deterministic fault-injection tests and
+                         recovery drills.  None (the default) adds no
+                         per-step work.
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 8,
@@ -179,7 +202,9 @@ class ContinuousBatchingEngine:
                  sync_every: int = 8,
                  prefill_bucket: Optional[int] = None,
                  prefix_cache: bool = False,
-                 preempt: bool = False):
+                 preempt: bool = False,
+                 health_checks: bool = True,
+                 faults: Optional[FaultPlan] = None):
         if not model.supports_paged():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching needs a GQA "
@@ -203,7 +228,16 @@ class ContinuousBatchingEngine:
         self.scheduler = Scheduler(max_slots, self.blocks,
                                    prefix=self.prefix)
         self.preempt = bool(preempt)
+        self.health_checks = bool(health_checks)
+        self.faults = faults
         self.swap_store = HostSwapStore()
+        if faults is not None:
+            # alloc_fail fires through the BlockManager's grant hook (only
+            # non-trivial ensure() grants consult it — admission's reserved
+            # allocations stay exact), swap_corrupt through the store's put
+            self.blocks.fault_hook = (
+                lambda n: faults.should_fire("alloc_fail") is not None)
+            self.swap_store.faults = faults
         self.pool = model.init_paged_cache(num_pages, page_size)
         self.gen = gen
         self.rules = rules
@@ -231,6 +265,12 @@ class ContinuousBatchingEngine:
         # preempt-and-swap accounting (bench_serve schema v4)
         self.n_preemptions = 0
         self.n_restores = 0
+        # fault-tolerance accounting / state (bench_serve schema v5)
+        self.n_quarantined = 0
+        self.quarantined_in_step: List[Request] = []
+        self._step_progress = False     # quarantine/swap counts as progress
+        self._stall_abort = threading.Event()
+        self.stall_aborted = False      # watchdog cut a stalled step short
         # latency-observability window start: requests finished before
         # this index in scheduler.finished predate the last reset_metrics
         # (warmup) and are excluded from finished_in_window summaries
@@ -241,6 +281,7 @@ class ContinuousBatchingEngine:
         cfg = model.cfg
         self.vocab = cfg.vocab
         temperature = float(gen.temperature)
+        health_on = self.health_checks
 
         def _ctx():
             return use_rules(rules) if rules is not None \
@@ -252,7 +293,9 @@ class ContinuousBatchingEngine:
             (packing sub-byte codes on device) into the donated pool, and
             sample each request's first token from its own last prompt
             position — one host round-trip per bucket instead of three per
-            request."""
+            request.  With health checks on, a per-request guard flag
+            (non-finite last-position logits, or an MX poison marker in
+            the just-scattered pages) rides along in the same transfer."""
             with _ctx():
                 logits, cache, _ = model.prefill(
                     params, {"tokens": tokens}, max_len=tokens.shape[1])
@@ -260,14 +303,19 @@ class ContinuousBatchingEngine:
                 g = tokens.shape[0]
                 last = logits[jnp.arange(g), lens - 1, :self.vocab]
                 keys, first = sample_tokens(last, keys, temperature)
-                return first, keys, pool
+                if not health_on:
+                    return first, keys, pool, jnp.zeros(g, bool)
+                bad = ~jnp.all(jnp.isfinite(last), axis=-1)
+                bad = bad | H.slot_scale_poison(pool, page_ids, lens, cfg)
+                return first, keys, pool, bad
 
         def _suffix_prefill(params, tokens, starts, lens, keys, pool, bt):
             """Paged suffix prefill for G prefix-cache hits: compute only
             prompt positions [starts, lens) (the shared prefix pages are
             already resident), write their KV into the slots' private
             pages, and sample each request's first token from its last
-            prompt position — the hit-path twin of _prefill_scatter."""
+            prompt position — the hit-path twin of _prefill_scatter
+            (including the health-guard flag)."""
             with _ctx():
                 logits, pool = model.paged_prefill_suffix(
                     params, tokens, starts, lens, pool, bt)
@@ -275,7 +323,11 @@ class ContinuousBatchingEngine:
                 last = logits[jnp.arange(g), lens - starts - 1,
                               :self.vocab]
                 keys, first = sample_tokens(last, keys, temperature)
-                return first, keys, pool
+                if not health_on:
+                    return first, keys, pool, jnp.zeros(g, bool)
+                bad = ~jnp.all(jnp.isfinite(last), axis=-1)
+                bad = bad | H.slot_scale_poison(pool, bt, lens, cfg)
+                return first, keys, pool, bad
 
         def _copy_pages(pool, src, dst):
             """Batched COW: duplicate shared pages src -> dst before a
@@ -289,23 +341,53 @@ class ContinuousBatchingEngine:
 
         def _multi(params, tok, pool, bt, lengths, remaining, keys,
                    n_steps):
+            """Fused decode window.  With health checks on, two extra (B,)
+            flags ride the window's one host transfer: ``bad_logits``
+            (any live step saw non-finite logits) and ``poison`` (an MX
+            scale byte at/above the mode's poison threshold inside the
+            slot's live positions — checked on the post-window pool)."""
             with _ctx():
-                return model.paged_decode_multi_step(
-                    params, tok, pool, bt, lengths, remaining, keys,
-                    n_steps=n_steps, temperature=temperature,
-                    trash_page=TRASH_PAGE)
+                if not health_on:
+                    toks, pool2, ln, rem, keys2 = \
+                        model.paged_decode_multi_step(
+                            params, tok, pool, bt, lengths, remaining,
+                            keys, n_steps=n_steps,
+                            temperature=temperature,
+                            trash_page=TRASH_PAGE)
+                    z = jnp.zeros(tok.shape, bool)
+                    return toks, pool2, ln, rem, keys2, z, z
+                toks, pool2, ln, rem, keys2, bad_logits = \
+                    model.paged_decode_multi_step(
+                        params, tok, pool, bt, lengths, remaining, keys,
+                        n_steps=n_steps, temperature=temperature,
+                        trash_page=TRASH_PAGE, health=True)
+                poison = H.slot_scale_poison(pool2, bt, ln, cfg)
+                return toks, pool2, ln, rem, keys2, bad_logits, poison
 
         # donate the pool: every decode window / prefill scatter rewrites
         # it wholesale, and without donation XLA double-buffers the
         # dominant serving allocation (the CPU backend ignores donation
         # with a warning; on TPU this halves peak KV memory)
-        self._prefill_scatter = jax.jit(_prefill_scatter,
+        self._fns = {"prefill_scatter": _prefill_scatter,
+                     "suffix_prefill": _suffix_prefill,
+                     "copy_pages": _copy_pages, "swap_in": _swap_in,
+                     "multi": _multi}
+        self._rejit()
+
+    def _rejit(self) -> None:
+        """(Re)wrap the raw closures in fresh jax.jit caches.  Called once
+        at construction and again after a kernel degradation or an armed
+        ``backend.inject_failure`` — supervised dispatch decides the
+        kernel-vs-dense path at *trace* time, so the next call must
+        re-trace for the degraded path to take effect."""
+        f = self._fns
+        self._prefill_scatter = jax.jit(f["prefill_scatter"],
                                         donate_argnums=(4,))
-        self._suffix_prefill = jax.jit(_suffix_prefill,
+        self._suffix_prefill = jax.jit(f["suffix_prefill"],
                                        donate_argnums=(5,))
-        self._copy_pages = jax.jit(_copy_pages, donate_argnums=(0,))
-        self._swap_in = jax.jit(_swap_in, donate_argnums=(0,))
-        self._multi = jax.jit(_multi, static_argnums=(7,),
+        self._copy_pages = jax.jit(f["copy_pages"], donate_argnums=(0,))
+        self._swap_in = jax.jit(f["swap_in"], donate_argnums=(0,))
+        self._multi = jax.jit(f["multi"], static_argnums=(7,),
                               donate_argnums=(2,))
 
     # ------------------------------------------------------------ queries
@@ -371,6 +453,7 @@ class ContinuousBatchingEngine:
         self.peak_shared_pages = 0
         self.n_preemptions = 0
         self.n_restores = 0
+        self.n_quarantined = 0
         self._metrics_start = len(self.scheduler.finished)
         self.scheduler.n_preemptions = 0
         self.scheduler.n_restores = 0
@@ -414,8 +497,22 @@ class ContinuousBatchingEngine:
         """One host sync cycle: admit what fits (bucket-batched prefill),
         run one fused decode window of up to ``sync_every`` device steps;
         returns the (request id, token) pairs emitted this cycle in step
-        order (admissions emit their prefill token here too)."""
+        order (admissions emit their prefill token here too).
+
+        Recovery semantics: a slot whose health guard trips is
+        quarantined (tokens suppressed, pages freed, request parked in
+        ``scheduler.failed``); a mid-window page-grant failure swaps the
+        starved slot out and retries next step; a kernel launch failure
+        degrades that op to its dense path (``kernels.backend``) and the
+        closures re-trace.  ``quarantined_in_step`` holds this cycle's
+        quarantined requests for the front end's retry budget."""
         emitted: List[Tuple[int, int]] = []
+        self.quarantined_in_step = []
+        self._step_progress = False
+        if self.faults is not None:
+            self._consult_step_faults()
+            if self.stall_aborted:
+                return emitted          # watchdog cut the stall short
         if self.preempt:
             # swap out one victim at a time until the waiting head fits
             # (or no strictly lower-priority runner remains); the freed
@@ -434,22 +531,41 @@ class ContinuousBatchingEngine:
         if not self.scheduler.running:
             self.phase["sync"] += time.perf_counter() - t0
             return emitted
-        window = self.scheduler.plan_window(self._lengths, self.sync_every)
+        try:
+            window = self.scheduler.plan_window(self._lengths,
+                                                self.sync_every)
+        except PageGrantError as e:
+            # a page grant failed mid-window (alloc_fail injection or a
+            # genuinely starved pool): swap the starved slot out instead
+            # of crashing — its pages free up and the request re-enters
+            # the queue at its original rank
+            self._swap_out(self.scheduler.running[e.slot])
+            self.phase["sync"] += time.perf_counter() - t0
+            return emitted
         self._note_page_stats()             # post-grant working set
         snapshot = sorted(self.scheduler.running.items())
         rem0 = {slot: req.remaining for slot, req in snapshot}
         bt = self._device_tables()
         t1 = time.perf_counter()
-        toks, self.pool, _, _, self._slot_keys = self._multi(
-            self.params, jnp.asarray(self._cur_tok), self.pool, bt,
-            jnp.asarray(self._lengths), jnp.asarray(self._remaining),
-            self._slot_keys, window)
+        toks, self.pool, _, _, self._slot_keys, badl, poison = \
+            self._multi(
+                self.params, jnp.asarray(self._cur_tok), self.pool, bt,
+                jnp.asarray(self._lengths), jnp.asarray(self._remaining),
+                self._slot_keys, window)
         toks = np.asarray(toks)         # the one host transfer per window
+        if self.health_checks:
+            badl = np.asarray(badl)
+            poison = np.asarray(poison)
+            bad = badl | poison
+        else:
+            bad = np.zeros(toks.shape[1], bool)
         t2 = time.perf_counter()
         self.n_steps += window
         self.n_syncs += 1
         for t in range(window):
             for slot, req in snapshot:
+                if bad[slot]:
+                    continue            # quarantined below; no tokens out
                 if t < rem0[slot]:
                     tok = int(toks[t, slot])
                     req.out.append(tok)
@@ -459,6 +575,12 @@ class ContinuousBatchingEngine:
                     emitted.append((req.rid, tok))
                     self.n_generated += 1
         for slot, req in snapshot:
+            if bad[slot]:
+                why = ("non-finite logits in decode window"
+                       if badl[slot]
+                       else "MX scale poison marker in KV pages")
+                self._quarantine(req, f"numeric-health guard: {why}")
+                continue
             take = min(window, rem0[slot])
             self._lengths[slot] += take
             self._remaining[slot] -= take
@@ -470,14 +592,107 @@ class ContinuousBatchingEngine:
         self.phase["sync"] += (t1 - t0) + (time.perf_counter() - t2)
         return emitted
 
+    def _consult_step_faults(self) -> None:
+        """Step-scoped fault-injection sites (no-op without a plan):
+        ``stall`` sleeps the host loop (cooperatively — ``abort_stall``
+        cuts it short, as the front end's watchdog does before a
+        snapshot restore); ``kernel_fail`` arms a one-shot paged-attention
+        launch failure and forces the re-trace that lets supervised
+        dispatch degrade it; ``page_corrupt`` overwrites one live KV
+        position's scale bytes with SCALE_NAN markers — exactly what a
+        faulty converter or DMA would leave behind."""
+        plan = self.faults
+        self.stall_aborted = False
+        f = plan.should_fire("stall")
+        if f is not None:
+            deadline = time.monotonic() + f.stall_s
+            while time.monotonic() < deadline:
+                if self._stall_abort.is_set():
+                    self._stall_abort.clear()
+                    self.stall_aborted = True
+                    return
+                time.sleep(0.002)
+        if plan.should_fire("kernel_fail") is not None:
+            backend.inject_failure("paged_attn")
+            self._rejit()
+        f = plan.should_fire("page_corrupt")
+        if f is not None and self.scheduler.running:
+            cands = sorted(self.scheduler.running.items())
+            if f.rid is not None:
+                cands = [(s, r) for s, r in cands if r.rid == f.rid]
+            if cands:
+                rng = plan.rng("page_corrupt")
+                slot, _ = cands[int(rng.integers(len(cands)))]
+                length = int(self._lengths[slot])
+                if length > 0:
+                    pos = int(rng.integers(length))
+                    pid = self.blocks.slot_page_ids(slot)[
+                        pos // self.page_size]
+                    self.pool = F.poison_pool_pages(
+                        self.pool, [pid], offset=pos % self.page_size)
+
+    def _quarantine(self, req: Request, diag: str) -> None:
+        """Park a guard-flagged request: free its slot + pages, record the
+        diagnostic, suppress its window tokens (already skipped by the
+        caller).  Healthy slots are untouched — batch rows are
+        independent, so their token streams are identical to a run
+        without the poisoned neighbor (asserted in tests)."""
+        slot = req.slot
+        ids = self.blocks.slot_page_ids(slot)
+        self.scheduler.fail(req, diag)
+        # quarantine hygiene: the request's now-dead pages hold the very
+        # poison that tripped the guard — scrub them to the fresh-page
+        # all-zeros state before the allocator can recycle them into a
+        # healthy slot (pages still shared/pinned stay untouched: another
+        # owner's scan will judge them)
+        dead = [pg for pg in ids if self.blocks.page_refcount(pg) == 0]
+        if dead:
+            self.pool = F.scrub_pool_pages(self.pool, dead)
+        req.t_finished = time.perf_counter()
+        self.n_quarantined += 1
+        self.quarantined_in_step.append(req)
+        self._step_progress = True
+        self._cur_tok[slot] = 0
+        self._lengths[slot] = 0
+        self._remaining[slot] = 0
+
+    def retry_request(self, req: Request) -> None:
+        """Re-queue a quarantined (failed) request for another attempt —
+        the engine half of the front end's retry budget.  The request
+        keeps its rid, so its per-slot PRNG key re-derives identically
+        and a healthy replay is token-identical at any temperature."""
+        self.scheduler.requeue(req)
+
+    def resubmit(self, req: Request) -> None:
+        """Re-enter a request the engine no longer tracks (post-snapshot
+        arrivals discarded by a restore): reset its generation state and
+        queue it as if newly submitted, keeping its rid."""
+        req.state = RequestState.WAITING
+        req.slot = -1
+        req.out = []
+        req.t_tokens = []
+        req.t_finished = None
+        req.error = None
+        req.matched_tokens = 0
+        req.cow_pending = 0
+        req.swap_pages = 0
+        self.scheduler.submit(req)
+
+    def abort_stall(self) -> None:
+        """Cut a faulted ``stall`` sleep short (watchdog thread-safe)."""
+        self._stall_abort.set()
+
     def run(self) -> Dict[int, np.ndarray]:
         """Drive ``step()`` until every queued request finishes; returns
         {request id: generated tokens} for the requests finished by this
         call (the engine is reusable: jitted closures stay warm across
-        batches)."""
+        batches).  Quarantined requests are *not* in the result — they
+        sit in ``scheduler.failed`` with ``req.error`` set."""
         start = len(self.scheduler.finished)
         while self.scheduler.has_work():
-            if not self.step() and not self.scheduler.running:
+            emitted = self.step()
+            if not emitted and not self.scheduler.running \
+                    and not self._step_progress:
                 raise RuntimeError(
                     "no progress: waiting requests cannot be admitted")
         return {r.rid: np.asarray(r.out, np.int32)
@@ -538,10 +753,10 @@ class ContinuousBatchingEngine:
             # bucket-padded prompt's excess pages scatter harmlessly
             npr = lp // self.page_size
             page_ids = self.blocks.tables[slots, :npr]
-            first, keys, self.pool = self._prefill_scatter(
+            first, keys, self.pool, bad = self._prefill_scatter(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 fresh, self.pool, jnp.asarray(page_ids))
-            self._finish_prefill(reqs, slots, keys, first, emitted)
+            self._finish_prefill(reqs, slots, keys, first, emitted, bad)
         if hits:
             self._cow_forks(hits)
             self._hit_prefill(hits, emitted)
@@ -592,11 +807,11 @@ class ContinuousBatchingEngine:
                 lens[i] = r.prompt_len
             fresh = jax.vmap(lambda r: jax.random.fold_in(self._key, r))(
                 jnp.asarray([r.rid for r in reqs], jnp.uint32))
-            first, keys, self.pool = self._suffix_prefill(
+            first, keys, self.pool, bad = self._suffix_prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(starts),
                 jnp.asarray(lens), fresh, self.pool,
                 bt[jnp.asarray(slots)])
-            self._finish_prefill(reqs, slots, keys, first, emitted)
+            self._finish_prefill(reqs, slots, keys, first, emitted, bad)
 
     # ------------------------------------------------- preempt-and-swap
     def _swap_out(self, req: Request) -> None:
@@ -616,6 +831,7 @@ class ContinuousBatchingEngine:
         req.swap_pages = len(ids)
         self.scheduler.preempt(req)
         self.n_preemptions += 1
+        self._step_progress = True
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0
         self._remaining[slot] = 0
@@ -657,15 +873,39 @@ class ContinuousBatchingEngine:
         self.phase["swap"] += time.perf_counter() - t0
 
     def _finish_prefill(self, reqs: List[Request], slots, keys, first,
-                        emitted: List[Tuple[int, int]]) -> None:
+                        emitted: List[Tuple[int, int]],
+                        bad=None) -> None:
         """Common admission epilogue: install per-slot keys, emit each
         request's first token, account computed prefill positions, and
-        grant the first decode write's page."""
+        grant the first decode write's page.  A request whose prefill
+        health flag (``bad``) is set — or whose ``prefill_nan`` fault
+        fires here — is quarantined instead of emitting; a failed
+        first-decode page grant (alloc_fail) swaps the request out to
+        resume when pages free up."""
         self._slot_keys = self._slot_keys.at[slots].set(keys)
         first = np.asarray(first)
+        bad = None if bad is None else np.asarray(bad).copy()
         now = time.perf_counter()
         for i, r in enumerate(reqs):
             slot = r.slot
+            if self.faults is not None and \
+                    self.faults.should_fire("prefill_nan",
+                                            rid=r.rid) is not None:
+                # poison exactly the pages holding the prompt's KV — the
+                # padded tail of the page_ids row may alias the trash
+                # page, which every slot reads
+                n_live = pages_needed(r.prompt_len, self.page_size)
+                ids = self.blocks.slot_page_ids(slot)[:n_live]
+                self.pool = F.poison_pool_pages(self.pool, ids)
+                if bad is not None:
+                    bad[i] = True
+            if bad is not None and bad[i]:
+                self.prefill_tokens_computed += \
+                    r.prompt_len - r.prefill_start
+                self._quarantine(
+                    r, "numeric-health guard: non-finite logits or MX "
+                       "poison marker at prefill")
+                continue
             tok = int(first[i])
             self._cur_tok[slot] = tok
             self._lengths[slot] = r.prompt_len
@@ -683,11 +923,11 @@ class ContinuousBatchingEngine:
             emitted.append((r.rid, tok))
             if r.done:
                 self._release(r)
-            else:
+            elif not self.blocks.ensure(slot, r.prompt_len + 1):
                 # the decode write position may sit in a page past the
-                # prompt's allocation (prompt length a page multiple)
-                ok = self.blocks.ensure(slot, r.prompt_len + 1)
-                assert ok, "admission reserved full-sequence capacity"
+                # prompt's allocation; a failed grant (alloc_fail) parks
+                # the request in the swap store to resume later
+                self._swap_out(r)
 
     def _release(self, req: Request) -> None:
         slot = req.slot

@@ -1,0 +1,231 @@
+"""Seeded, deterministic fault injection for the serving stack.
+
+A :class:`FaultPlan` is a list of :class:`Fault` records the engine and
+front end consult at **named injection sites**.  Every consultation is
+counted, and a fault fires when its site matches and either its ``nth``
+occurrence is reached or it is marked ``always`` — so a plan replays
+bit-identically run after run, which is what makes every recovery path
+*provable* in tests (the same seeded plan must yield the same quarantine
+set, the same retry outcomes, the same restored tokens) instead of
+hoped-for.
+
+Sites (who consults, what the fault does):
+
+``page_corrupt``   — engine, once per ``step()``: overwrite one live
+                     token's MX scale bytes in the target request's pages
+                     with the marker value (a real bit-flip in a scale
+                     page is detected by exactly this compare); fp pools
+                     get NaN.  Detected by the next window's poison scan.
+``swap_corrupt``   — ``HostSwapStore.put``, per swap-out (rid-matched):
+                     corrupt the host payload; the corruption is detected
+                     after restore, at the next decode window.
+``prefill_nan``    — engine, per cold admission (rid-matched): poison the
+                     freshly scattered prompt pages with SCALE_NAN — the
+                     page-level footprint NaN activations leave through
+                     the quantizer — and flag the slot.
+``kernel_fail``    — engine, once per ``step()``: arm a one-shot Pallas
+                     launch failure in ``kernels.backend``; supervised
+                     dispatch catches it, logs once, and degrades that op
+                     to the dense path for the rest of the process.
+``alloc_fail``     — ``BlockManager.ensure`` (via its fault hook), per
+                     page grant: fail the allocation; the engine recovers
+                     by swapping the affected slot out (token-identical
+                     resume on re-admission).
+``stall``          — engine, once per ``step()``: spin for ``stall_s``
+                     seconds (cooperatively — ``engine.abort_stall()``
+                     breaks out) before doing any work, simulating a hung
+                     step loop for the watchdog to detect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import SCALE_NAN
+
+
+class FaultError(RuntimeError):
+    """An injected failure (distinguishable from organic errors)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One planned fault: fire at the ``nth`` consultation of ``site``
+    (counted per (site, rid) when ``rid`` targets a request, per site
+    otherwise), or at every matching consultation when ``always``."""
+    site: str
+    nth: int = 0
+    rid: Optional[int] = None
+    always: bool = False
+    stall_s: float = 0.25           # stall site only
+    n_bytes: int = 4                # page_corrupt: scale bytes to hit
+
+    def __post_init__(self):
+        if self.site not in FaultPlan.SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"choose from {FaultPlan.SITES}")
+
+
+class FaultPlan:
+    """Deterministic plan: consultations are counted, matches recorded in
+    ``fired`` (site, rid, count), and any randomness (which byte to
+    corrupt) derives from ``seed`` + the consultation count alone."""
+
+    SITES = ("page_corrupt", "swap_corrupt", "prefill_nan",
+             "kernel_fail", "alloc_fail", "stall")
+
+    def __init__(self, faults: Sequence[Fault] = (), seed: int = 0):
+        self.faults = list(faults)
+        self.seed = int(seed)
+        self._counts = {}
+        self.fired: List[Tuple[str, Optional[int], int]] = []
+
+    def __repr__(self):
+        return f"FaultPlan({self.faults!r}, seed={self.seed})"
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
+        """Parse ``--faults`` syntax: comma-separated sites with optional
+        ``:key=value`` modifiers, e.g.
+        ``"prefill_nan:rid=2,page_corrupt:nth=1,stall:stall_s=0.5,
+        prefill_nan:rid=5:always"``."""
+        faults = []
+        for item in filter(None, (s.strip() for s in text.split(","))):
+            site, *mods = item.split(":")
+            kw = {}
+            for m in mods:
+                if m == "always":
+                    kw["always"] = True
+                    continue
+                k, _, v = m.partition("=")
+                if k in ("nth", "rid", "n_bytes"):
+                    kw[k] = int(v)
+                elif k == "stall_s":
+                    kw[k] = float(v)
+                else:
+                    raise ValueError(f"bad fault modifier {m!r} in "
+                                     f"{item!r}")
+            faults.append(Fault(site=site, **kw))
+        return cls(faults, seed=seed)
+
+    def should_fire(self, site: str, rid: Optional[int] = None
+                    ) -> Optional[Fault]:
+        """Count one consultation of ``site`` (for ``rid``, when the site
+        is request-scoped) and return the fault that fires now, if any."""
+        if site not in self.SITES:
+            raise ValueError(f"unknown fault site {site!r}")
+        n_any = self._counts.get((site, None), 0)
+        self._counts[(site, None)] = n_any + 1
+        n_rid = 0
+        if rid is not None:
+            n_rid = self._counts.get((site, rid), 0)
+            self._counts[(site, rid)] = n_rid + 1
+        for f in self.faults:
+            if f.site != site:
+                continue
+            # a fault's rid filters rid-scoped consultations; at a
+            # site-wide consultation (rid=None) it is a *target* hint the
+            # caller reads off the returned fault, not a mismatch
+            if f.rid is not None and rid is not None and rid != f.rid:
+                continue
+            n = n_rid if (f.rid is not None and rid is not None) else n_any
+            if f.always or n == f.nth:
+                self.fired.append((site, rid, n))
+                return f
+        return None
+
+    def rng(self, site: str) -> np.random.Generator:
+        """Deterministic per-(site, consultation) generator."""
+        n = self._counts.get((site, None), 0)
+        return np.random.default_rng(
+            (self.seed, self.SITES.index(site), n))
+
+
+# =============================================================================
+# Corruption helpers (the physical half of the injection sites)
+# =============================================================================
+def _map_groups(pool, fn):
+    """Apply ``fn`` to every layer group's leaf dict of a paged pool."""
+    out = {}
+    lay = pool["layers"]
+    out["layers"] = [fn(g) for g in lay] if isinstance(lay, list) \
+        else fn(lay)
+    if "dense_layers" in pool:
+        out["dense_layers"] = [fn(g) for g in pool["dense_layers"]]
+    return out
+
+
+def poison_pool_pages(pool, page_ids, offset: Optional[int] = None):
+    """Write SCALE_NAN into every MX scale leaf (NaN into fp leaves) at
+    the given physical pages — the whole page, or one token ``offset``.
+    Device-side; returns a new pool pytree."""
+    ids = jnp.asarray(np.asarray(page_ids, np.int32).reshape(-1))
+
+    def hit(leaf, val):
+        if offset is None:
+            return leaf.at[:, ids].set(val) if leaf.ndim == 5 \
+                else leaf.at[ids].set(val)
+        return leaf.at[:, ids, offset].set(val) if leaf.ndim == 5 \
+            else leaf.at[ids, offset].set(val)
+
+    def group(g):
+        out = dict(g)
+        for sk in ("ks_pages", "vs_pages"):
+            if sk in g:
+                out[sk] = hit(g[sk], jnp.uint8(SCALE_NAN))
+        for fk in ("k_pages", "v_pages"):
+            if fk in g:
+                out[fk] = hit(g[fk], jnp.asarray(jnp.nan, g[fk].dtype))
+        return out
+
+    return _map_groups(pool, group)
+
+
+def scrub_pool_pages(pool, page_ids):
+    """Zero every leaf's bytes at the given physical pages — quarantine
+    hygiene, not an injection site.  A quarantined request's pages return
+    to the free list still holding poison markers / NaN payloads; a later
+    allocation re-maps them and the *unwritten tail* of a partially
+    filled page is read (masked) by attention, where a stale NaN survives
+    the mask as ``0 * NaN``.  Scrubbing the dead pages before reuse
+    restores the all-zeros state fresh pages were born with.  Device-side;
+    returns a new pool pytree."""
+    ids = jnp.asarray(np.asarray(page_ids, np.int32).reshape(-1))
+
+    def group(g):
+        out = dict(g)
+        for k, leaf in g.items():
+            zero = jnp.zeros((), leaf.dtype)
+            out[k] = leaf.at[:, ids].set(zero) if leaf.ndim == 5 \
+                else leaf.at[ids].set(zero)
+        return out
+
+    return _map_groups(pool, group)
+
+
+def corrupt_swap_payload(host_pool) -> int:
+    """Corrupt a ``gather_pages`` host snapshot **in place**: every MX
+    scale leaf is overwritten with SCALE_NAN (fp leaves with NaN), so the
+    restored request is flagged by the first post-restore health scan.
+    Returns the number of leaves touched."""
+    hit = 0
+
+    def group(g):
+        nonlocal hit
+        # gather_pages leaves are read-only views of device arrays —
+        # replace them with corrupted writable copies
+        for sk in ("ks_pages", "vs_pages"):
+            if sk in g:
+                g[sk] = np.full_like(np.asarray(g[sk]), SCALE_NAN)
+                hit += 1
+        for fk in ("k_pages", "v_pages"):
+            if fk in g:
+                g[fk] = np.full_like(np.asarray(g[fk]), np.nan)
+                hit += 1
+        return g
+
+    _map_groups(host_pool, group)
+    return hit

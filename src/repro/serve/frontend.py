@@ -39,13 +39,24 @@ from typing import AsyncIterator, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serve import snapshot as snapshot_mod
 from repro.serve.engine import ContinuousBatchingEngine
-from repro.serve.scheduler import Request
+from repro.serve.scheduler import Request, RequestState
 
 
 class RejectedError(RuntimeError):
     """Raised by ``submit`` under ``admission="reject"`` when the request
     cannot start immediately (no free slot/pages, or a backlog exists)."""
+
+
+class QuarantinedError(RuntimeError):
+    """A request was quarantined by a numeric-health guard and no retry
+    budget remains (``retries=0``).  Raised out of the request's stream;
+    the message carries the engine's diagnostic."""
+
+
+class RetriesExhausted(QuarantinedError):
+    """A quarantined request failed every attempt of its retry budget."""
 
 
 def percentile(samples: Sequence[float], q: float) -> float:
@@ -94,6 +105,9 @@ class RequestStream:
         self._q: asyncio.Queue = asyncio.Queue()
         self._out: List[int] = []
         self._done = False
+        # tokens the server has put into the queue — the replay-dedupe
+        # baseline for retry and snapshot recovery
+        self.n_pushed = 0
 
     def __aiter__(self) -> AsyncIterator[int]:
         return self._gen()
@@ -103,7 +117,12 @@ class RequestStream:
         # iterating again (e.g. tokens() after an async-for) must stop
         # instead of awaiting a queue nothing will ever fill
         while not self._done:
-            tok, final = await self._q.get()
+            item = await self._q.get()
+            if isinstance(item, Exception):
+                # terminal failure (QuarantinedError / RetriesExhausted)
+                self._done = True
+                raise item
+            tok, final = item
             self._out.append(tok)
             self._done = final
             yield tok
@@ -141,30 +160,77 @@ class AsyncServer:
     ``use_executor`` — run each engine step in the default thread-pool
     executor so jitted device work doesn't block the event loop.
 
+    Fault tolerance (engine ``health_checks`` quarantines feed these):
+
+    ``retries``        — per-request retry budget: a quarantined request
+                         re-enters the queue after a jittered exponential
+                         backoff (``retry_backoff_s * 2**attempt``), same
+                         rid — the replay is token-identical, and tokens
+                         the stream already delivered are deduplicated.
+                         After ``retries`` failed attempts the stream
+                         raises :class:`RetriesExhausted` (``retries=0``
+                         raises :class:`QuarantinedError` immediately).
+    ``watchdog_s``     — stalled-step watchdog (requires
+                         ``use_executor=True``): when one engine step
+                         exceeds this wall time, the server aborts the
+                         stall cooperatively (``engine.abort_stall``) and
+                         restores the last snapshot; streams resume
+                         token-identically (already-delivered tokens are
+                         skipped on replay).
+    ``snapshot_every`` — take an engine snapshot
+                         (``serve.snapshot.capture``) every N completed
+                         steps (an initial one is always taken when this
+                         or ``watchdog_s`` is set).
+
     Use as an async context manager (starts/stops the step loop), or call
     :meth:`start` / :meth:`stop` explicitly.
     """
 
     def __init__(self, engine: ContinuousBatchingEngine, *,
                  admission: str = "block", max_queued: int = 64,
-                 use_executor: bool = False):
+                 use_executor: bool = False,
+                 retries: int = 0, retry_backoff_s: float = 0.05,
+                 watchdog_s: Optional[float] = None,
+                 snapshot_every: Optional[int] = None):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', "
                              f"got {admission!r}")
         if max_queued < 1:
             raise ValueError(f"max_queued must be >= 1, got {max_queued}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        if watchdog_s is not None and not use_executor:
+            raise ValueError(
+                "watchdog_s requires use_executor=True: without the "
+                "executor the step blocks the event loop and a stalled "
+                "step could never be timed out")
+        if snapshot_every is not None and snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {snapshot_every}")
         self.engine = engine
         self.admission = admission
         self.max_queued = int(max_queued)
         self.use_executor = bool(use_executor)
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.watchdog_s = watchdog_s
+        self.snapshot_every = snapshot_every
         self._pending: collections.deque = collections.deque()
+        self._requeue: collections.deque = collections.deque()
         self._streams: Dict[int, RequestStream] = {}
+        self._skip: Dict[int, int] = {}     # replay-dedupe counters
         self._task: Optional[asyncio.Task] = None
         self._wake: Optional[asyncio.Event] = None
         self._space: Optional[asyncio.Condition] = None
         self._stopping = False
+        self._snap = None                   # last EngineSnapshot
+        self._snap_pushed: Dict[int, int] = {}
+        self._steps_since_snap = 0
         self.n_accepted = 0
         self.n_rejected = 0
+        self.n_retried = 0                  # retry attempts dispatched
+        self.n_failed = 0                   # terminal quarantines
+        self.n_recoveries = 0               # watchdog snapshot restores
 
     # ------------------------------------------------------------ lifecycle
     async def __aenter__(self) -> "AsyncServer":
@@ -221,8 +287,9 @@ class AsyncServer:
         return await future
 
     async def drain(self) -> None:
-        """Wait until every accepted request has finished streaming."""
-        while (self._pending or self._streams
+        """Wait until every accepted request has finished streaming (or
+        failed terminally)."""
+        while (self._pending or self._requeue or self._streams
                or self.engine.scheduler.has_work()):
             self._wake.set()
             await asyncio.sleep(0.001)
@@ -230,7 +297,21 @@ class AsyncServer:
     # ------------------------------------------------------------ step loop
     def _apply_pending(self) -> None:
         """Apply queued submissions to the scheduler — always on the loop
-        task, between engine steps, so scheduler state is single-writer."""
+        task, between engine steps, so scheduler state is single-writer.
+        Backoff-expired retries re-enter first: they keep their original
+        arrival rank, so a retried request isn't starved by later
+        arrivals."""
+        while self._requeue:
+            req = self._requeue.popleft()
+            if req.state is not RequestState.FAILED:
+                continue        # a snapshot restore rewound the failure
+            stream = self._streams.get(req.rid)
+            if stream is not None:
+                # the healthy prefix already streamed is replayed
+                # token-identically — skip it on delivery
+                self._skip[req.rid] = stream.n_pushed
+            self.engine.retry_request(req)
+            self.n_retried += 1
         while self._pending:
             p = self._pending.popleft()
             if p.future.cancelled():
@@ -258,24 +339,48 @@ class AsyncServer:
 
     async def _loop(self) -> None:
         loop = asyncio.get_running_loop()
+        if self.watchdog_s is not None or self.snapshot_every is not None:
+            self._take_snapshot()
         while True:
             self._apply_pending()
             if self.engine.scheduler.has_work():
+                recovered = False
                 if self.use_executor:
-                    emitted = await loop.run_in_executor(
-                        None, self.engine.step)
+                    step = loop.run_in_executor(None, self.engine.step)
+                    if self.watchdog_s is not None:
+                        try:
+                            emitted = await asyncio.wait_for(
+                                asyncio.shield(step), self.watchdog_s)
+                        except asyncio.TimeoutError:
+                            # a stalled step: cut it short cooperatively,
+                            # then roll the engine back to the snapshot —
+                            # the aborted step's partial work is discarded
+                            # and replayed token-identically
+                            self.engine.abort_stall()
+                            await step
+                            self._recover_from_snapshot()
+                            recovered = True
+                    else:
+                        emitted = await step
                 else:
                     emitted = self.engine.step()
                     await asyncio.sleep(0)  # let submitters interleave
-                self._publish(emitted)
+                if not recovered:
+                    self._publish(emitted)
+                    self._handle_quarantines(loop)
+                    self._steps_since_snap += 1
+                    if self.snapshot_every is not None \
+                            and self._steps_since_snap \
+                            >= self.snapshot_every:
+                        self._take_snapshot()
             async with self._space:
                 self._space.notify_all()
             if not self.engine.scheduler.has_work() \
-                    and not self._pending:
+                    and not self._pending and not self._requeue:
                 if self._stopping:
                     return
                 self._wake.clear()
-                if self._pending:           # raced with a submit
+                if self._pending or self._requeue:  # raced with a submit
                     continue
                 await self._wake.wait()
 
@@ -289,6 +394,79 @@ class AsyncServer:
             if stream is None:
                 continue
             final = rid in done_rids and i == last[rid]
+            skip = self._skip.get(rid, 0)
+            if skip > 0:
+                # replayed token the stream already delivered (a live
+                # stream's final token is never in the skipped prefix:
+                # delivering final deletes the stream)
+                self._skip[rid] = skip - 1
+                continue
             stream._q.put_nowait((tok, final))
+            stream.n_pushed += 1
             if final:
                 del self._streams[rid]
+                self._skip.pop(rid, None)
+
+    # ------------------------------------------------- retry + recovery
+    def _backoff_delay(self, req: Request) -> float:
+        """Exponential backoff with deterministic per-(rid, attempt)
+        jitter in [1.0, 1.25) — decorrelates same-step quarantines
+        without a nondeterministic RNG."""
+        j = ((req.rid * 2654435761 + req.n_retries * 40503) % 997) / 997.0
+        return self.retry_backoff_s * (2 ** req.n_retries) * (1 + 0.25 * j)
+
+    def _handle_quarantines(self, loop) -> None:
+        """Route this step's quarantined requests: schedule a backoff'd
+        retry while budget remains, otherwise fail the stream."""
+        for req in self.engine.quarantined_in_step:
+            stream = self._streams.get(req.rid)
+            if req.n_retries < self.retries:
+                loop.call_later(self._backoff_delay(req),
+                                self._requeue_later, req)
+                continue
+            self.n_failed += 1
+            if stream is None:
+                continue
+            if self.retries:
+                err: Exception = RetriesExhausted(
+                    f"request {req.rid} quarantined after "
+                    f"{req.n_retries} retries: {req.error}")
+            else:
+                err = QuarantinedError(
+                    f"request {req.rid} quarantined: {req.error}")
+            stream._q.put_nowait(err)
+            del self._streams[req.rid]
+            self._skip.pop(req.rid, None)
+
+    def _requeue_later(self, req: Request) -> None:
+        """call_later target: hand the request back to the loop task (the
+        scheduler is single-writer — mutation happens in _apply_pending)."""
+        self._requeue.append(req)
+        self._wake.set()
+
+    def _take_snapshot(self) -> None:
+        self._snap = snapshot_mod.capture(self.engine)
+        self._snap_pushed = {rid: st.n_pushed
+                             for rid, st in self._streams.items()}
+        self._steps_since_snap = 0
+
+    def _recover_from_snapshot(self) -> None:
+        """Roll the engine back to the last snapshot and reconcile the
+        live streams: tokens delivered since the snapshot will be
+        re-emitted token-identically, so each stream skips exactly that
+        many; requests the snapshot never saw are resubmitted whole."""
+        assert self._snap is not None, "watchdog recovery needs a snapshot"
+        snapshot_mod.restore(self.engine, self._snap)
+        self.engine._stall_abort.clear()    # no stale abort latch
+        known = {r.rid for r, _ in self._snap.requests}
+        for rid, stream in list(self._streams.items()):
+            if rid in known:
+                self._skip[rid] = \
+                    stream.n_pushed - self._snap_pushed.get(rid, 0)
+            else:
+                # submitted after the snapshot: restore dropped it from
+                # the queues — re-enter it whole and skip everything the
+                # stream already got
+                self.engine.resubmit(stream.request)
+                self._skip[rid] = stream.n_pushed
+        self.n_recoveries += 1

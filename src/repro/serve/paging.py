@@ -30,6 +30,20 @@ import numpy as np
 TRASH_PAGE = 0
 
 
+class PageGrantError(RuntimeError):
+    """A page grant failed for a slot whose capacity admission had
+    reserved (a transient allocator fault, injected or real).  Carries
+    the slot so the engine can recover by swapping that request out —
+    it resumes token-identically on re-admission — instead of tearing
+    the whole window down."""
+
+    def __init__(self, slot: int, need: int):
+        super().__init__(
+            f"page grant failed for slot {slot} ({need} pages)")
+        self.slot = slot
+        self.need = need
+
+
 def pages_needed(tokens: int, page_size: int) -> int:
     """Pages required to hold ``tokens`` positions (>= 1 so every admitted
     request owns the page its first generated token lands in)."""
@@ -116,6 +130,9 @@ class BlockManager:
         self._shared: List[List[bool]] = [[] for _ in range(max_slots)]
         self._table_refs = np.zeros(num_pages, np.int32)
         self._pins = np.zeros(num_pages, np.int32)
+        # fault-injection hook (serve.faults): called with the page count
+        # of every non-trivial ensure(); returning True fails that grant
+        self.fault_hook = None
 
     # ------------------------------------------------------------- queries
     @property
@@ -247,7 +264,11 @@ class BlockManager:
     def ensure(self, slot: int, tokens: int) -> bool:
         """Grow ``slot``'s allocation to cover ``tokens`` positions."""
         need = pages_needed(tokens, self.page_size) - self.slot_pages(slot)
-        return True if need <= 0 else self.allocate(slot, need)
+        if need <= 0:
+            return True
+        if self.fault_hook is not None and self.fault_hook(need):
+            return False
+        return self.allocate(slot, need)
 
     def pin(self, page: int) -> None:
         """External (prefix-cache) reference: the page survives ``release``

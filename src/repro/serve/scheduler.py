@@ -33,7 +33,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.paging import BlockManager, pages_needed
+from repro.serve.paging import BlockManager, PageGrantError, pages_needed
 from repro.serve.prefix import PrefixCache
 
 
@@ -42,6 +42,7 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     SWAPPED = "swapped"         # preempted; KV pages live in the swap store
     FINISHED = "finished"
+    FAILED = "failed"           # quarantined by a numeric-health guard
 
 
 @dataclasses.dataclass
@@ -67,6 +68,9 @@ class Request:
     seq: int = -1                       # arrival rank (set by submit)
     swap_pages: int = 0                 # pages to re-allocate on restore
     n_preemptions: int = 0
+    # ---- fault tolerance -------------------------------------------------
+    error: Optional[str] = None         # quarantine diagnostic (FAILED)
+    n_retries: int = 0                  # times re-queued after quarantine
     # ---- latency observability (bench_serve schema v4) ------------------
     arrival_t: Optional[float] = None   # perf_counter at add_request
     t_admitted: Optional[float] = None  # first admission
@@ -146,6 +150,7 @@ class Scheduler:
         self.waiting: List[Request] = []        # kept sorted by _order
         self.running: Dict[int, Request] = {}   # slot -> request
         self.finished: List[Request] = []
+        self.failed: List[Request] = []         # quarantined (FAILED)
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._seq = 0
         self.n_preemptions = 0
@@ -359,7 +364,14 @@ class Scheduler:
         for slot, req in self.running.items():
             tgt = min(int(lengths[slot]) + window + 1, req.total_len)
             ok = self.blocks.ensure(slot, tgt)
-            assert ok, "admission reserved full-sequence capacity"
+            if not ok:
+                # admission reserved full-sequence capacity, so a failed
+                # grant is a (possibly injected) allocator fault — raise
+                # a recoverable error naming the slot; the engine swaps
+                # that request out and resumes it token-identically later
+                raise PageGrantError(
+                    slot, pages_needed(tgt, self.blocks.page_size)
+                    - self.blocks.slot_pages(slot))
             assert self.grant_horizon(req, int(lengths[slot])) \
                 >= min(window, req.remaining), "page grant below horizon"
         return window
@@ -374,3 +386,40 @@ class Scheduler:
         self._free_slots.append(req.slot)
         req.slot = -1
         self.finished.append(req)
+
+    # ---------------------------------------------------- fault tolerance
+    def fail(self, req: Request, error: str) -> None:
+        """Quarantine a running request: free its slot and pages exactly
+        like :meth:`evict`, but record the health-guard diagnostic and
+        park it on ``failed`` instead of ``finished`` — its tokens were
+        suppressed, not served."""
+        assert req.state is RequestState.RUNNING, \
+            "only a running request can be quarantined"
+        req.error = error
+        req.state = RequestState.FAILED
+        self.blocks.release(req.slot)
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        self.failed.append(req)
+
+    def requeue(self, req: Request) -> None:
+        """Re-queue a quarantined request for a retry: reset its
+        generation state (same rid — the per-slot PRNG key derives from
+        it, so a clean replay is token-identical) and re-enter the
+        waiting queue at the original arrival rank.  The request leaves
+        ``failed``; only requests still there when the dust settles are
+        permanent failures."""
+        assert req.state is RequestState.FAILED, \
+            "only a quarantined request can be requeued"
+        self.failed.remove(req)
+        req.state = RequestState.WAITING
+        req.error = None
+        req.out = []
+        req.t_tokens = []
+        req.t_finished = None
+        req.matched_tokens = 0
+        req.cow_pending = 0
+        req.swap_pages = 0
+        req.n_retries += 1
+        bisect.insort(self.waiting, req, key=_order)

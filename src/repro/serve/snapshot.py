@@ -1,0 +1,227 @@
+"""Engine snapshot / restore: a full, token-identical serving checkpoint.
+
+``capture(engine)`` copies everything the continuous-batching engine needs
+to reproduce its stream bit-for-bit from this boundary on:
+
+* the paged KV pool (MX codes still packed — the snapshot is as compressed
+  as the cache itself), pulled to host numpy;
+* the :class:`~repro.serve.paging.BlockManager` — block tables, free list,
+  per-slot ownership + shared flags, refcounts, pins, version;
+* the scheduler — waiting/running membership, free slots, arrival counter,
+  and the full per-request mutable state (out tokens, budgets, timestamps,
+  retry counters) of every request the engine tracks;
+* the host swap store's resident entries and traffic counters;
+* the prefix trie (node keys, canonical pages, LRU clocks) — pins are
+  *not* re-taken on restore, they ride the BlockManager refcount arrays;
+* the engine's own slot mirrors (current token, lengths, budgets), the
+  per-slot PRNG keys and the admission fold key, and the serving counters.
+
+``restore(engine, snap)`` writes that state back **into the same live
+objects** — request objects are mutated in place, so front-end streams
+holding references keep working — and re-uploads the pool.  Restoring is
+token-identical: a stream that continues from the restored state emits
+exactly the tokens the original would have (asserted in
+``tests/test_serve_snapshot.py``).  Two deliberate non-rollbacks:
+
+* ``engine._next_rid`` / ``scheduler._seq`` keep their *current* values
+  (monotone counters) so requests submitted after the snapshot can be
+  resubmitted post-restore without rid collisions;
+* requests the snapshot never saw are simply dropped from the queues —
+  the front end re-enters them via ``engine.resubmit``.
+
+The snapshot is an in-memory object (host numpy + plain python), sized by
+the page pool; it is the recovery substrate for the front end's watchdog
+(``AsyncServer(watchdog_s=...)``), not an on-disk format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dump_trie(node) -> Dict[str, Any]:
+    return {"key": node.key, "page": node.page, "last_use": node.last_use,
+            "children": [_dump_trie(c) for c in node.children.values()]}
+
+
+def _load_trie(parent, dump: Dict[str, Any], node_cls) -> int:
+    """Rebuild ``dump``'s children under ``parent``; returns nodes made.
+    Pages are NOT pinned here — the restored BlockManager pin array
+    already carries the trie's pins."""
+    n = 0
+    for cd in dump["children"]:
+        child = node_cls(tuple(cd["key"]), cd["page"], parent)
+        child.last_use = cd["last_use"]
+        parent.children[child.key] = child
+        n += 1 + _load_trie(child, cd, node_cls)
+    return n
+
+
+_REQ_FIELDS = ("state", "slot", "matched_tokens", "cow_pending", "seq",
+               "swap_pages", "n_preemptions", "error", "n_retries",
+               "arrival_t", "t_admitted", "t_finished",
+               "priority", "deadline_s", "max_new_tokens")
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """One ``capture()`` result.  Holds live request-object references
+    (restore mutates them in place) plus host copies of everything else;
+    ``nbytes`` is the pool payload size for accounting."""
+    pool: Any                               # host pytree (numpy leaves)
+    blocks: Dict[str, Any]
+    sched: Dict[str, Any]
+    requests: List[Tuple[Any, Dict[str, Any]]]   # (req, saved fields)
+    swap: Dict[str, Any]
+    prefix: Optional[Dict[str, Any]]
+    engine: Dict[str, Any]
+    nbytes: int
+
+
+def _tracked_requests(engine) -> List[Any]:
+    s = engine.scheduler
+    reqs = list(s.waiting) + list(s.running.values()) \
+        + list(s.finished) + list(s.failed)
+    seen, out = set(), []
+    for r in reqs:
+        if id(r) not in seen:
+            seen.add(id(r))
+            out.append(r)
+    return out
+
+
+def capture(engine) -> EngineSnapshot:
+    """Checkpoint ``engine`` (a ContinuousBatchingEngine) to host memory."""
+    blocks = engine.blocks
+    s = engine.scheduler
+    pool = jax.tree_util.tree_map(np.asarray, engine.pool)
+    nbytes = int(sum(v.nbytes for v in jax.tree_util.tree_leaves(pool)))
+    req_state = []
+    for r in _tracked_requests(engine):
+        fields = {k: getattr(r, k) for k in _REQ_FIELDS}
+        fields["out"] = list(r.out)
+        fields["t_tokens"] = list(r.t_tokens)
+        req_state.append((r, fields))
+    snap = EngineSnapshot(
+        pool=pool,
+        blocks={
+            "version": blocks.version,
+            "free": list(blocks._free),
+            "tables": blocks.tables.copy(),
+            "owned": [list(o) for o in blocks._owned],
+            "shared": [list(sh) for sh in blocks._shared],
+            "table_refs": blocks._table_refs.copy(),
+            "pins": blocks._pins.copy(),
+        },
+        sched={
+            "waiting": list(s.waiting),
+            "running": dict(s.running),
+            "n_finished": len(s.finished),
+            "n_failed": len(s.failed),
+            "free_slots": list(s._free_slots),
+            "seq": s._seq,
+            "n_preemptions": s.n_preemptions,
+            "n_restores": s.n_restores,
+        },
+        requests=req_state,
+        swap={
+            "entries": dict(engine.swap_store._entries),
+            "bytes_out": engine.swap_store.bytes_out,
+            "bytes_in": engine.swap_store.bytes_in,
+            "peak_resident_bytes": engine.swap_store.peak_resident_bytes,
+        },
+        prefix=None if engine.prefix is None else {
+            "trie": _dump_trie(engine.prefix._root),
+            "n_nodes": engine.prefix._n_nodes,
+            "tick": engine.prefix._tick,
+            "lookups": engine.prefix.lookups,
+            "hits": engine.prefix.hits,
+            "tokens_matched": engine.prefix.tokens_matched,
+        },
+        engine={
+            "cur_tok": engine._cur_tok.copy(),
+            "lengths": engine._lengths.copy(),
+            "remaining": engine._remaining.copy(),
+            "slot_keys": np.asarray(engine._slot_keys),
+            "key": np.asarray(engine._key),
+            "next_rid": engine._next_rid,
+            "counters": {k: getattr(engine, k) for k in (
+                "n_steps", "n_syncs", "n_generated",
+                "prefill_tokens_computed", "n_cow_forks",
+                "peak_mapped_pages", "peak_shared_pages",
+                "n_preemptions", "n_restores", "n_quarantined",
+                "_metrics_start")},
+            "phase": dict(engine.phase),
+        },
+        nbytes=nbytes,
+    )
+    return snap
+
+
+def restore(engine, snap: EngineSnapshot) -> None:
+    """Write ``snap`` back into ``engine``'s live objects and re-upload
+    the pool.  Counters that must stay monotone (``_next_rid``,
+    ``scheduler._seq``) keep the larger of current/snapshot values."""
+    blocks = engine.blocks
+    s = engine.scheduler
+    # ---- per-request mutable state (in place: streams hold these) -----
+    for r, fields in snap.requests:
+        for k in _REQ_FIELDS:
+            setattr(r, k, fields[k])
+        r.out = list(fields["out"])
+        r.t_tokens = list(fields["t_tokens"])
+    # ---- block manager ------------------------------------------------
+    blocks._free = list(snap.blocks["free"])
+    blocks.tables[...] = snap.blocks["tables"]
+    blocks._owned = [list(o) for o in snap.blocks["owned"]]
+    blocks._shared = [list(sh) for sh in snap.blocks["shared"]]
+    blocks._table_refs[...] = snap.blocks["table_refs"]
+    blocks._pins[...] = snap.blocks["pins"]
+    # bump (never rewind) the version so the engine re-uploads its device
+    # block table on the next step
+    blocks.version = max(blocks.version, snap.blocks["version"]) + 1
+    # ---- scheduler ----------------------------------------------------
+    s.waiting = list(snap.sched["waiting"])
+    s.running = dict(snap.sched["running"])
+    del s.finished[snap.sched["n_finished"]:]
+    del s.failed[snap.sched["n_failed"]:]
+    s._free_slots = list(snap.sched["free_slots"])
+    s._seq = max(s._seq, snap.sched["seq"])
+    s.n_preemptions = snap.sched["n_preemptions"]
+    s.n_restores = snap.sched["n_restores"]
+    # ---- swap store ---------------------------------------------------
+    engine.swap_store._entries = dict(snap.swap["entries"])
+    engine.swap_store.bytes_out = snap.swap["bytes_out"]
+    engine.swap_store.bytes_in = snap.swap["bytes_in"]
+    engine.swap_store.peak_resident_bytes = \
+        snap.swap["peak_resident_bytes"]
+    # ---- prefix trie --------------------------------------------------
+    if engine.prefix is not None and snap.prefix is not None:
+        p = engine.prefix
+        root_cls = type(p._root)
+        p._root = root_cls((), -1, None)
+        p._n_nodes = _load_trie(p._root, snap.prefix["trie"], root_cls)
+        assert p._n_nodes == snap.prefix["n_nodes"], \
+            "trie dump/rebuild node count mismatch"
+        p._tick = snap.prefix["tick"]
+        p.lookups = snap.prefix["lookups"]
+        p.hits = snap.prefix["hits"]
+        p.tokens_matched = snap.prefix["tokens_matched"]
+    # ---- engine mirrors + pool ---------------------------------------
+    engine._cur_tok[...] = snap.engine["cur_tok"]
+    engine._lengths[...] = snap.engine["lengths"]
+    engine._remaining[...] = snap.engine["remaining"]
+    engine._slot_keys = jnp.asarray(snap.engine["slot_keys"])
+    engine._key = jnp.asarray(snap.engine["key"])
+    engine._next_rid = max(engine._next_rid, snap.engine["next_rid"])
+    for k, v in snap.engine["counters"].items():
+        setattr(engine, k, v)
+    engine.phase = dict(snap.engine["phase"])
+    engine.pool = jax.tree_util.tree_map(jnp.asarray, snap.pool)
+    engine._bt_version = -1         # force the device-table re-upload
+    engine.quarantined_in_step = []
+    engine.stall_aborted = False

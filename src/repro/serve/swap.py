@@ -101,6 +101,7 @@ class HostSwapStore:
         self.bytes_out = 0          # device -> host (swap-out) traffic
         self.bytes_in = 0           # host -> device (restore) traffic
         self.peak_resident_bytes = 0
+        self.faults = None          # serve.faults.FaultPlan (swap_corrupt)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -115,6 +116,14 @@ class HostSwapStore:
     def put(self, rid: int, data: SwapData) -> None:
         if rid in self._entries:
             raise ValueError(f"swap store: request {rid} already resident")
+        if self.faults is not None and \
+                self.faults.should_fire("swap_corrupt",
+                                        rid=rid) is not None:
+            # overwrite the host payload with poison markers in place:
+            # the restore scatters them back and the next decode window's
+            # health guard quarantines exactly this request
+            from repro.serve.faults import corrupt_swap_payload
+            corrupt_swap_payload(data.pages)
         self._entries[rid] = data
         self.bytes_out += data.nbytes
         self.peak_resident_bytes = max(self.peak_resident_bytes,

@@ -137,8 +137,14 @@ def save_trace(path: str, arrivals: Sequence[Arrival]) -> None:
 def load_trace(path: str) -> List[Arrival]:
     """Load a JSONL trace written by :func:`save_trace` (or by hand:
     ``t``, ``prompt``, ``max_new_tokens`` required; ``priority``,
-    ``deadline_s``, ``cls`` optional)."""
+    ``deadline_s``, ``cls`` optional).
+
+    Timestamps are *validated*, not repaired: a negative ``t`` or one
+    earlier than the previous line raises ValueError naming the offending
+    line — silently re-sorting a corrupt trace would hide exactly the
+    kind of recording fault a replay is supposed to reproduce."""
     out: List[Arrival] = []
+    prev_t, prev_ln = None, 0
     with open(path) as f:
         for ln, line in enumerate(f, 1):
             line = line.strip()
@@ -146,17 +152,28 @@ def load_trace(path: str) -> List[Arrival]:
                 continue
             try:
                 rec = json.loads(line)
-                out.append(Arrival(
+                a = Arrival(
                     t=float(rec["t"]),
                     prompt=np.asarray(rec["prompt"], np.int32),
                     max_new_tokens=int(rec["max_new_tokens"]),
                     priority=int(rec.get("priority", 0)),
                     deadline_s=rec.get("deadline_s"),
-                    cls=rec.get("cls", "")))
+                    cls=rec.get("cls", ""))
             except (KeyError, ValueError, json.JSONDecodeError) as e:
                 raise ValueError(f"{path}:{ln}: bad trace record: {e}") \
                     from None
-    return sorted(out, key=lambda a: a.t)
+            if not np.isfinite(a.t) or a.t < 0:
+                raise ValueError(
+                    f"{path}:{ln}: arrival time must be finite and >= 0, "
+                    f"got {a.t}")
+            if prev_t is not None and a.t < prev_t:
+                raise ValueError(
+                    f"{path}:{ln}: non-monotonic arrival time {a.t} "
+                    f"(line {prev_ln} had {prev_t}); traces must be "
+                    f"time-sorted")
+            prev_t, prev_ln = a.t, ln
+            out.append(a)
+    return out
 
 
 # =============================================================================
@@ -196,5 +213,8 @@ async def replay(server: AsyncServer, arrivals: Sequence[Arrival], *,
         streams[i] = stream
         consumers.append(asyncio.ensure_future(stream.tokens()))
     if consumers:
-        await asyncio.gather(*consumers)
+        # tolerate terminally failed streams (QuarantinedError /
+        # RetriesExhausted under a fault plan): the failures stay
+        # recorded on the engine's scheduler, the healthy streams drain
+        await asyncio.gather(*consumers, return_exceptions=True)
     return streams, rejected

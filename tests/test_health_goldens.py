@@ -1,0 +1,114 @@
+"""End-to-end non-finite goldens: poisoned prompts across the format zoo.
+
+The tentpole guarantee of the numeric-health guards, checked from the
+outside in: a prompt whose activations go non-finite (one embedding row
+poked to Inf/NaN — the cheapest way to make a *real* forward pass
+produce the garbage a hardware fault would) must be quarantined at
+admission with a diagnostic, while a healthy request sharing the batch
+streams tokens identical to a run without the poisoned neighbor.
+
+Coverage: all six MX element formats x both conversion modes (paper
+mode sees SCALE_INF markers from Inf blocks, ocp mode folds Inf into
+SCALE_NAN — both sides of ``core.formats.poison_threshold``), the fp
+(unquantized) cache where detection rides the finite-logits guard
+instead of scale bytes, and the ``health_checks=False`` counterfactual
+proving the guard is what stands between a poisoned page and a garbage
+stream.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.formats import ALL_FORMATS
+from repro.models import Model, load_reduced
+from repro.models.config import QuantPolicy, QuantSpec
+from repro.serve import ContinuousBatchingEngine, GenerationConfig
+
+PAGE = 8
+NEW = 6
+BAD_TOK = 5          # the embedding row poked non-finite
+
+
+def _setup(cfg, bad_val):
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params["embed"] = params["embed"].at[BAD_TOK].set(bad_val)
+    rng = np.random.default_rng(0)
+    healthy = rng.integers(BAD_TOK + 1, cfg.vocab, size=9).astype(np.int32)
+    poisoned = healthy.copy()
+    poisoned[4] = BAD_TOK
+    return model, params, healthy, poisoned
+
+
+def _engine(model, params, **kw):
+    return ContinuousBatchingEngine(model, params, max_slots=4,
+                                    page_size=PAGE, max_len=32,
+                                    sync_every=4,
+                                    gen=GenerationConfig(max_new_tokens=NEW),
+                                    **kw)
+
+
+def _assert_quarantined(cfg, bad_val):
+    model, params, healthy, poisoned = _setup(cfg, bad_val)
+    # reference: the healthy prompt alone (same rid 0 -> same PRNG key)
+    ref = _engine(model, params)
+    rh0 = ref.add_request(healthy, NEW)
+    want = ref.run()
+
+    eng = _engine(model, params)
+    rh = eng.add_request(healthy, NEW)
+    rp = eng.add_request(poisoned, NEW)
+    out = eng.run()
+    assert rh == rh0
+    failed = {r.rid: r.error for r in eng.scheduler.failed}
+    assert set(failed) == {rp}, failed
+    assert "health guard" in failed[rp]
+    assert eng.n_quarantined == 1 and rp not in out
+    # the healthy neighbor is untouched by the quarantine next door
+    np.testing.assert_array_equal(out[rh], want[rh0])
+    assert len(out[rh]) == NEW
+
+
+@pytest.mark.parametrize("mode", ["paper", "ocp"])
+@pytest.mark.parametrize("fmt", [f.name for f in ALL_FORMATS])
+def test_nonfinite_prompt_quarantined_all_formats(fmt, mode):
+    """Inf in paper mode exercises the SCALE_INF marker (>= threshold);
+    NaN in ocp mode exercises the folded SCALE_NAN marker — together the
+    parametrization covers both poison encodings in both modes."""
+    kv = QuantSpec(fmt, mode)
+    cfg = load_reduced("chatglm3_6b",
+                       mx=QuantPolicy(kv_key=kv, kv_value=kv))
+    _assert_quarantined(cfg, np.inf if mode == "paper" else np.nan)
+
+
+def test_nonfinite_prompt_quarantined_fp_cache():
+    """No scale bytes in a dense cache: detection rides the in-scan
+    finite-logits guard instead."""
+    _assert_quarantined(load_reduced("chatglm3_6b"), np.nan)
+
+
+def test_nonfinite_prompt_quarantined_mixed_roles():
+    _assert_quarantined(
+        load_reduced("chatglm3_6b", mx=QuantPolicy.parse(
+            "kv_key=int8@32:paper,kv_value=e2m1@32:ocp")), np.nan)
+
+
+def test_health_off_streams_garbage():
+    """The counterfactual: with ``health_checks=False`` the poisoned
+    request is *not* quarantined — it streams its full budget of garbage
+    tokens.  (Healthy rows are still correct: batch rows are
+    independent, and with no quarantine no poisoned page is recycled.)"""
+    cfg = load_reduced("chatglm3_6b", mx=QuantPolicy.parse(
+        "kv_key=int8@32:paper,kv_value=e4m3@32:paper"))
+    model, params, healthy, poisoned = _setup(cfg, np.nan)
+    ref = _engine(model, params, health_checks=False)
+    rh0 = ref.add_request(healthy, NEW)
+    want = ref.run()
+
+    eng = _engine(model, params, health_checks=False)
+    rh = eng.add_request(healthy, NEW)
+    rp = eng.add_request(poisoned, NEW)
+    out = eng.run()
+    assert not eng.scheduler.failed and eng.n_quarantined == 0
+    assert len(out[rp]) == NEW           # garbage, but streamed
+    np.testing.assert_array_equal(out[rh], want[rh0])
