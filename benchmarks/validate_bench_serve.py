@@ -1,8 +1,19 @@
-"""Validate BENCH_serve.json against the bench_serve/v5 schema (dep-free).
+"""Validate BENCH_serve.json against the bench_serve/v6 schema (dep-free).
 
     python benchmarks/validate_bench_serve.py [BENCH_serve.json]
 
-Schema v5 adds the top-level ``"faults"`` section: a seeded fault plan
+Schema v6 adds the top-level ``"observability"`` section: the traced
+acceptance scenario (bursty arrivals + preempt + seeded fault + retry)
+plus the telemetry cost claims.  The validator re-derives the request
+partition (``finished + failed == submitted``), requires the retry
+path to have actually fired, requires **token identity** between the
+traced and untraced serves, recomputes the traced decode-phase
+overhead fraction from the committed on/off decode times, and asserts
+it within the **5%** budget.  The trace artifact itself
+(``BENCH_trace.jsonl``) is validated separately by
+``benchmarks/validate_trace.py``.
+
+Schema v5 added the top-level ``"faults"`` section: a seeded fault plan
 served through the asyncio front end with a retry budget.  The validator
 re-derives the request-outcome partition — ``served + retried +
 quarantined == submitted`` — checks that the section actually exercised
@@ -47,10 +58,11 @@ documented in README §Prefix caching & copy-on-write.
 from __future__ import annotations
 
 import json
+import math
 import sys
 from pathlib import Path
 
-SCHEMA = "bench_serve/v5"
+SCHEMA = "bench_serve/v6"
 TOP_FIELDS = {
     "schema": str,
     "arch": str,
@@ -61,6 +73,7 @@ TOP_FIELDS = {
     "configs": list,
     "traffic": dict,
     "faults": dict,
+    "observability": dict,
 }
 CONFIG_FIELDS = {
     "cache": str,
@@ -170,6 +183,31 @@ HEALTH_OVERHEAD_FIELDS = {
 KNOWN_FAULT_SITES = {"page_corrupt", "swap_corrupt", "prefill_nan",
                      "kernel_fail", "alloc_fail", "stall"}
 HEALTH_OVERHEAD_BUDGET = 0.05
+OBS_FIELDS = {
+    "arrival": str,
+    "plan": str,
+    "seed": int,
+    "retry_budget": int,
+    "submitted": int,
+    "finished": int,
+    "failed": int,
+    "retried": int,
+    "n_preemptions": int,
+    "trace_file": str,
+    "trace_events": int,
+    "trace_tracks": int,
+    "token_identical": bool,
+    "trace_overhead": dict,
+}
+TRACE_OVERHEAD_FIELDS = {
+    "max_slots": int,
+    "sync_every": int,
+    "new_tokens": int,
+    "decode_s_on": float,
+    "decode_s_off": float,
+    "overhead_frac": float,
+}
+TRACE_OVERHEAD_BUDGET = 0.05
 
 
 def _pages(tokens: int, page_size: int) -> int:
@@ -178,10 +216,17 @@ def _pages(tokens: int, page_size: int) -> int:
 
 def _percentile(samples, q):
     """Nearest-rank percentile — in lockstep with
-    ``repro.serve.frontend.percentile`` and ``bench_serve._percentile``:
-    the committed rows must reproduce bit-for-bit from the records."""
+    ``repro.obs.metrics.percentile`` (which the front end and the bench
+    both use): the committed rows must reproduce bit-for-bit from the
+    records.  Re-implemented here with the same boundary semantics —
+    empty raises ValueError (never IndexError via ``s[-1]``), a single
+    sample is every percentile of itself — because this validator must
+    stay importable without the repro package."""
+    if not samples:
+        raise ValueError("percentile of an empty sample set")
     s = sorted(samples)
-    return s[int(-(-(q / 100.0) * len(s) // 1)) - 1]
+    rank = max(1, math.ceil((q / 100.0) * len(s)))
+    return s[rank - 1]
 
 
 def _check_prefix_row(i, c, doc, errs) -> None:
@@ -550,6 +595,58 @@ def _check_faults(f, errs) -> None:
                     f"{HEALTH_OVERHEAD_BUDGET:.0%} decode-phase budget")
 
 
+def _check_obs(o, errs) -> None:
+    """The v6 observability section: re-derive the request partition,
+    require the telemetry-cost claims, and sanity-check the trace
+    artifact pointers (validate_trace.py checks the artifact itself)."""
+    if not _fields_ok(o, OBS_FIELDS, "observability", errs):
+        return
+    if o["finished"] + o["failed"] != o["submitted"]:
+        errs.append(f"observability: finished + failed = "
+                    f"{o['finished'] + o['failed']} != submitted "
+                    f"{o['submitted']}")
+    if o["submitted"] < 3:
+        errs.append("observability.submitted: need >= 3 requests for a "
+                    "meaningful trace")
+    if o["retried"] < 1:
+        errs.append("observability: the seeded fault plan never drove a "
+                    "retry — the quarantine/retry spans are unwitnessed")
+    if o["retry_budget"] < 1 or o["seed"] < 0 or o["n_preemptions"] < 0:
+        errs.append("observability: negative/zero budget, seed, or "
+                    "preemption count")
+    if not o["trace_file"].endswith(".jsonl"):
+        errs.append(f"observability.trace_file: {o['trace_file']!r} is "
+                    f"not a JSONL artifact")
+    if o["trace_events"] <= 0:
+        errs.append("observability.trace_events: empty trace")
+    # every submitted request owns exactly one trace track (retries and
+    # preemptions reuse the rid, so the counts match exactly)
+    if o["trace_tracks"] != o["submitted"]:
+        errs.append(f"observability: trace_tracks {o['trace_tracks']} "
+                    f"!= submitted {o['submitted']}")
+    if o["token_identical"] is not True:
+        errs.append("observability claim: tracing+metrics perturbed the "
+                    "token streams (token_identical is false)")
+    t = o["trace_overhead"]
+    if not _fields_ok(t, TRACE_OVERHEAD_FIELDS,
+                      "observability.trace_overhead", errs):
+        return
+    if t["decode_s_on"] <= 0 or t["decode_s_off"] <= 0:
+        errs.append("observability.trace_overhead: non-positive decode "
+                    "times")
+        return
+    want_frac = t["decode_s_on"] / t["decode_s_off"] - 1.0
+    if abs(t["overhead_frac"] - want_frac) > 1e-9 * max(1.0,
+                                                        abs(want_frac)):
+        errs.append(f"observability.trace_overhead.overhead_frac: "
+                    f"{t['overhead_frac']} does not re-derive from the "
+                    f"decode times (want {want_frac})")
+    if t["overhead_frac"] > TRACE_OVERHEAD_BUDGET:
+        errs.append(f"observability claim: traced decode-phase overhead "
+                    f"{t['overhead_frac']:.4f} exceeds the "
+                    f"{TRACE_OVERHEAD_BUDGET:.0%} budget")
+
+
 def check(doc) -> list:
     errs = []
     for field, ty in TOP_FIELDS.items():
@@ -653,6 +750,7 @@ def check(doc) -> list:
             [c for c in doc["configs"] if c["mix"] == "prefix"], errs)
         _check_traffic(doc["traffic"], errs)
         _check_faults(doc["faults"], errs)
+        _check_obs(doc["observability"], errs)
     return errs
 
 
@@ -673,10 +771,13 @@ def main() -> None:
     caches = sorted({c["cache"] for c in doc["configs"]})
     npfx = sum(c["mix"] == "prefix" for c in doc["configs"])
     trows = doc["traffic"]["rows"]
+    obs = doc["observability"]
     print(f"{path}: valid {SCHEMA} ({len(doc['configs'])} configs, "
           f"caches={caches}, sync_every={doc['sync_every']}, "
           f"prefix_rows={npfx}, traffic_rows={len(trows)}, "
-          f"preemptions={sum(r['n_preemptions'] for r in trows)})")
+          f"preemptions={sum(r['n_preemptions'] for r in trows)}, "
+          f"trace_events={obs['trace_events']}, trace_overhead="
+          f"{obs['trace_overhead']['overhead_frac']:.2%})")
 
 
 if __name__ == "__main__":

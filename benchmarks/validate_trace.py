@@ -1,0 +1,187 @@
+"""Validate a ``trace/v1`` JSONL artifact (dependency-free).
+
+    python benchmarks/validate_trace.py [BENCH_trace.jsonl]
+
+Re-derives everything from the serialized lines alone — no ``repro``
+import, so schema drift in the emitter cannot hide behind shared code:
+
+* line 0 is the header ``{"schema": "trace/v1", "meta": {...}}`` with
+  no extra fields;
+* every event carries exactly the ``trace/v1`` fields
+  (``seq``/``ph``/``name``/``cat``/``rid``/``t_us`` plus optional
+  ``args``) — **unknown fields are rejected**; ``seq`` is dense from 0
+  in file order, ``ph`` is B/E/I, ``rid`` is an int or null (null = the
+  engine track), ``t_us`` a non-negative int, ``args`` an object;
+* per-track nesting is re-derived with a stack: every E closes the
+  innermost open B of its track by name, the per-track clock is
+  monotone, and no track is left open at EOF;
+* every request track (``rid != null``) completes **exactly one**
+  root-level ``request`` span carrying a terminal ``status``
+  (finished / failed / aborted), and on every track the summed
+  durations of a root span's direct children never exceed the root's
+  wall — strict nesting makes siblings disjoint, so span-sum <= wall
+  is an arithmetic consequence the committed ``t_us`` values must
+  actually satisfy.
+
+Exits nonzero with a per-line report on violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "trace/v1"
+REQUIRED = {"seq": int, "name": str, "cat": str, "t_us": int}
+OPTIONAL = {"args"}
+PHASES = {"B", "E", "I"}
+TERMINAL = {"finished", "failed", "aborted"}
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def _check_event_shape(i, ev, errs) -> bool:
+    w = f"events[{i}]"
+    if not isinstance(ev, dict):
+        errs.append(f"{w}: not a JSON object")
+        return False
+    unknown = set(ev) - set(REQUIRED) - {"ph", "rid"} - OPTIONAL
+    if unknown:
+        errs.append(f"{w}: unknown field(s) {sorted(unknown)} (schema "
+                    f"drift — extend the validator in the same PR)")
+        return False
+    ok = True
+    for field, ty in REQUIRED.items():
+        if field not in ev:
+            errs.append(f"{w}: missing field {field!r}")
+            ok = False
+        elif ty is int and not _is_int(ev[field]):
+            errs.append(f"{w}.{field}: expected int, "
+                        f"got {type(ev[field]).__name__}")
+            ok = False
+        elif ty is str and not isinstance(ev[field], str):
+            errs.append(f"{w}.{field}: expected str, "
+                        f"got {type(ev[field]).__name__}")
+            ok = False
+    if ev.get("ph") not in PHASES:
+        errs.append(f"{w}.ph: expected one of {sorted(PHASES)}, "
+                    f"got {ev.get('ph')!r}")
+        ok = False
+    if "rid" not in ev or not (ev["rid"] is None or _is_int(ev["rid"])):
+        errs.append(f"{w}.rid: expected int or null")
+        ok = False
+    if "args" in ev and not isinstance(ev["args"], dict):
+        errs.append(f"{w}.args: expected object")
+        ok = False
+    if not ok:
+        return False
+    if ev["seq"] != i:
+        errs.append(f"{w}.seq: {ev['seq']} != file position {i} "
+                    f"(seq must be dense from 0)")
+    if ev["t_us"] < 0:
+        errs.append(f"{w}.t_us: negative timestamp")
+    return True
+
+
+def check(header, events) -> list:
+    errs = []
+    if not isinstance(header, dict) or set(header) != {"schema", "meta"}:
+        errs.append("header: expected exactly "
+                    "{'schema': 'trace/v1', 'meta': {...}}")
+        return errs
+    if header["schema"] != SCHEMA:
+        errs.append(f"header.schema: expected {SCHEMA!r}, "
+                    f"got {header['schema']!r}")
+    if not isinstance(header["meta"], dict):
+        errs.append("header.meta: expected object")
+    if errs:
+        return errs
+
+    stacks = {}                    # track -> [begin event, ...]
+    last_t = {}                    # track -> latest t_us seen
+    child_sum = {}                 # track -> summed depth-1 child walls
+    roots = {}                     # track -> [(name, wall, args), ...]
+    for i, ev in enumerate(events):
+        if not _check_event_shape(i, ev, errs):
+            return errs            # later checks need sound fields
+        rid, t = ev["rid"], ev["t_us"]
+        if t < last_t.get(rid, t):
+            errs.append(f"events[{i}]: track {rid} clock moved "
+                        f"backwards ({t} < {last_t[rid]})")
+            return errs
+        last_t[rid] = t
+        if ev["ph"] == "B":
+            stacks.setdefault(rid, []).append(ev)
+        elif ev["ph"] == "E":
+            stack = stacks.get(rid)
+            if not stack or stack[-1]["name"] != ev["name"]:
+                top = stack[-1]["name"] if stack else "nothing"
+                errs.append(f"events[{i}]: E {ev['name']!r} does not "
+                            f"close the innermost B of track {rid} "
+                            f"({top} is open)")
+                return errs
+            b = stack.pop()
+            wall = t - b["t_us"]
+            if len(stack) == 1:    # direct child of the open root
+                child_sum[rid] = child_sum.get(rid, 0) + wall
+            elif not stack:        # a root-level span completed
+                kids = child_sum.pop(rid, 0)
+                if kids > wall:
+                    errs.append(
+                        f"events[{i}]: track {rid} root "
+                        f"{ev['name']!r}: child span sum {kids}us "
+                        f"exceeds the root wall {wall}us")
+                roots.setdefault(rid, []).append(
+                    (ev["name"], wall, ev.get("args") or {}))
+
+    still_open = {rid: [b["name"] for b in st]
+                  for rid, st in stacks.items() if st}
+    if still_open:
+        errs.append(f"tracks left open at EOF: {still_open}")
+
+    req_tracks = sorted(r for r in roots if r is not None)
+    if not req_tracks:
+        errs.append("no request tracks (rid != null) in the trace")
+    for rid in req_tracks:
+        spans = roots[rid]
+        if [name for name, _, _ in spans] != ["request"]:
+            errs.append(f"track {rid}: expected exactly one root "
+                        f"'request' span, got "
+                        f"{[name for name, _, _ in spans]}")
+            continue
+        st = spans[0][2].get("status")
+        if st not in TERMINAL:
+            errs.append(f"track {rid}: root request span status "
+                        f"{st!r} not in {sorted(TERMINAL)}")
+    return errs
+
+
+def main() -> None:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parent.parent / "BENCH_trace.jsonl"
+    try:
+        lines = path.read_text().splitlines()
+        parsed = [json.loads(ln) for ln in lines if ln.strip()]
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}", file=sys.stderr)
+        sys.exit(1)
+    if not parsed:
+        print(f"{path}: empty trace", file=sys.stderr)
+        sys.exit(1)
+    errs = check(parsed[0], parsed[1:])
+    if errs:
+        print(f"{path}: {len(errs)} trace violation(s):", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    events = parsed[1:]
+    tracks = {ev["rid"] for ev in events}
+    print(f"{path}: valid {SCHEMA} ({len(events)} events, "
+          f"{len(tracks - {None})} request tracks, "
+          f"{sum(1 for e in events if e['ph'] == 'I')} instants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,13 +15,30 @@ _state = threading.local()
 
 
 @contextlib.contextmanager
-def collect():
+def collect(metrics=None):
+    """Collect kernel cost corrections for the ``with`` body; yields the
+    accumulator dict.  ``metrics`` (a
+    :class:`repro.obs.metrics.MetricsRegistry`) additionally folds the
+    collected totals into the shared ``kernels.*`` counters on exit, so
+    dry-run cost accounting exports through the same registry snapshot
+    as the serving stack."""
     prev = getattr(_state, "acc", None)
-    _state.acc = {"flops": 0.0, "io_bytes": 0.0, "calls": 0}
+    acc = {"flops": 0.0, "io_bytes": 0.0, "calls": 0}
+    _state.acc = acc
     try:
-        yield _state.acc
+        yield acc
     finally:
         _state.acc = prev
+        if metrics is not None:
+            metrics.counter(
+                "kernels.flops",
+                "analytic kernel FLOPs recorded at trace time"
+            ).inc(acc["flops"])
+            metrics.counter(
+                "kernels.io_bytes",
+                "analytic kernel HBM I/O bytes").inc(acc["io_bytes"])
+            metrics.counter(
+                "kernels.calls", "kernel cost records").inc(acc["calls"])
 
 
 @contextlib.contextmanager

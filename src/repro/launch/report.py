@@ -73,12 +73,37 @@ def dryrun_table(arts: List[Dict], variant: str = "baseline") -> str:
     return "\n".join(rows)
 
 
+def feed_registry(arts: List[Dict], metrics) -> None:
+    """Fold dry-run artifact stats into a
+    :class:`repro.obs.metrics.MetricsRegistry` — launch reports and the
+    serving stack share one snapshot format, so a single
+    ``registry.snapshot()`` JSON can carry both."""
+    metrics.gauge("report.artifacts",
+                  "dry-run artifacts loaded").set(len(arts))
+    by_status = metrics.counter("report.status", "artifacts by status")
+    compile_h = metrics.histogram("report.compile_s",
+                                  "full-compile wall seconds")
+    for a in arts:
+        by_status.inc(status=str(a.get("status")))
+        full = a.get("full") or (a.get("accounting") or {}).get("large")
+        if full and isinstance(full.get("compile_s"), (int, float)):
+            compile_h.observe(float(full["compile_s"]))
+
+
 def main() -> None:
+    from repro.obs.metrics import MetricsRegistry
+
     arts = load_artifacts()
     print("## Roofline (single-pod 16x16, baseline)\n")
     print(roofline_table(arts))
     print("\n## Dry-run status\n")
     print(dryrun_table(arts))
+    reg = MetricsRegistry()
+    feed_registry(arts, reg)
+    snap = reg.snapshot()
+    print(f"\nartifacts: {snap['gauges']['report.artifacts']} "
+          f"({snap['counters']['report.status']}), compile_s "
+          f"{snap['histograms']['report.compile_s']}")
 
 
 if __name__ == "__main__":

@@ -46,13 +46,48 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.obs.metrics import rate as safe_rate  # noqa: F401 (re-export)
 
-def safe_rate(count: float, seconds: float) -> float:
-    """Throughput that tolerates degenerate windows: a zero-decode or
-    zero-duration run (all-prefill workloads, --new-tokens 1, warmup
-    excision leaving an empty window) reports 0.0 instead of crashing
-    the report with a ZeroDivisionError."""
-    return count / seconds if seconds > 0 else 0.0
+# ``safe_rate`` is now an alias of ``repro.obs.metrics.rate`` — the one
+# zero-duration-safe throughput guard the launcher, the async reporter,
+# and bench_serve all share (three hand-rolled copies used to drift).
+
+
+def make_tracer(args, cfg):
+    """Build the launcher's Tracer when ``--trace-out``/``--chrome-trace``
+    asked for one (None otherwise); the run's identifying knobs ride the
+    trace header's ``meta``."""
+    if not (args.trace_out or args.chrome_trace):
+        return None
+    from repro.obs import Tracer
+    return Tracer(meta={"arch": args.arch, "quant": str(cfg.mx),
+                        "arrival": args.arrival,
+                        "preempt": bool(args.preempt),
+                        "faults": args.faults or "",
+                        "retry": args.retry,
+                        "sync_every": args.sync_every})
+
+
+def write_obs(args, eng, srv=None) -> None:
+    """Export the run's observability artifacts: close every open trace
+    track (``finalize_trace``), then write the trace/v1 JSONL, the
+    Chrome trace, and the unified metrics snapshot as requested."""
+    import json
+    if eng.tracer is not None:
+        eng.finalize_trace()
+        if args.trace_out:
+            eng.tracer.write_jsonl(args.trace_out)
+            print(f"[serve] wrote trace/v1 JSONL -> {args.trace_out} "
+                  f"({len(eng.tracer.events)} events)")
+        if args.chrome_trace:
+            eng.tracer.write_chrome(args.chrome_trace)
+            print(f"[serve] wrote Chrome trace -> {args.chrome_trace}")
+    if args.metrics_json:
+        snap = srv.obs_snapshot() if srv is not None \
+            else {"engine": eng.metrics.snapshot()}
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[serve] wrote metrics snapshot -> {args.metrics_json}")
 
 
 def parse_arrival(spec: str):
@@ -211,6 +246,27 @@ def main() -> None:
                          "Must comfortably exceed first-trace compile "
                          "time or slow-but-healthy steps trip spurious "
                          "recoveries")
+    ap.add_argument("--trace-out", default=None,
+                    help="paged mode: write per-request trace spans "
+                         "(queued / prefill / decode windows / preempt / "
+                         "restore / quarantine / retry) as trace/v1 "
+                         "JSONL to this path — zero extra host syncs; "
+                         "token-identical on/off")
+    ap.add_argument("--chrome-trace", default=None,
+                    help="paged mode: additionally export the trace as "
+                         "a Chrome trace_event JSON (load in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="paged mode: write the unified metrics-registry "
+                         "snapshot (engine + scheduler + paging + prefix "
+                         "+ swap + mx.* gauges, plus server counters and "
+                         "the latency summary in async mode) as JSON")
+    ap.add_argument("--obs-interval", type=int, default=0,
+                    help="paged mode: sample the MX-health gauges "
+                         "(shared-scale saturation/clip + underflow "
+                         "rates, poison markers, per KV role) every N "
+                         "sync windows (0 = never; each sample is one "
+                         "scalar device reduction)")
     args = ap.parse_args()
 
     import contextlib
@@ -322,6 +378,11 @@ def main() -> None:
                                     or args.snapshot_every):
         ap.error("--retry/--watchdog/--snapshot-every need a non-batch "
                  "--arrival (they are front-end recovery policies)")
+    if not args.paged and (args.trace_out or args.chrome_trace
+                           or args.metrics_json or args.obs_interval):
+        ap.error("--trace-out/--chrome-trace/--metrics-json/"
+                 "--obs-interval need --paged (the observability layer "
+                 "instruments the continuous-batching engine)")
 
     faults = None
     if args.faults:
@@ -350,7 +411,9 @@ def main() -> None:
             gen=gen, sync_every=args.sync_every,
             prefill_bucket=args.prefill_bucket or None,
             prefix_cache=args.prefix_cache, preempt=args.preempt,
-            health_checks=not args.no_health_checks, faults=faults)
+            health_checks=not args.no_health_checks, faults=faults,
+            tracer=make_tracer(args, cfg),
+            obs_interval=args.obs_interval)
         shared = rng.integers(0, cfg.vocab, size=args.shared_prefix
                               ).astype(np.int32)
         prompts = []
@@ -408,6 +471,7 @@ def main() -> None:
         if out:
             first = out[min(out)]
             print("[serve] sample output tokens:", first[:12].tolist())
+        write_obs(args, eng)
         return
 
     batch = make_concrete_batch(cfg, args.batch, args.prompt_len)
@@ -484,7 +548,9 @@ def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
         sync_every=args.sync_every,
         prefill_bucket=args.prefill_bucket or None,
         prefix_cache=args.prefix_cache, preempt=args.preempt,
-        health_checks=not args.no_health_checks, faults=faults)
+        health_checks=not args.no_health_checks, faults=faults,
+        tracer=make_tracer(args, cfg),
+        obs_interval=args.obs_interval)
     speedup = args.speedup if args.speedup > 0 else float("inf")
     srv_kw = dict(admission=args.admission, retries=args.retry,
                   retry_backoff_s=args.retry_backoff)
@@ -550,6 +616,7 @@ def _serve_async(args, cfg, model, params, rules, mesh_ctx, gen,
             print(f"[serve]   rid {r.rid} quarantined: {r.error}")
         for op, why in backend.degraded_ops().items():
             print(f"[serve]   kernel {op!r} degraded to dense: {why}")
+    write_obs(args, eng, srv)
 
 
 if __name__ == "__main__":

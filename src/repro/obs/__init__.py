@@ -1,0 +1,7 @@
+from repro.obs.metrics import (Counter, Gauge,  # noqa: F401
+                               Histogram, MetricsRegistry, percentile,
+                               rate)
+from repro.obs.mxhealth import (sample_mx_health,  # noqa: F401
+                                scale_stat_names)
+from repro.obs.trace import (TRACE_SCHEMA, Tracer,  # noqa: F401
+                             chrome_events, validate_nesting)

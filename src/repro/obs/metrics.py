@@ -1,0 +1,269 @@
+"""Typed metrics registry for the serving stack (dependency-free).
+
+One :class:`MetricsRegistry` owns every counter, gauge, and histogram a
+serving process maintains; the engine, scheduler, block manager, prefix
+cache, swap store, and async front end all register their series here
+instead of keeping ad-hoc ``self.n_*`` attributes.  The payoff is that
+``registry.reset()`` restarts *every* measurement window at once — a new
+counter can never again be silently missed by ``reset_metrics`` — and
+``registry.snapshot()`` is the single structured view the launcher's
+``--metrics-json`` and ``AsyncServer.obs_snapshot()`` export.
+
+Three metric types, each holding labeled series (a series is keyed by
+its sorted ``(label, value)`` pairs; the empty label set is a plain
+scalar):
+
+* :class:`Counter` — monotone accumulation (``inc``).  Values may be
+  float (phase wall-clock seconds accumulate here too).  ``set`` exists
+  solely for snapshot *restore* — rolling an engine back to a checkpoint
+  legitimately rewinds its counters.
+* :class:`Gauge` — last-write-wins level (``set``), with ``set_max`` for
+  peak tracking.
+* :class:`Histogram` — raw sample retention with nearest-rank
+  percentile snapshots (:func:`percentile`) and a monotonic-clock
+  ``time()`` context manager.
+
+The helpers :func:`percentile` and :func:`rate` are the *single*
+implementations of nearest-rank selection and zero-duration-safe
+throughput used by the front end, the launcher, and ``bench_serve`` —
+deduplicating the three hand-rolled guards that used to disagree at the
+boundaries (an empty window raised IndexError in two of them).
+"""
+from __future__ import annotations
+
+import math
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def rate(count: float, seconds: float) -> float:
+    """Throughput that tolerates degenerate windows: a zero-decode or
+    zero-duration run (all-prefill workloads, ``--new-tokens 1``, warmup
+    excision leaving an empty window) reports 0.0 instead of raising
+    ZeroDivisionError in the reporter."""
+    return count / seconds if seconds > 0 else 0.0
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (no interpolation): the ceil(q/100 * n)-th
+    smallest sample.  Exactly reproducible from the raw records by the
+    dependency-free bench validator — that is the point.
+
+    Boundary semantics (unit-tested in ``tests/test_obs.py``): any
+    percentile of a single sample is that sample (rank is clamped to
+    >= 1), and an empty sample set raises ValueError with a clear
+    message rather than IndexError."""
+    if not samples:
+        raise ValueError("percentile of an empty sample set")
+    if not 0 < q <= 100:
+        raise ValueError(f"q must be in (0, 100], got {q}")
+    s = sorted(samples)
+    rank = max(1, math.ceil((q / 100.0) * len(s)))
+    return s[rank - 1]
+
+
+def _label_key(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _key_str(key: LabelKey) -> str:
+    return ",".join(f"{k}={v}" for k, v in key)
+
+
+class _Metric:
+    """Common labeled-series plumbing; subclasses define the payload."""
+
+    kind = "metric"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._series: Dict[LabelKey, object] = {}
+
+    def labels(self) -> List[LabelKey]:
+        return sorted(self._series)
+
+    def reset(self) -> None:
+        self._series.clear()
+
+    def __repr__(self) -> str:
+        return (f"<{type(self).__name__} {self.name!r} "
+                f"{len(self._series)} series>")
+
+
+class Counter(_Metric):
+    """Monotone accumulator.  ``set`` is reserved for snapshot restore."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1, **labels) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"counter {self.name}: negative increment {amount}")
+        key = _label_key(labels)
+        self._series[key] = self._series.get(key, 0) + amount
+
+    def set(self, value: float, **labels) -> None:
+        """Overwrite the series value — snapshot/restore only (a rewind
+        to a checkpoint legitimately moves a counter backwards)."""
+        self._series[_label_key(labels)] = value
+
+    def value(self, **labels) -> float:
+        return self._series.get(_label_key(labels), 0)
+
+    def snapshot(self):
+        if not self._series:
+            return 0
+        if list(self._series) == [()]:
+            return self._series[()]
+        return {_key_str(k): v for k, v in sorted(self._series.items())}
+
+    def merge(self, other: "Counter") -> None:
+        for k, v in other._series.items():
+            self._series[k] = self._series.get(k, 0) + v
+
+
+class Gauge(_Metric):
+    """Last-write-wins level; ``set_max`` tracks peaks."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        self._series[_label_key(labels)] = value
+
+    def set_max(self, value: float, **labels) -> None:
+        key = _label_key(labels)
+        self._series[key] = max(self._series.get(key, value), value)
+
+    def value(self, default: float = 0, **labels) -> float:
+        return self._series.get(_label_key(labels), default)
+
+    def snapshot(self):
+        if not self._series:
+            return 0
+        if list(self._series) == [()]:
+            return self._series[()]
+        return {_key_str(k): v for k, v in sorted(self._series.items())}
+
+    def merge(self, other: "Gauge") -> None:
+        self._series.update(other._series)
+
+
+class Histogram(_Metric):
+    """Raw-sample histogram with nearest-rank percentile snapshots."""
+
+    kind = "histogram"
+
+    def observe(self, value: float, **labels) -> None:
+        self._series.setdefault(_label_key(labels), []).append(
+            float(value))
+
+    def values(self, **labels) -> List[float]:
+        return list(self._series.get(_label_key(labels), []))
+
+    def count(self, **labels) -> int:
+        return len(self._series.get(_label_key(labels), []))
+
+    def sum(self, **labels) -> float:
+        return float(sum(self._series.get(_label_key(labels), [])))
+
+    def percentile(self, q: float, **labels) -> float:
+        return percentile(self._series.get(_label_key(labels), []), q)
+
+    @contextmanager
+    def time(self, **labels) -> Iterator[None]:
+        """Observe the monotonic-clock duration of the ``with`` body."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.observe(time.perf_counter() - t0, **labels)
+
+    def _stats(self, vals: List[float]) -> Dict[str, float]:
+        out = {"count": len(vals), "sum": float(sum(vals))}
+        if vals:
+            out["min"] = min(vals)
+            out["max"] = max(vals)
+            out["p50"] = percentile(vals, 50)
+            out["p99"] = percentile(vals, 99)
+        return out
+
+    def snapshot(self):
+        if not self._series:
+            return self._stats([])
+        if list(self._series) == [()]:
+            return self._stats(self._series[()])
+        return {_key_str(k): self._stats(v)
+                for k, v in sorted(self._series.items())}
+
+    def merge(self, other: "Histogram") -> None:
+        for k, v in other._series.items():
+            self._series.setdefault(k, []).extend(v)
+
+
+class MetricsRegistry:
+    """Get-or-create home for every metric of one serving process.
+
+    ``counter`` / ``gauge`` / ``histogram`` return the existing metric
+    when the name is already registered (raising if it was registered as
+    a different type), so independent subsystems sharing a registry
+    converge on the same series without coordination.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get(self, cls, name: str, help: str) -> _Metric:
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name, help)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"requested {cls.kind}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "") -> Histogram:
+        return self._get(Histogram, name, help)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def reset(self) -> None:
+        """Zero every registered series (the metrics stay registered) —
+        the one-call measurement-window restart ``reset_metrics``
+        delegates to.  A metric registered after the last reset is reset
+        too: subsystems can never be silently missed again."""
+        for m in self._metrics.values():
+            m.reset()
+
+    def merge(self, other: "MetricsRegistry") -> None:
+        """Fold ``other`` into this registry: counters add, gauges take
+        the other's value, histograms extend their samples.  Used to
+        combine per-subsystem registries into one exported view."""
+        for name, m in other._metrics.items():
+            mine = self._get(type(m), name, m.help)
+            mine.merge(m)
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Nested plain-data view: ``{kind: {name: value-or-series}}``,
+        JSON-serializable, suitable for ``--metrics-json``."""
+        out: Dict[str, Dict[str, object]] = {
+            "counters": {}, "gauges": {}, "histograms": {}}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            out[m.kind + "s"][name] = m.snapshot()
+        return out

@@ -1,0 +1,110 @@
+"""MX quantization-health statistics over the paged KV pool.
+
+The paper's converter gives every 32-element block one E8M0 scale byte
+and reserves the top encodings for non-finite blocks (SCALE_INF /
+SCALE_NAN — ``core.formats.poison_threshold``).  That byte *is* the
+block's health record: a poisoned block carries a marker at/above the
+threshold, a block whose absmax railed the E8M0 range sits exactly at
+the largest legal exponent (``threshold - 1`` — under a shared scale
+this is also the block-level clip indicator: every element was encoded
+against the format's widest step), and a denormal-tiny block sits at
+encoding 0.  So quantization health over a *serving pool* is a pure
+uint8 classification of the scale leaves — no dequantization, no code
+pages touched — masked to the positions each slot actually wrote
+(``pos < length``), exactly like ``models.health.slot_scale_poison``.
+
+:func:`sample_mx_health` folds that classification into one jit-able
+reduction and returns per-role (kv_key / kv_value) totals; the engine
+samples it every ``obs_interval`` sync windows and publishes the
+``mx.*`` gauges (see README §Observability).  One scalar transfer per
+sample — never per token.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.formats import poison_threshold
+from repro.models.layers import paged_page_size
+
+# per-role stats sample_mx_health returns (and the engine's gauge names
+# derive from): total scale bytes in live positions, poison markers,
+# blocks at the max legal exponent (the shared-scale clip indicator),
+# and blocks at the minimum encoding
+scale_stat_names = ("scale_bytes", "poison", "saturated", "underflow")
+
+
+def _zeros() -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros((), jnp.int32) for k in scale_stat_names}
+
+
+def _leaf_stats(leaf, spec, page_tables, live):
+    """Classify one scale leaf's bytes inside the live positions.
+
+    ``leaf`` — (P, page, n_kv, blocks) scale pool, or layer-stacked
+    (L, P, page, n_kv, blocks); ``live`` (B, n*page) position mask."""
+    thr = jnp.uint8(poison_threshold(spec.mode))
+    g = leaf[:, page_tables] if leaf.ndim == 5 else leaf[page_tables]
+    # per (slot, logical page, position) byte counts over (n_kv, blocks)
+    # — and over layers for stacked leaves
+    axes = (0, -1, -2) if leaf.ndim == 5 else (-1, -2)
+    b = page_tables.shape[0]
+
+    def count(pred) -> jnp.ndarray:
+        per_pos = jnp.sum(pred, axis=axes).reshape(b, -1)
+        return jnp.sum(jnp.where(live, per_pos, 0)).astype(jnp.int32)
+
+    per_pos_bytes = 1
+    for ax in axes:
+        per_pos_bytes *= g.shape[ax]
+    n_bytes = (jnp.sum(live.astype(jnp.int32))
+               * jnp.int32(per_pos_bytes))
+    return {"scale_bytes": n_bytes,
+            "poison": count((g >= thr).astype(jnp.int32)),
+            "saturated": count((g == thr - jnp.uint8(1)
+                                ).astype(jnp.int32)),
+            "underflow": count((g == jnp.uint8(0)).astype(jnp.int32))}
+
+
+def _group_stats(acc, group, page_tables, live, kk, kv):
+    for sk, spec, role in (("ks_pages", kk, "kv_key"),
+                           ("vs_pages", kv, "kv_value")):
+        leaf = group.get(sk)
+        if leaf is None or spec is None:    # fp pool: no scale bytes
+            continue
+        st = _leaf_stats(leaf, spec, page_tables, live)
+        for k in scale_stat_names:
+            acc[role][k] = acc[role][k] + st[k]
+    return acc
+
+
+def sample_mx_health(pool, page_tables, lengths, cfg
+                     ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Per-role scale-byte statistics over every slot's live positions.
+
+    ``pool`` is the engine's page-pool pytree; ``page_tables`` (B, n)
+    int32 physical page ids per slot; ``lengths`` (B,) written
+    positions.  Returns ``{"kv_key": {stat: scalar}, "kv_value": ...}``
+    (int32 device scalars; jit-safe).  Roles quantized as fp in every
+    layer report all-zero stats."""
+    page = paged_page_size(
+        pool["layers"][0] if isinstance(pool["layers"], list)
+        else pool["layers"])
+    b, n = page_tables.shape
+    live = jnp.arange(n * page)[None, :] < lengths[:, None]
+    acc = {"kv_key": _zeros(), "kv_value": _zeros()}
+    lay = pool["layers"]
+    if isinstance(lay, list):               # per-layer PolicyTable pools
+        for i, g in enumerate(lay):
+            c = cfg.layer_cfg(cfg.n_dense_layers + i)
+            acc = _group_stats(acc, g, page_tables, live,
+                               c.mx.kv_key, c.mx.kv_value)
+    else:
+        acc = _group_stats(acc, lay, page_tables, live,
+                           cfg.mx.kv_key, cfg.mx.kv_value)
+    for i, g in enumerate(pool.get("dense_layers", [])):
+        c = cfg.layer_cfg(i)
+        acc = _group_stats(acc, g, page_tables, live,
+                           c.mx.kv_key, c.mx.kv_value)
+    return acc

@@ -48,6 +48,9 @@ from repro.core.mx_weight import params_nbytes
 from repro.dist.sharding import use_rules
 from repro.kernels import backend
 from repro.models import health as H
+from repro.obs.metrics import MetricsRegistry, rate
+from repro.obs.mxhealth import sample_mx_health
+from repro.obs.trace import Tracer
 from repro.models.decoder import sample_tokens
 from repro.models.registry import Model
 from repro.serve import faults as F
@@ -192,7 +195,28 @@ class ContinuousBatchingEngine:
                          for deterministic fault-injection tests and
                          recovery drills.  None (the default) adds no
                          per-step work.
+    ``metrics``        — a shared :class:`~repro.obs.metrics
+                         .MetricsRegistry`; None creates a private one.
+                         Every serving counter (engine, scheduler, block
+                         manager, prefix cache, swap store) lives in it,
+                         and the legacy ``n_*`` attributes are
+                         registry-backed views — equal to the registry
+                         snapshot by construction.
+    ``tracer``         — optional :class:`~repro.obs.trace.Tracer`:
+                         per-request spans (queued / prefill / decode
+                         windows / preempt / restore / quarantine /
+                         retry) plus engine phase spans, recorded from
+                         the stamps the engine already takes — zero
+                         extra host syncs, token-identical on/off
+                         (asserted in tests/test_obs_identity.py).
+    ``obs_interval``   — sample the MX-health gauges (``mx.*``: scale
+                         poison markers, saturation/clip and underflow
+                         rates per KV role) every N sync windows; 0
+                         (default) never samples.  Each sample is one
+                         scalar device reduction + transfer.
     """
+
+    _PHASES = ("prefill", "decode", "sync", "swap")
 
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  page_size: int = 16, max_len: int = 256,
@@ -204,7 +228,10 @@ class ContinuousBatchingEngine:
                  prefix_cache: bool = False,
                  preempt: bool = False,
                  health_checks: bool = True,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 obs_interval: int = 0):
         if not model.supports_paged():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching needs a GQA "
@@ -222,15 +249,26 @@ class ContinuousBatchingEngine:
         self.max_pages_per_slot = pages_needed(max_len, page_size)
         if num_pages is None:
             num_pages = 1 + max_slots * self.max_pages_per_slot
+        # one registry for the whole serving stack: the block manager,
+        # scheduler, prefix cache, and swap store all register their
+        # series here, so registry.reset() restarts every measurement
+        # window at once and snapshot() is the single exported view
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.tracer = tracer
+        self.obs_interval = int(obs_interval)
+        self._mx_health_jit = None       # built lazily on first sample
         self.blocks = BlockManager(num_pages, page_size, max_slots,
-                                   self.max_pages_per_slot)
-        self.prefix = PrefixCache(self.blocks) if prefix_cache else None
+                                   self.max_pages_per_slot,
+                                   metrics=self.metrics)
+        self.prefix = PrefixCache(self.blocks, metrics=self.metrics) \
+            if prefix_cache else None
         self.scheduler = Scheduler(max_slots, self.blocks,
-                                   prefix=self.prefix)
+                                   prefix=self.prefix,
+                                   metrics=self.metrics)
         self.preempt = bool(preempt)
         self.health_checks = bool(health_checks)
         self.faults = faults
-        self.swap_store = HostSwapStore()
+        self.swap_store = HostSwapStore(metrics=self.metrics)
         if faults is not None:
             # alloc_fail fires through the BlockManager's grant hook (only
             # non-trivial ensure() grants consult it — admission's reserved
@@ -253,20 +291,38 @@ class ContinuousBatchingEngine:
         # tables actually changed (admission / page grant / eviction)
         self._bt_version = -1
         self._bt_dev = None
-        self.n_steps = 0          # device decode steps (incl. masked tail)
-        self.n_syncs = 0          # host sync points (fused windows run)
-        self.n_generated = 0
-        # prefix-sharing accounting (bench_serve schema v3; live whether
-        # or not sharing is on, so the f=0 row is directly comparable)
-        self.prefill_tokens_computed = 0   # unpadded positions prefilled
-        self.n_cow_forks = 0
-        self.peak_mapped_pages = 0         # distinct pages in slot tables
-        self.peak_shared_pages = 0         # mapped by >= 2 table entries
-        # preempt-and-swap accounting (bench_serve schema v4)
-        self.n_preemptions = 0
-        self.n_restores = 0
-        # fault-tolerance accounting / state (bench_serve schema v5)
-        self.n_quarantined = 0
+        # engine counters (registry series; the legacy n_* attributes
+        # below are property views over these, so bench rows, snapshot
+        # capture/restore, and the registry snapshot can never diverge)
+        m = self.metrics
+        self._c_steps = m.counter(
+            "engine.steps", "device decode steps (incl. masked tail)")
+        self._c_syncs = m.counter(
+            "engine.syncs", "host sync points (fused windows run)")
+        self._c_generated = m.counter(
+            "engine.generated_tokens", "tokens emitted to requests")
+        self._c_prefill_tokens = m.counter(
+            "engine.prefill_tokens", "unpadded prompt positions prefilled")
+        self._c_cow = m.counter(
+            "engine.cow_forks", "copy-on-write page forks")
+        self._c_preempt = m.counter(
+            "engine.preemptions", "requests swapped out to host")
+        self._c_restores = m.counter(
+            "engine.restores", "swapped requests restored to a slot")
+        self._c_quar = m.counter(
+            "engine.quarantined", "requests parked by the health guard")
+        self._g_peak_mapped = m.gauge(
+            "pages.peak_mapped", "peak distinct pages in slot tables")
+        self._g_peak_shared = m.gauge(
+            "pages.peak_shared", "peak pages mapped by >= 2 entries")
+        # per-phase wall clock (bench_serve schema v2; "swap" is v4) —
+        # one labeled float counter, surfaced as the ``phase`` dict
+        self._c_phase = m.counter(
+            "engine.phase_s", "wall seconds by engine phase")
+        for k in self._PHASES:
+            self._c_phase.inc(0.0, phase=k)
+        self._h_window = m.histogram(
+            "engine.window_steps", "decode steps fused per sync window")
         self.quarantined_in_step: List[Request] = []
         self._step_progress = False     # quarantine/swap counts as progress
         self._stall_abort = threading.Event()
@@ -275,9 +331,6 @@ class ContinuousBatchingEngine:
         # this index in scheduler.finished predate the last reset_metrics
         # (warmup) and are excluded from finished_in_window summaries
         self._metrics_start = 0
-        # per-phase wall clock (bench_serve schema v2; "swap" is v4)
-        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0,
-                      "swap": 0.0}
         cfg = model.cfg
         self.vocab = cfg.vocab
         temperature = float(gen.temperature)
@@ -390,6 +443,108 @@ class ContinuousBatchingEngine:
         self._multi = jax.jit(f["multi"], static_argnums=(7,),
                               donate_argnums=(2,))
 
+    # ------------------------------------- registry-backed counter views
+    # The legacy attribute names stay the API (bench_serve, snapshot
+    # capture/restore, and tests read/write them), but the storage is the
+    # shared MetricsRegistry — "engine counters equal the registry
+    # snapshot" is true by construction.  Setters exist because snapshot
+    # restore legitimately rewinds them.
+    @property
+    def n_steps(self) -> int:
+        return int(self._c_steps.value())
+
+    @n_steps.setter
+    def n_steps(self, v: int) -> None:
+        self._c_steps.set(int(v))
+
+    @property
+    def n_syncs(self) -> int:
+        return int(self._c_syncs.value())
+
+    @n_syncs.setter
+    def n_syncs(self, v: int) -> None:
+        self._c_syncs.set(int(v))
+
+    @property
+    def n_generated(self) -> int:
+        return int(self._c_generated.value())
+
+    @n_generated.setter
+    def n_generated(self, v: int) -> None:
+        self._c_generated.set(int(v))
+
+    @property
+    def prefill_tokens_computed(self) -> int:
+        return int(self._c_prefill_tokens.value())
+
+    @prefill_tokens_computed.setter
+    def prefill_tokens_computed(self, v: int) -> None:
+        self._c_prefill_tokens.set(int(v))
+
+    @property
+    def n_cow_forks(self) -> int:
+        return int(self._c_cow.value())
+
+    @n_cow_forks.setter
+    def n_cow_forks(self, v: int) -> None:
+        self._c_cow.set(int(v))
+
+    @property
+    def n_preemptions(self) -> int:
+        return int(self._c_preempt.value())
+
+    @n_preemptions.setter
+    def n_preemptions(self, v: int) -> None:
+        self._c_preempt.set(int(v))
+
+    @property
+    def n_restores(self) -> int:
+        return int(self._c_restores.value())
+
+    @n_restores.setter
+    def n_restores(self, v: int) -> None:
+        self._c_restores.set(int(v))
+
+    @property
+    def n_quarantined(self) -> int:
+        return int(self._c_quar.value())
+
+    @n_quarantined.setter
+    def n_quarantined(self, v: int) -> None:
+        self._c_quar.set(int(v))
+
+    @property
+    def peak_mapped_pages(self) -> int:
+        return int(self._g_peak_mapped.value())
+
+    @peak_mapped_pages.setter
+    def peak_mapped_pages(self, v: int) -> None:
+        self._g_peak_mapped.set(int(v))
+
+    @property
+    def peak_shared_pages(self) -> int:
+        return int(self._g_peak_shared.value())
+
+    @peak_shared_pages.setter
+    def peak_shared_pages(self, v: int) -> None:
+        self._g_peak_shared.set(int(v))
+
+    @property
+    def phase(self) -> Dict[str, float]:
+        """Per-phase wall clock as a plain dict (bench_serve reads it;
+        the storage is the labeled ``engine.phase_s`` counter)."""
+        return {k: float(self._c_phase.value(phase=k))
+                for k in self._PHASES}
+
+    @phase.setter
+    def phase(self, d: Dict[str, float]) -> None:
+        for k in self._PHASES:
+            self._c_phase.set(float(d.get(k, 0.0)), phase=k)
+
+    def _phase_add(self, k: str, dt: float) -> None:
+        # negative clock skew must not trip the counter's monotone check
+        self._c_phase.inc(max(0.0, dt), phase=k)
+
     # ------------------------------------------------------------ queries
     @property
     def kv_pool_nbytes(self) -> int:
@@ -426,10 +581,8 @@ class ContinuousBatchingEngine:
         return self.prefix.hits / self.prefix.lookups
 
     def _note_page_stats(self) -> None:
-        self.peak_mapped_pages = max(self.peak_mapped_pages,
-                                     self.blocks.mapped_pages)
-        self.peak_shared_pages = max(self.peak_shared_pages,
-                                     self.blocks.shared_pages)
+        self._g_peak_mapped.set_max(self.blocks.mapped_pages)
+        self._g_peak_shared.set_max(self.blocks.shared_pages)
 
     @property
     def finished_in_window(self) -> List[Request]:
@@ -446,23 +599,13 @@ class ContinuousBatchingEngine:
         the accounting restarts.  Requests finished before the reset drop
         out of ``finished_in_window``, so stale hit-rate or TTFT samples
         cannot survive warmup excision."""
-        self.n_steps = self.n_syncs = self.n_generated = 0
-        self.prefill_tokens_computed = 0
-        self.n_cow_forks = 0
-        self.peak_mapped_pages = 0
-        self.peak_shared_pages = 0
-        self.n_preemptions = 0
-        self.n_restores = 0
-        self.n_quarantined = 0
+        # one call restarts every subsystem's series at once (engine,
+        # scheduler, block manager, prefix cache, swap store — they all
+        # live in the shared registry), then the swap store re-anchors
+        # its resident-bytes peak to what is still held
+        self.metrics.reset()
         self._metrics_start = len(self.scheduler.finished)
-        self.scheduler.n_preemptions = 0
-        self.scheduler.n_restores = 0
         self.swap_store.reset_counters()
-        self.phase = {"prefill": 0.0, "decode": 0.0, "sync": 0.0,
-                      "swap": 0.0}
-        if self.prefix is not None:
-            self.prefix.lookups = self.prefix.hits = 0
-            self.prefix.tokens_matched = 0
 
     # ------------------------------------------------------------ requests
     def add_request(self, prompt, max_new_tokens: int, *,
@@ -490,6 +633,14 @@ class ContinuousBatchingEngine:
                                  if arrival_t is None else arrival_t))
         self.scheduler.submit(req)              # validates capacity
         self._next_rid += 1
+        if self.tracer is not None:
+            self.tracer.begin("request", cat="request", rid=req.rid,
+                              ts=req.arrival_t,
+                              prompt_len=int(req.prompt_len),
+                              max_new_tokens=int(max_new_tokens),
+                              priority=int(priority))
+            self.tracer.begin("queued", cat="request", rid=req.rid,
+                              ts=req.arrival_t)
         return req.rid
 
     # ---------------------------------------------------------- the engine
@@ -524,12 +675,26 @@ class ContinuousBatchingEngine:
                 self._swap_out(victim)
         t0 = time.perf_counter()
         admitted = self.scheduler.admit()
-        self.phase["sync"] += time.perf_counter() - t0
+        t_adm = time.perf_counter()
+        self._phase_add("sync", t_adm - t0)
+        if self.tracer is not None:
+            for r in admitted:
+                # re-admissions (restore / retry) re-opened "queued";
+                # a track missing it was reconciled by a snapshot
+                # restore and needs no end here
+                if self.tracer.top(r.rid) == "queued":
+                    self.tracer.end("queued", cat="request",
+                                    rid=r.rid, ts=t_adm)
+                self.tracer.instant(
+                    "admitted", cat="request", rid=r.rid, ts=t_adm,
+                    slot=int(r.slot),
+                    matched_tokens=int(r.matched_tokens),
+                    restored=r.rid in self.swap_store)
         if admitted:
             self._batched_prefill(admitted, emitted)
         t0 = time.perf_counter()
         if not self.scheduler.running:
-            self.phase["sync"] += time.perf_counter() - t0
+            self._phase_add("sync", time.perf_counter() - t0)
             return emitted
         try:
             window = self.scheduler.plan_window(self._lengths,
@@ -540,7 +705,7 @@ class ContinuousBatchingEngine:
             # of crashing — its pages free up and the request re-enters
             # the queue at its original rank
             self._swap_out(self.scheduler.running[e.slot])
-            self.phase["sync"] += time.perf_counter() - t0
+            self._phase_add("sync", time.perf_counter() - t0)
             return emitted
         self._note_page_stats()             # post-grant working set
         snapshot = sorted(self.scheduler.running.items())
@@ -560,8 +725,21 @@ class ContinuousBatchingEngine:
         else:
             bad = np.zeros(toks.shape[1], bool)
         t2 = time.perf_counter()
-        self.n_steps += window
-        self.n_syncs += 1
+        self._c_steps.inc(window)
+        self._c_syncs.inc()
+        self._h_window.observe(window)
+        if self.tracer is not None:
+            # both spans reuse the window's two existing stamps — the
+            # tracer adds no host sync of its own
+            self.tracer.span("decode_window", t0=t1, t1=t2,
+                             steps=int(window), live=len(snapshot))
+            for slot, req in snapshot:
+                self.tracer.span(
+                    "decode", cat="request", rid=req.rid, t0=t1, t1=t2,
+                    steps=int(min(window, rem0[slot])), slot=int(slot))
+        if self.obs_interval \
+                and self.n_syncs % self.obs_interval == 0:
+            self._sample_mx_health()
         for t in range(window):
             for slot, req in snapshot:
                 if bad[slot]:
@@ -573,7 +751,7 @@ class ContinuousBatchingEngine:
                     # token of a fused window shares its drain stamp
                     req.t_tokens.append(t2)
                     emitted.append((req.rid, tok))
-                    self.n_generated += 1
+                    self._c_generated.inc()
         for slot, req in snapshot:
             if bad[slot]:
                 why = ("non-finite logits in decode window"
@@ -588,8 +766,8 @@ class ContinuousBatchingEngine:
                 self._cur_tok[slot] = toks[take - 1, slot]
             if req.done:
                 self._release(req)
-        self.phase["decode"] += t2 - t1
-        self.phase["sync"] += (t1 - t0) + (time.perf_counter() - t2)
+        self._phase_add("decode", t2 - t1)
+        self._phase_add("sync", (t1 - t0) + (time.perf_counter() - t2))
         return emitted
 
     def _consult_step_faults(self) -> None:
@@ -605,6 +783,8 @@ class ContinuousBatchingEngine:
         self.stall_aborted = False
         f = plan.should_fire("stall")
         if f is not None:
+            if self.tracer is not None:
+                self.tracer.instant("fault:stall", stall_s=f.stall_s)
             deadline = time.monotonic() + f.stall_s
             while time.monotonic() < deadline:
                 if self._stall_abort.is_set():
@@ -613,6 +793,8 @@ class ContinuousBatchingEngine:
                     return
                 time.sleep(0.002)
         if plan.should_fire("kernel_fail") is not None:
+            if self.tracer is not None:
+                self.tracer.instant("fault:kernel_fail", op="paged_attn")
             backend.inject_failure("paged_attn")
             self._rejit()
         f = plan.should_fire("page_corrupt")
@@ -630,6 +812,9 @@ class ContinuousBatchingEngine:
                         pos // self.page_size]
                     self.pool = F.poison_pool_pages(
                         self.pool, [pid], offset=pos % self.page_size)
+                    if self.tracer is not None:
+                        self.tracer.instant("fault:page_corrupt",
+                                            page=int(pid), pos=pos)
 
     def _quarantine(self, req: Request, diag: str) -> None:
         """Park a guard-flagged request: free its slot + pages, record the
@@ -649,7 +834,15 @@ class ContinuousBatchingEngine:
         if dead:
             self.pool = F.scrub_pool_pages(self.pool, dead)
         req.t_finished = time.perf_counter()
-        self.n_quarantined += 1
+        self._c_quar.inc()
+        if self.tracer is not None:
+            # leave only the per-request root open: the front end either
+            # retries (re-opening "queued") or closes the track with a
+            # terminal status once the retry budget is spent
+            self.tracer.unwind(req.rid, ts=req.t_finished, keep=1)
+            self.tracer.instant("quarantine", cat="request",
+                                rid=req.rid, ts=req.t_finished,
+                                error=diag)
         self.quarantined_in_step.append(req)
         self._step_progress = True
         self._cur_tok[slot] = 0
@@ -662,6 +855,17 @@ class ContinuousBatchingEngine:
         keeps its rid, so its per-slot PRNG key re-derives identically
         and a healthy replay is token-identical at any temperature."""
         self.scheduler.requeue(req)
+        if self.tracer is not None:
+            if not self.tracer.open_spans(req.rid):
+                # track was closed by a snapshot-restore reconciliation;
+                # re-open the per-request root for the fresh attempt
+                self.tracer.begin("request", cat="request", rid=req.rid,
+                                  prompt_len=int(req.prompt_len),
+                                  max_new_tokens=int(req.max_new_tokens),
+                                  priority=int(req.priority))
+            self.tracer.instant("retry", cat="request", rid=req.rid,
+                                attempt=int(req.n_retries))
+            self.tracer.begin("queued", cat="request", rid=req.rid)
 
     def resubmit(self, req: Request) -> None:
         """Re-enter a request the engine no longer tracks (post-snapshot
@@ -677,6 +881,16 @@ class ContinuousBatchingEngine:
         req.cow_pending = 0
         req.swap_pages = 0
         self.scheduler.submit(req)
+        if self.tracer is not None:
+            if not self.tracer.open_spans(req.rid):
+                self.tracer.begin("request", cat="request", rid=req.rid,
+                                  prompt_len=int(req.prompt_len),
+                                  max_new_tokens=int(req.max_new_tokens),
+                                  priority=int(req.priority))
+            else:
+                self.tracer.unwind(req.rid, keep=1)
+            self.tracer.instant("resubmit", cat="request", rid=req.rid)
+            self.tracer.begin("queued", cat="request", rid=req.rid)
 
     def abort_stall(self) -> None:
         """Cut a faulted ``stall`` sleep short (watchdog thread-safe)."""
@@ -731,6 +945,13 @@ class ContinuousBatchingEngine:
         t0 = time.perf_counter()
         cold = [r for r in admitted if r.matched_tokens == 0]
         hits = [r for r in admitted if r.matched_tokens > 0]
+        if self.tracer is not None:
+            # an open pair, not a retroactive span: a first-decode page
+            # grant can swap a request out *inside* _finish_prefill, and
+            # that swap_out span must nest within the batch span for the
+            # engine track's clock to stay monotone
+            self.tracer.begin("prefill_batch", ts=t0,
+                              cold=len(cold), hits=len(hits))
         groups: Dict[int, List[Request]] = {}
         for req in cold:
             lp = -(-req.prompt_len // self.prefill_bucket) \
@@ -753,15 +974,20 @@ class ContinuousBatchingEngine:
             # bucket-padded prompt's excess pages scatter harmlessly
             npr = lp // self.page_size
             page_ids = self.blocks.tables[slots, :npr]
+            tb = time.perf_counter()
             first, keys, self.pool, bad = self._prefill_scatter(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 fresh, self.pool, jnp.asarray(page_ids))
-            self._finish_prefill(reqs, slots, keys, first, emitted, bad)
+            self._finish_prefill(reqs, slots, keys, first, emitted, bad,
+                                 t0=tb)
         if hits:
             self._cow_forks(hits)
             self._hit_prefill(hits, emitted)
         self._note_page_stats()
-        self.phase["prefill"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._phase_add("prefill", t1 - t0)
+        if self.tracer is not None:
+            self.tracer.end("prefill_batch", ts=t1)
 
     def _cow_forks(self, hits: List[Request]) -> None:
         """Fork every shared page a hit's suffix prefill will write (only
@@ -779,7 +1005,7 @@ class ContinuousBatchingEngine:
                 dst.append(pair[1])
             r.cow_pending = 0
         if src:
-            self.n_cow_forks += len(src)
+            self._c_cow.inc(len(src))
             self.pool = self._copy_pages(
                 self.pool, jnp.asarray(src, jnp.int32),
                 jnp.asarray(dst, jnp.int32))
@@ -807,11 +1033,13 @@ class ContinuousBatchingEngine:
                 lens[i] = r.prompt_len
             fresh = jax.vmap(lambda r: jax.random.fold_in(self._key, r))(
                 jnp.asarray([r.rid for r in reqs], jnp.uint32))
+            tb = time.perf_counter()
             first, keys, self.pool, bad = self._suffix_prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(starts),
                 jnp.asarray(lens), fresh, self.pool,
                 bt[jnp.asarray(slots)])
-            self._finish_prefill(reqs, slots, keys, first, emitted, bad)
+            self._finish_prefill(reqs, slots, keys, first, emitted, bad,
+                                 t0=tb)
 
     # ------------------------------------------------- preempt-and-swap
     def _swap_out(self, req: Request) -> None:
@@ -830,12 +1058,20 @@ class ContinuousBatchingEngine:
             key=np.asarray(self._slot_keys[slot]), nbytes=nbytes))
         req.swap_pages = len(ids)
         self.scheduler.preempt(req)
-        self.n_preemptions += 1
+        self._c_preempt.inc()
         self._step_progress = True
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0
         self._remaining[slot] = 0
-        self.phase["swap"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._phase_add("swap", t1 - t0)
+        if self.tracer is not None:
+            self.tracer.span("swap_out", t0=t0, t1=t1,
+                             pages=len(ids), nbytes=nbytes)
+            self.tracer.instant("preempt", cat="request", rid=req.rid,
+                                ts=t1, pages=len(ids))
+            self.tracer.begin("queued", cat="request", rid=req.rid,
+                              ts=t1)
 
     def _restore_swapped(self, reqs: List[Request]) -> None:
         """Re-admission of preempted requests: scatter their swap-store
@@ -868,24 +1104,40 @@ class ContinuousBatchingEngine:
             self._slot_keys = self._slot_keys.at[slot].set(
                 jnp.asarray(data.key))
             r.swap_pages = 0
-            self.n_restores += 1
+            self._c_restores.inc()
         self._note_page_stats()
-        self.phase["swap"] += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self._phase_add("swap", t1 - t0)
+        if self.tracer is not None:
+            self.tracer.span("swap_restore", t0=t0, t1=t1,
+                             requests=len(reqs), pages=len(ids_all))
+            for r, data in zip(reqs, datas):
+                self.tracer.span("restore", cat="request", rid=r.rid,
+                                 t0=t0, t1=t1, pages=data.n_pages,
+                                 slot=int(r.slot))
 
     def _finish_prefill(self, reqs: List[Request], slots, keys, first,
                         emitted: List[Tuple[int, int]],
-                        bad=None) -> None:
+                        bad=None, t0: Optional[float] = None) -> None:
         """Common admission epilogue: install per-slot keys, emit each
         request's first token, account computed prefill positions, and
         grant the first decode write's page.  A request whose prefill
         health flag (``bad``) is set — or whose ``prefill_nan`` fault
         fires here — is quarantined instead of emitting; a failed
         first-decode page grant (alloc_fail) swaps the request out to
-        resume when pages free up."""
+        resume when pages free up.  ``t0`` is the bucket's pre-dispatch
+        stamp — with a tracer on, each request gets a complete
+        "prefill" span from it to the bucket's sync point."""
         self._slot_keys = self._slot_keys.at[slots].set(keys)
         first = np.asarray(first)
         bad = None if bad is None else np.asarray(bad).copy()
         now = time.perf_counter()
+        if self.tracer is not None:
+            for r in reqs:
+                self.tracer.span(
+                    "prefill", cat="request", rid=r.rid, t0=t0, t1=now,
+                    tokens=int(r.prompt_len - r.prefill_start),
+                    suffix=bool(r.prefill_start))
         for i, r in enumerate(reqs):
             slot = r.slot
             if self.faults is not None and \
@@ -900,8 +1152,8 @@ class ContinuousBatchingEngine:
                 if bad is not None:
                     bad[i] = True
             if bad is not None and bad[i]:
-                self.prefill_tokens_computed += \
-                    r.prompt_len - r.prefill_start
+                self._c_prefill_tokens.inc(
+                    r.prompt_len - r.prefill_start)
                 self._quarantine(
                     r, "numeric-health guard: non-finite logits or MX "
                        "poison marker at prefill")
@@ -910,7 +1162,7 @@ class ContinuousBatchingEngine:
             self._cur_tok[slot] = tok
             self._lengths[slot] = r.prompt_len
             self._remaining[slot] = r.max_new_tokens - 1
-            self.prefill_tokens_computed += r.prompt_len - r.prefill_start
+            self._c_prefill_tokens.inc(r.prompt_len - r.prefill_start)
             if self.prefix is not None:
                 # publish the prompt's full pages (an existing trie chain
                 # dedupes; new nodes pin this slot's private pages)
@@ -919,7 +1171,7 @@ class ContinuousBatchingEngine:
                     r.prompt, self.blocks.slot_page_ids(slot)[:n_full])
             r.out.append(tok)
             r.t_tokens.append(now)      # first-token (TTFT) stamp
-            self.n_generated += 1
+            self._c_generated.inc()
             emitted.append((r.rid, tok))
             if r.done:
                 self._release(r)
@@ -944,6 +1196,63 @@ class ContinuousBatchingEngine:
                 seq, self.blocks.slot_page_ids(slot)[:n_full])
         self.scheduler.evict(req)
         req.t_finished = time.perf_counter()
+        if self.tracer is not None:
+            self.tracer.unwind(req.rid, ts=req.t_finished, keep=1)
+            self.tracer.close_track(req.rid, ts=req.t_finished,
+                                    status="finished",
+                                    tokens=len(req.out))
         self._cur_tok[slot] = 0
         self._lengths[slot] = 0
         self._remaining[slot] = 0
+
+    # --------------------------------------------------- MX-health gauges
+    def _sample_mx_health(self) -> None:
+        """One device reduction over the live KV pages -> ``mx.*`` gauges
+        per KV role: scale bytes scanned, poison-marker count, and the
+        shared-scale saturation (== block clip under a shared scale) and
+        underflow rates.  Jitted once; the tables/lengths upload rides
+        the existing device copies."""
+        if self._mx_health_jit is None:
+            cfg = self.model.cfg
+            self._mx_health_jit = jax.jit(
+                lambda pool, bt, lens: sample_mx_health(
+                    pool, bt, lens, cfg))
+        stats = self._mx_health_jit(self.pool, self._device_tables(),
+                                    jnp.asarray(self._lengths))
+        stats = jax.tree_util.tree_map(int, stats)
+        m = self.metrics
+        for role, st in stats.items():
+            nb = st["scale_bytes"]
+            m.gauge("mx.scale_bytes",
+                    "E8M0 scale bytes in live KV pages"
+                    ).set(nb, role=role)
+            m.gauge("mx.poison_markers",
+                    "scale bytes at/above the mode's poison threshold"
+                    ).set(st["poison"], role=role)
+            m.gauge("mx.saturation_rate",
+                    "fraction of blocks at the max legal shared scale"
+                    ).set(rate(st["saturated"], nb), role=role)
+            m.gauge("mx.clip_rate",
+                    "fraction of blocks clipping elements (== the "
+                    "saturation rate: a shared scale at top-of-range "
+                    "is exactly the block-clip indicator)"
+                    ).set(rate(st["saturated"], nb), role=role)
+            m.gauge("mx.underflow_rate",
+                    "fraction of blocks with a zero shared scale"
+                    ).set(rate(st["underflow"], nb), role=role)
+
+    def finalize_trace(self) -> None:
+        """Close every request track still open (queued, swapped-out, or
+        failed-without-retry requests at shutdown) so the exported trace
+        validates: failed requests close with status "failed", the rest
+        "aborted".  Idempotent; the launcher calls it before writing the
+        trace files."""
+        if self.tracer is None:
+            return
+        failed = {r.rid for r in self.scheduler.failed}
+        for rid in self.tracer.open_tracks():
+            if rid is None:
+                continue
+            self.tracer.close_track(
+                rid, status="failed" if rid in failed else "aborted")
+        self.tracer.close_track(None)

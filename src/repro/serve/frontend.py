@@ -39,6 +39,8 @@ from typing import AsyncIterator, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import percentile as percentile  # noqa: F401
 from repro.serve import snapshot as snapshot_mod
 from repro.serve.engine import ContinuousBatchingEngine
 from repro.serve.scheduler import Request, RequestState
@@ -59,17 +61,10 @@ class RetriesExhausted(QuarantinedError):
     """A quarantined request failed every attempt of its retry budget."""
 
 
-def percentile(samples: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile (no interpolation): the ceil(q/100 * n)-th
-    smallest sample.  Exactly reproducible from the raw records by the
-    dependency-free bench validator — that is the point."""
-    if not samples:
-        raise ValueError("percentile of an empty sample set")
-    if not 0 < q <= 100:
-        raise ValueError(f"q must be in (0, 100], got {q}")
-    s = sorted(samples)
-    rank = -(-(q / 100.0) * len(s) // 1)        # ceil without math import
-    return s[int(rank) - 1]
+# ``percentile`` is re-exported above from repro.obs.metrics — the single
+# nearest-rank implementation the launcher, bench, and registry share
+# (this module used to carry its own copy, one of three that disagreed
+# on empty/singleton windows).
 
 
 def latency_summary(finished: Sequence[Request]) -> Dict[str, float]:
@@ -226,11 +221,72 @@ class AsyncServer:
         self._snap = None                   # last EngineSnapshot
         self._snap_pushed: Dict[int, int] = {}
         self._steps_since_snap = 0
-        self.n_accepted = 0
-        self.n_rejected = 0
-        self.n_retried = 0                  # retry attempts dispatched
-        self.n_failed = 0                   # terminal quarantines
-        self.n_recoveries = 0               # watchdog snapshot restores
+        # the server keeps its *own* registry: engine.reset_metrics()
+        # restarts the engine's measurement window without zeroing the
+        # server's accept/reject/retry history (exactly the pre-registry
+        # behavior); obs_snapshot() exports both side by side
+        self.metrics = MetricsRegistry()
+        self._c_accepted = self.metrics.counter(
+            "server.accepted", "submissions applied to the scheduler")
+        self._c_rejected = self.metrics.counter(
+            "server.rejected", "admission='reject' turn-aways")
+        self._c_retried = self.metrics.counter(
+            "server.retried", "retry attempts dispatched")
+        self._c_failed = self.metrics.counter(
+            "server.failed", "terminal quarantines")
+        self._c_recoveries = self.metrics.counter(
+            "server.recoveries", "watchdog snapshot restores")
+
+    # ------------------------------------ registry-backed counter views
+    @property
+    def n_accepted(self) -> int:
+        return int(self._c_accepted.value())
+
+    @n_accepted.setter
+    def n_accepted(self, v: int) -> None:
+        self._c_accepted.set(int(v))
+
+    @property
+    def n_rejected(self) -> int:
+        return int(self._c_rejected.value())
+
+    @n_rejected.setter
+    def n_rejected(self, v: int) -> None:
+        self._c_rejected.set(int(v))
+
+    @property
+    def n_retried(self) -> int:
+        return int(self._c_retried.value())
+
+    @n_retried.setter
+    def n_retried(self, v: int) -> None:
+        self._c_retried.set(int(v))
+
+    @property
+    def n_failed(self) -> int:
+        return int(self._c_failed.value())
+
+    @n_failed.setter
+    def n_failed(self, v: int) -> None:
+        self._c_failed.set(int(v))
+
+    @property
+    def n_recoveries(self) -> int:
+        return int(self._c_recoveries.value())
+
+    @n_recoveries.setter
+    def n_recoveries(self, v: int) -> None:
+        self._c_recoveries.set(int(v))
+
+    def obs_snapshot(self) -> Dict[str, object]:
+        """One structured view of the whole serving process: the server's
+        own counters, the engine registry (every engine / scheduler /
+        paging / prefix / swap / mx series), and the latency summary over
+        the current measurement window.  JSON-serializable — the
+        launcher's ``--metrics-json`` writes exactly this."""
+        return {"server": self.metrics.snapshot(),
+                "engine": self.engine.metrics.snapshot(),
+                "latency": latency_summary(self.engine.finished_in_window)}
 
     # ------------------------------------------------------------ lifecycle
     async def __aenter__(self) -> "AsyncServer":
@@ -311,7 +367,7 @@ class AsyncServer:
                 # token-identically — skip it on delivery
                 self._skip[req.rid] = stream.n_pushed
             self.engine.retry_request(req)
-            self.n_retried += 1
+            self._c_retried.inc()
         while self._pending:
             p = self._pending.popleft()
             if p.future.cancelled():
@@ -319,7 +375,7 @@ class AsyncServer:
             if self.admission == "reject" \
                     and not self.engine.scheduler.can_admit_now(
                         p.prompt, p.max_new_tokens):
-                self.n_rejected += 1
+                self._c_rejected.inc()
                 p.future.set_exception(RejectedError(
                     "cannot start immediately: admission='reject'"))
                 continue
@@ -334,7 +390,7 @@ class AsyncServer:
                        if r.rid == rid)
             stream = RequestStream(rid, req)
             self._streams[rid] = stream
-            self.n_accepted += 1
+            self._c_accepted.inc()
             p.future.set_result(stream)
 
     async def _loop(self) -> None:
@@ -424,7 +480,12 @@ class AsyncServer:
                 loop.call_later(self._backoff_delay(req),
                                 self._requeue_later, req)
                 continue
-            self.n_failed += 1
+            self._c_failed.inc()
+            tr = self.engine.tracer
+            if tr is not None and tr.open_spans(req.rid):
+                # the engine unwound the track to its root at quarantine
+                # time; a spent retry budget is the terminal close
+                tr.close_track(req.rid, status="failed")
             if stream is None:
                 continue
             if self.retries:
@@ -458,6 +519,21 @@ class AsyncServer:
         assert self._snap is not None, "watchdog recovery needs a snapshot"
         snapshot_mod.restore(self.engine, self._snap)
         self.engine._stall_abort.clear()    # no stale abort latch
+        tr = self.engine.tracer
+        if tr is not None:
+            # reconcile the rolled-back request tracks *before* replay:
+            # whatever spans opened since the snapshot no longer
+            # happened — unwind each live track to its root, and re-open
+            # "queued" for requests the restore put back in the queues
+            tr.instant("snapshot_restore",
+                       recoveries=self.n_recoveries + 1)
+            for req, _ in self._snap.requests:
+                if not tr.open_spans(req.rid):
+                    continue
+                tr.unwind(req.rid, keep=1)
+                if req.state in (RequestState.WAITING,
+                                 RequestState.SWAPPED):
+                    tr.begin("queued", cat="request", rid=req.rid)
         known = {r.rid for r, _ in self._snap.requests}
         for rid, stream in list(self._streams.items()):
             if rid in known:
@@ -469,4 +545,4 @@ class AsyncServer:
                 # stream already got
                 self.engine.resubmit(stream.request)
                 self._skip[rid] = stream.n_pushed
-        self.n_recoveries += 1
+        self._c_recoveries.inc()

@@ -27,6 +27,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 TRASH_PAGE = 0
 
 
@@ -113,9 +115,21 @@ class BlockManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int,
+                 metrics: Optional[MetricsRegistry] = None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        # page-flow counters (pages.*) — a standalone manager gets its
+        # own registry, the engine shares its registry in
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._c_alloc = self.metrics.counter(
+            "pages.allocated", "fresh private pages granted")
+        self._c_shared = self.metrics.counter(
+            "pages.shared_mapped", "read-only prefix mappings added")
+        self._c_forks = self.metrics.counter(
+            "pages.cow_forks", "copy-on-write page forks")
+        self._c_released = self.metrics.counter(
+            "pages.released", "block-table entries released")
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
@@ -206,6 +220,7 @@ class BlockManager:
             return False
         if n:
             self.version += 1
+            self._c_alloc.inc(n)
         for _ in range(n):
             pg = self._free.pop()
             self.tables[slot, len(owned)] = pg
@@ -232,6 +247,7 @@ class BlockManager:
                     f"map_shared: page {pg} is "
                     f"{'the trash page' if pg == TRASH_PAGE else 'dead'}")
         self.version += 1
+        self._c_shared.inc(len(pages))
         for pg in pages:
             self.tables[slot, len(owned)] = pg
             owned.append(pg)
@@ -253,6 +269,7 @@ class BlockManager:
         src = self._owned[slot][idx]
         dst = self._free.pop()
         self.version += 1
+        self._c_forks.inc()
         self.tables[slot, idx] = dst
         self._owned[slot][idx] = dst
         self._shared[slot][idx] = False
@@ -305,6 +322,7 @@ class BlockManager:
         stay live; the rest return to the free list."""
         if self._owned[slot]:
             self.version += 1
+            self._c_released.inc(len(self._owned[slot]))
         for pg in reversed(self._owned[slot]):
             self._table_refs[pg] -= 1
             self._return_if_dead(pg)

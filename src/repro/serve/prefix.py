@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.paging import BlockManager
 
 
@@ -54,7 +55,8 @@ class PrefixCache:
     """
 
     def __init__(self, blocks: BlockManager,
-                 max_pages: Optional[int] = None):
+                 max_pages: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.blocks = blocks
         self.page_size = blocks.page_size
         self.max_pages = max_pages
@@ -62,10 +64,40 @@ class PrefixCache:
         self._n_nodes = 0
         self._tick = 0
         # admission stats (recorded once per admitted request, not per
-        # speculative lookup — see Scheduler.admit)
-        self.lookups = 0
-        self.hits = 0
-        self.tokens_matched = 0
+        # speculative lookup — see Scheduler.admit); registry-backed so
+        # reset_metrics / snapshot export see them with everything else
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._c_lookups = self.metrics.counter(
+            "prefix.lookups", "admissions probing the trie")
+        self._c_hits = self.metrics.counter(
+            "prefix.hits", "admissions matching a non-empty prefix")
+        self._c_tokens = self.metrics.counter(
+            "prefix.tokens_matched", "prompt tokens served from cache")
+
+    # registry-backed stat views (setters: snapshot restore rewinds)
+    @property
+    def lookups(self) -> int:
+        return int(self._c_lookups.value())
+
+    @lookups.setter
+    def lookups(self, v: int) -> None:
+        self._c_lookups.set(int(v))
+
+    @property
+    def hits(self) -> int:
+        return int(self._c_hits.value())
+
+    @hits.setter
+    def hits(self, v: int) -> None:
+        self._c_hits.set(int(v))
+
+    @property
+    def tokens_matched(self) -> int:
+        return int(self._c_tokens.value())
+
+    @tokens_matched.setter
+    def tokens_matched(self, v: int) -> None:
+        self._c_tokens.set(int(v))
 
     # ------------------------------------------------------------- queries
     @property
@@ -100,10 +132,10 @@ class PrefixCache:
 
     def record(self, matched_tokens: int) -> None:
         """Count one admission against the hit-rate stats."""
-        self.lookups += 1
+        self._c_lookups.inc()
         if matched_tokens > 0:
-            self.hits += 1
-            self.tokens_matched += matched_tokens
+            self._c_hits.inc()
+            self._c_tokens.inc(matched_tokens)
 
     # ----------------------------------------------------------- mutation
     def insert(self, tokens: Sequence[int], page_ids: Sequence[int]) -> int:

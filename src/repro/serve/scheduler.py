@@ -33,6 +33,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.paging import BlockManager, PageGrantError, pages_needed
 from repro.serve.prefix import PrefixCache
 
@@ -143,7 +144,8 @@ class Scheduler:
     uses the default class)."""
 
     def __init__(self, max_slots: int, blocks: BlockManager,
-                 prefix: Optional[PrefixCache] = None):
+                 prefix: Optional[PrefixCache] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.max_slots = max_slots
         self.blocks = blocks
         self.prefix = prefix
@@ -153,8 +155,29 @@ class Scheduler:
         self.failed: List[Request] = []         # quarantined (FAILED)
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._seq = 0
-        self.n_preemptions = 0
-        self.n_restores = 0
+        # registry-backed counters (standalone scheduler: own registry)
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._c_preempt = self.metrics.counter(
+            "sched.preemptions", "preempt() calls")
+        self._c_restores = self.metrics.counter(
+            "sched.restores", "SWAPPED re-admissions")
+
+    # registry-backed counter views (setters: snapshot restore rewinds)
+    @property
+    def n_preemptions(self) -> int:
+        return int(self._c_preempt.value())
+
+    @n_preemptions.setter
+    def n_preemptions(self, v: int) -> None:
+        self._c_preempt.set(int(v))
+
+    @property
+    def n_restores(self) -> int:
+        return int(self._c_restores.value())
+
+    @n_restores.setter
+    def n_restores(self, v: int) -> None:
+        self._c_restores.set(int(v))
 
     # ------------------------------------------------------------- queries
     @property
@@ -243,7 +266,7 @@ class Scheduler:
             self._free_slots.pop()
             if restoring:
                 priv = req.swap_pages
-                self.n_restores += 1
+                self._c_restores.inc()
             else:
                 priv = pages_needed(req.prompt_len, self.blocks.page_size) \
                     - len(pages)
@@ -331,7 +354,7 @@ class Scheduler:
         req.cow_pending = 0
         req.state = RequestState.SWAPPED
         req.n_preemptions += 1
-        self.n_preemptions += 1
+        self._c_preempt.inc()
         bisect.insort(self.waiting, req, key=_order)
 
     # ------------------------------------------------- decode-window planning

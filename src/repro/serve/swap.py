@@ -23,10 +23,12 @@ covers fp pools, uniform MX policies, and per-layer ``PolicyTable`` mixes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
 
 
 def _page_axis(leaf) -> int:
@@ -94,14 +96,50 @@ class HostSwapStore:
     ``reset_counters`` zeroes the traffic counters for a steady-state
     measurement window without touching resident entries — a request
     swapped out before the window must still restore correctly after it.
+
+    The counters live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    (``swap.bytes_out`` / ``swap.bytes_in`` counters and the
+    ``swap.peak_resident_bytes`` gauge); the ``bytes_out`` /
+    ``bytes_in`` / ``peak_resident_bytes`` attributes are registry-backed
+    views (writable — snapshot restore rewinds them).  A standalone
+    store creates its own registry; the engine shares its registry in.
     """
 
-    def __init__(self):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self._entries: Dict[int, SwapData] = {}
-        self.bytes_out = 0          # device -> host (swap-out) traffic
-        self.bytes_in = 0           # host -> device (restore) traffic
-        self.peak_resident_bytes = 0
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._c_out = self.metrics.counter(
+            "swap.bytes_out", "device -> host swap-out traffic")
+        self._c_in = self.metrics.counter(
+            "swap.bytes_in", "host -> device restore traffic")
+        self._g_peak = self.metrics.gauge(
+            "swap.peak_resident_bytes", "peak host-resident swap bytes")
         self.faults = None          # serve.faults.FaultPlan (swap_corrupt)
+
+    # registry-backed counter views (setters: snapshot restore rewinds)
+    @property
+    def bytes_out(self) -> int:
+        return int(self._c_out.value())
+
+    @bytes_out.setter
+    def bytes_out(self, v: int) -> None:
+        self._c_out.set(int(v))
+
+    @property
+    def bytes_in(self) -> int:
+        return int(self._c_in.value())
+
+    @bytes_in.setter
+    def bytes_in(self, v: int) -> None:
+        self._c_in.set(int(v))
+
+    @property
+    def peak_resident_bytes(self) -> int:
+        return int(self._g_peak.value())
+
+    @peak_resident_bytes.setter
+    def peak_resident_bytes(self, v: int) -> None:
+        self._g_peak.set(int(v))
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -125,17 +163,22 @@ class HostSwapStore:
             from repro.serve.faults import corrupt_swap_payload
             corrupt_swap_payload(data.pages)
         self._entries[rid] = data
-        self.bytes_out += data.nbytes
-        self.peak_resident_bytes = max(self.peak_resident_bytes,
-                                       self.resident_bytes)
+        self._c_out.inc(data.nbytes)
+        self._g_peak.set_max(self.resident_bytes)
 
     def pop(self, rid: int) -> SwapData:
         if rid not in self._entries:
             raise KeyError(f"swap store: request {rid} is not resident")
         data = self._entries.pop(rid)
-        self.bytes_in += data.nbytes
+        self._c_in.inc(data.nbytes)
         return data
 
     def reset_counters(self) -> None:
-        self.bytes_out = self.bytes_in = 0
-        self.peak_resident_bytes = self.resident_bytes
+        """Zero the traffic counters; the resident peak re-anchors to
+        the *current* resident bytes (entries survive a measurement
+        reset, so the peak can never report below what is still
+        held).  ``engine.reset_metrics`` calls this after the registry
+        reset for exactly that re-anchor."""
+        self._c_out.set(0)
+        self._c_in.set(0)
+        self._g_peak.set(self.resident_bytes)
